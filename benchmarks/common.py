@@ -1,0 +1,112 @@
+"""Shared benchmark scaffolding.
+
+The paper's image datasets aren't available offline, so every benchmark runs
+the paper's *protocol* over generated streams (DESIGN.md §9): a drifting
+Markov token stream + a small decoder LM (the Covertype/MLP-scale analogue).
+All comparisons are relative (agm/tagm against a named baseline), exactly as
+in the paper's tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import FerretConfig, FerretTrainer, sequential_oracle_run
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.ocl.algorithms import OCLConfig
+from repro.ocl.baselines import AdmissionPolicy, make_admission_mask
+from repro.ocl.streams import StreamConfig, make_stream
+
+VOCAB = 32
+SEQ = 16
+BATCH = 2
+STREAM_LEN = 240
+
+
+def bench_model(num_layers: int = 4) -> ModelConfig:
+    return ModelConfig(
+        name="bench-lm",
+        family="dense",
+        num_layers=num_layers,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=VOCAB,
+        compute_dtype="float32",
+    )
+
+
+def bench_stream(kind: str = "drift", length: int = STREAM_LEN, seed: int = 0) -> Dict:
+    return make_stream(
+        StreamConfig(
+            kind=kind, modality="tokens", length=length, batch=BATCH,
+            vocab=VOCAB, seq=SEQ, seed=seed, drift_rate=0.004, num_tasks=4,
+        )
+    )
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    return T.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def run_ferret(
+    cfg: ModelConfig,
+    params,
+    stream,
+    budget: float = math.inf,
+    method: str = "iter_fisher",
+    eta_lambda: float = 1e-4,
+    ocl: Optional[OCLConfig] = None,
+    lr: float = 5e-3,
+    max_workers: int = 3,
+    max_stages: int = 4,
+):
+    fc = FerretConfig(
+        budget_bytes=budget,
+        lr=lr,
+        compensation=CompensationConfig(method=method, eta_lambda=eta_lambda),
+        ocl=ocl or OCLConfig(),
+        max_workers=max_workers,
+        max_stages=max_stages,
+    )
+    tr = FerretTrainer(cfg, fc, batch=BATCH, seq=SEQ)
+    res = tr.run_stream(params, stream)
+    return tr, res
+
+
+def run_admission_baseline(
+    cfg: ModelConfig,
+    params,
+    stream,
+    policy: AdmissionPolicy,
+    slowdown: float = 3.0,
+    lr: float = 5e-3,
+):
+    """Skip-style baseline: t_train = slowdown · t_d ⇒ items get dropped.
+
+    Memory = one model copy (+ buffer items for buffered policies)."""
+    R = next(iter(stream.values())).shape[0]
+    trace = make_admission_mask(policy, R, t_d=1.0, t_train=slowdown)
+    out = sequential_oracle_run(cfg, params, stream, lr=lr, trained_mask=trace.admitted)
+    mem = model_bytes(cfg) * 1.0
+    if policy.method in ("random_n", "last_n", "camel"):
+        mem += policy.buffer * BATCH * SEQ * 8  # buffered raw items
+    return {
+        "oacc": float(out["acc"].mean()),
+        "acc": out["acc"],
+        "memory": mem,
+        "admitted": float(trace.admitted.mean()),
+        "delays": trace.delays,
+    }
+
+
+def model_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * 4.0

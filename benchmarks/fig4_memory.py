@@ -1,0 +1,50 @@
+"""Paper Fig. 4/10: consumed memory across stream-learning methods.
+
+Shows Ferret's planned footprint spanning the M-/M/M+ range while the skip
+baselines sit at a fixed point (model + buffer).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+from benchmarks import common as C
+from repro.core.planner import default_data_interval, plan
+from repro.core.profiler import analytic_profile
+from repro.ocl.baselines import AdmissionPolicy
+
+
+def run(verbose: bool = True) -> Dict[str, float]:
+    cfg = C.bench_model()
+    profile = analytic_profile(cfg, C.BATCH, C.SEQ)
+    t_d = default_data_interval(profile)
+    mem: Dict[str, float] = {}
+    m_plus = plan(profile, t_d, budget=math.inf, max_workers=4)
+    mem["Ferret_M+"] = m_plus.memory
+    for tag, frac in [("Ferret_M", 0.4), ("Ferret_M-", 0.15)]:
+        planned = plan(profile, t_d, budget=m_plus.memory * frac, max_workers=4).memory
+        mem[tag] = max(planned, C.model_bytes(cfg))  # floor: one live model
+    base = C.model_bytes(cfg)
+    mem["Oracle"] = base
+    mem["1-Skip"] = base
+    for pol in ("Random-N", "Last-N", "Camel"):
+        mem[pol] = base + 16 * C.BATCH * C.SEQ * 8  # + B buffered items
+    if verbose:
+        print("\nFig. 4 (memory footprint):")
+        for k, v in sorted(mem.items(), key=lambda kv: kv[1]):
+            print(f"  {k:10s} {v/2**20:9.2f} MiB")
+    return mem
+
+
+def main():
+    t0 = time.time()
+    mem = run()
+    dt = (time.time() - t0) * 1e6
+    ratio = mem["Ferret_M+"] / mem["Ferret_M-"]
+    print(f"fig4_memory,{dt:.0f},mplus_over_mminus={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

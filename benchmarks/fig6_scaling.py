@@ -1,0 +1,51 @@
+"""Paper Fig. 6/11: adaptation rate vs memory budget (planner scaling).
+
+Sweeps the budget from minimal to unconstrained and reports the planner's
+(R_F, M_F) frontier — Ferret should scale smoothly (paper: competing
+strategies cannot exploit intermediate budgets)."""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Tuple
+
+from benchmarks import common as C
+from repro.core.planner import default_data_interval, plan
+from repro.core.profiler import analytic_profile
+
+FRACS = [0.05, 0.1, 0.2, 0.35, 0.5, 0.7, 1.0]
+
+
+def run(verbose: bool = True) -> List[Tuple[float, float, float]]:
+    cfg = C.bench_model(num_layers=8)
+    profile = analytic_profile(cfg, C.BATCH, C.SEQ)
+    t_d = default_data_interval(profile)
+    m_plus = plan(profile, t_d, budget=math.inf, max_workers=6)
+    rows = []
+    for f in FRACS:
+        p = plan(profile, t_d, budget=m_plus.memory * f, max_workers=6)
+        rows.append((f, p.memory, p.rate))
+    if verbose:
+        print("\nFig. 6 (R_F vs M_F across budgets):")
+        print(f"  {'budget':>8s} {'M_F(MiB)':>10s} {'R_F':>10s} {'P':>3s} {'N':>3s}")
+        for f in FRACS:
+            p = plan(profile, t_d, budget=m_plus.memory * f, max_workers=6)
+            rows_extra = (p.partition.num_stages, len(p.config.active_workers()))
+            print(f"  {f:8.2f} {p.memory/2**20:10.2f} {p.rate:10.4f} "
+                  f"{rows_extra[0]:3d} {rows_extra[1]:3d}")
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    dt = (time.time() - t0) * 1e6 / len(FRACS)
+    # monotone scaling check
+    rates = [r[2] for r in rows]
+    mono = all(a <= b + 1e-9 for a, b in zip(rates, rates[1:]))
+    print(f"fig6_scaling,{dt:.0f},rate_monotone={mono}")
+
+
+if __name__ == "__main__":
+    main()

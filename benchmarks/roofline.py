@@ -1,0 +1,116 @@
+"""Roofline report: reads the dry-run JSON and prints the §Roofline table.
+
+    compute    = HLO_FLOPs / peak            (per chip, s)
+    memory     = HLO_bytes / HBM_bw          (per chip, s)
+    collective = wire_bytes / ICI_bw         (per chip, s)
+    MODEL_FLOPS = 6·N·D (train) — N active params, D tokens
+    usefulness  = MODEL_FLOPS / HLO_FLOPs_total
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [path/to/dryrun.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from repro.configs.common import SHAPES
+from repro.models.registry import get_config
+
+DEFAULT = "results/dryrun_v2.json"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch  # decode: one token per row
+
+
+def _fallback_memory_model(rec) -> float:
+    import math
+
+    import jax
+
+    from repro.launch.hlo_analysis import analytic_memory_bytes
+    from repro.models import transformer as T
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["roofline"]["chips"]
+    model_shard = 1 if rec.get("variant") == "fsdp" else 16
+    cache_bytes = 0
+    if shape.kind != "train":
+        cache_s = jax.eval_shape(lambda: T.init_cache(cfg, shape.batch, shape.seq))
+        cache_bytes = sum(
+            int(math.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(cache_s)
+        )
+    return analytic_memory_bytes(
+        cfg, shape, chips, model_shard, rec.get("microbatch", 1), cache_bytes
+    )
+
+
+def run(path: str = DEFAULT, verbose: bool = True):
+    recs = json.load(open(path))
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        chips = rf["chips"]
+        hlo_total = rf["flops_per_device"] * chips
+        mf = model_flops(r["arch"], r["shape"])
+        useful = mf / hlo_total if hlo_total else 0.0
+        tMm = rf.get("t_memory_model_s")
+        if tMm is None:  # older records: compute the traffic model here
+            tMm = _fallback_memory_model(r) / 819e9
+        step = max(rf["t_compute_s"], tMm, rf["t_collective_s"])
+        frac = rf["t_compute_s"] / step if step else 0.0
+        bound = max(
+            [("compute", rf["t_compute_s"]), ("memory", tMm), ("collective", rf["t_collective_s"])],
+            key=lambda kv: kv[1],
+        )[0]
+        rows.append(
+            dict(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                tC=rf["t_compute_s"], tM=tMm, tMhlo=rf["t_memory_s"],
+                tX=rf["t_collective_s"],
+                bottleneck=bound, useful=useful, roofline_frac=frac,
+                hbm=(r.get("memory_analysis") or {}).get("total_hbm_bytes", 0) / 2**30,
+            )
+        )
+    if verbose:
+        hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'tC(s)':>9s} {'tM(s)':>9s} "
+               f"{'tMhlo':>9s} {'tX(s)':>9s} {'bound':>10s} {'useful':>7s} {'frac':>6s} {'HBM':>7s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for w in rows:
+            print(
+                f"{w['arch']:22s} {w['shape']:12s} {w['mesh']:8s} "
+                f"{w['tC']:9.4f} {w['tM']:9.4f} {w['tMhlo']:9.4f} {w['tX']:9.4f} "
+                f"{w['bottleneck']:>10s} "
+                f"{w['useful']:7.2f} {w['roofline_frac']:6.2f} {w['hbm']:6.1f}G"
+            )
+    return rows
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT
+    t0 = time.time()
+    try:
+        rows = run(path)
+    except FileNotFoundError:
+        print(f"roofline,0,missing={path}")
+        return
+    dt = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    worst = min(rows, key=lambda w: w["roofline_frac"]) if rows else None
+    print(f"roofline,{dt:.0f},worst_frac={worst['roofline_frac']:.3f}" if worst else "roofline,0,empty")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1     # one benchmark
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+BENCHES = {
+    "table1": "benchmarks.table1_agm",
+    "table2": "benchmarks.table2_ocl",
+    "table3": "benchmarks.table3_pipeline",
+    "table4": "benchmarks.table4_compensation",
+    "fig4": "benchmarks.fig4_memory",
+    "fig6": "benchmarks.fig6_scaling",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(BENCHES)
+    failures = []
+    for name in selected:
+        mod_name = BENCHES.get(name, name)
+        print(f"\n===== {name} ({mod_name}) =====", flush=True)
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

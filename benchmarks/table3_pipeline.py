@@ -1,0 +1,132 @@
+"""Paper Table 3: pipeline-parallelism strategies (agm vs DAPPLE).
+
+Synchronous: DAPPLE (full flush), ZB (zero-bubble — same update dynamics,
+higher hardware utilization ⇒ shorter effective flush), Hanayo 1W/2W/3W
+(wave pipelines — flush period P/w). Asynchronous: PipeDream (per-item
+updates, τ_j staleness, no accumulation), PipeDream-2BW (async + grad
+accumulation = 2 weight versions), Ferret_M (planned T1–T4). No gradient
+compensation anywhere (paper's protocol for this table).
+
+Memory comes from the Ferret cost model evaluated on each strategy's
+equivalent configuration — the same accounting for everyone.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import jax
+
+from benchmarks import common as C
+from repro.core import compensation as comp
+from repro.core import cost_model as cm
+from repro.core import pipeline as pl
+from repro.core import schedule as sch
+from repro.core.planner import plan as ferret_plan
+from repro.core.profiler import analytic_profile
+from repro.models import transformer as T
+from repro.ocl.metrics import agm
+from repro.optim.optimizers import adamw
+
+P_STAGES = 4
+
+
+def _engine_run(cfg, params, stream, schedule, lr=5e-3):
+    boundaries = [0] + [cfg.num_layers * (j + 1) // P_STAGES for j in range(P_STAGES)]
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    eng = pl.FerretEngine(
+        staged, schedule, adamw(lr=lr), comp.CompensationConfig(method="none"), lr=lr
+    )
+    state = eng.init_state(T.split_stage_params(cfg, params, boundaries))
+    _, ys = eng.run(state, {k: jax.numpy.asarray(v) for k, v in stream.items()})
+    import numpy as np
+
+    return float(np.asarray(ys["acc"]).mean())
+
+
+def _memory_of(stats, accum, omit_all):
+    w = cm.WorkerConfig(
+        0, 0, [cm.StageKnobs(accum=accum, omit=omit_all) for _ in range(P_STAGES)]
+    )
+    return cm.worker_memory(stats, w)
+
+
+def run(verbose: bool = True) -> Dict[str, Dict]:
+    cfg = C.bench_model(num_layers=P_STAGES)
+    params = C.init_params(cfg)
+    stream = C.bench_stream("drift")
+    R = C.STREAM_LEN
+    profile = analytic_profile(cfg, C.BATCH, C.SEQ)
+    part = cm.Partition(tuple(range(P_STAGES + 1)))
+    stats = cm.stage_stats(profile, part)
+    one_worker = cm.PipelineConfig(
+        workers=[cm.WorkerConfig(0, 0, [cm.StageKnobs() for _ in range(P_STAGES)])]
+    )
+
+    results: Dict[str, Dict] = {}
+
+    def sync(name, period):
+        s = sch.build_schedule(one_worker, P_STAGES, R, sync_period=period)
+        acc = _engine_run(cfg, params, stream, s)
+        # sync flush: every in-flight microbatch holds activations; weights 1 copy
+        mem = _memory_of(stats, accum=period, omit_all=0)
+        results[name] = {"oacc": acc, "memory": mem}
+
+    sync("DAPPLE", P_STAGES)
+    sync("ZB", P_STAGES)  # same updates; ZB's win is bubble wall-clock (R-side)
+    sync("Hanayo_1W", P_STAGES)
+    sync("Hanayo_2W", max(P_STAGES // 2, 1))
+    sync("Hanayo_3W", max(P_STAGES // 3, 1))
+
+    # async PipeDream: per-item updates with τ_j staleness
+    s_async = sch.build_schedule(one_worker, P_STAGES, R)
+    acc = _engine_run(cfg, params, stream, s_async)
+    results["PipeDream"] = {"oacc": acc, "memory": _memory_of(stats, 1, 0)}
+
+    # PipeDream-2BW: async + accumulation (2 weight versions)
+    two_bw = cm.PipelineConfig(
+        workers=[cm.WorkerConfig(0, 0, [cm.StageKnobs(accum=P_STAGES) for _ in range(P_STAGES)])]
+    )
+    s_2bw = sch.build_schedule(two_bw, P_STAGES, R)
+    acc = _engine_run(cfg, params, stream, s_2bw)
+    results["PipeDream2BW"] = {"oacc": acc, "memory": _memory_of(stats, P_STAGES, 0)}
+
+    # Ferret_M: planner-chosen config at the 2BW memory budget (paper §6.1)
+    budget = results["PipeDream2BW"]["memory"] + profile.embed_bytes
+    fplan = ferret_plan(profile, t_d=1e9, budget=budget, max_workers=1, max_stages=P_STAGES)
+    s_f = sch.build_schedule(fplan.config, fplan.partition.num_stages, R)
+    boundaries = list(fplan.partition.bounds)
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    eng = pl.FerretEngine(
+        staged, s_f, adamw(lr=5e-3), comp.CompensationConfig(method="none"), lr=5e-3
+    )
+    state = eng.init_state(T.split_stage_params(cfg, params, boundaries))
+    import numpy as np
+
+    _, ys = eng.run(state, {k: jax.numpy.asarray(v) for k, v in stream.items()})
+    results["Ferret_M"] = {"oacc": float(np.asarray(ys["acc"]).mean()), "memory": fplan.memory}
+
+    base = results["DAPPLE"]
+    for name, r in results.items():
+        r["agm"] = agm(100 * r["oacc"], 100 * base["oacc"],
+                       max(r["memory"], 1.0), max(base["memory"], 1.0))
+    if verbose:
+        print("\nTable 3 (agm vs DAPPLE):")
+        for name, r in results.items():
+            print(f"  {name:14s} oacc={100*r['oacc']:6.2f}%  mem={r['memory']/2**20:7.1f}MiB"
+                  f"  agm={r['agm']:7.2f}")
+    return results
+
+
+def main():
+    t0 = time.time()
+    res = run()
+    dt = (time.time() - t0) * 1e6 / C.STREAM_LEN
+    async_adv = res["PipeDream"]["oacc"] - res["DAPPLE"]["oacc"]
+    print(f"table3_pipeline,{dt:.0f},async_minus_sync_oacc={async_adv:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Planner demo: memory-budget sweep over a real assigned architecture.
+
+Reproduces the Fig. 6 trend — adaptation rate scales smoothly with budget —
+and shows the T1–T4 knobs the planner chose at each point.
+
+    PYTHONPATH=src python examples/planner_sweep.py --arch stablelm-12b
+"""
+
+import argparse
+import math
+
+from repro.core.planner import default_data_interval, plan
+from repro.core.profiler import analytic_profile
+from repro.models.registry import ARCHITECTURES, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b", choices=sorted(ARCHITECTURES))
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--chips", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    profile = analytic_profile(cfg, args.batch, args.seq, chips=args.chips)
+    t_d = default_data_interval(profile)
+    m_plus = plan(profile, t_d, budget=math.inf, max_workers=6)
+    print(f"{args.arch}: t_d={t_d*1e3:.2f} ms, unconstrained plan: "
+          f"P={m_plus.partition.num_stages} N={len(m_plus.config.active_workers())} "
+          f"M={m_plus.memory/2**30:.2f} GiB R={m_plus.rate:.4f}\n")
+
+    print(f"{'budget':>8} {'M_F(GiB)':>9} {'R_F':>9} {'P':>3} {'N':>3} "
+          f"{'T1':>3} {'T2(max accum)':>14} {'T3(omitted)':>12}")
+    for frac in (0.03, 0.08, 0.15, 0.3, 0.5, 0.75, 1.0):
+        p = plan(profile, t_d, budget=m_plus.memory * frac, max_workers=6)
+        ws = p.config.active_workers()
+        t1 = max((w.recompute for w in ws), default=0)
+        t2 = max((s.accum for w in ws for s in w.stages), default=0)
+        t3 = sum(1 for w in ws for s in w.stages if s.omit > 0)
+        print(f"{frac:8.2f} {p.memory/2**30:9.2f} {p.rate:9.4f} "
+              f"{p.partition.num_stages:3d} {len(ws):3d} {t1:3d} {t2:14d} {t3:12d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver: OCL-train a ~100M-parameter LM on a token stream.
+
+Default scale is CPU-friendly (~10M params, 200 steps); ``--full`` selects
+the ~100M configuration (24L × 512d) for a few hundred steps as the
+deliverable prescribes — expect ~10-30 min on a few CPU cores, trivial on
+one TPU host.
+
+    PYTHONPATH=src python examples/train_stream_100m.py [--full] [--steps N]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.launch.steps import make_train_step
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+from repro.data.pipeline import DataPipeline, PipelineCfg, TokenStreamSource
+from repro.optim.optimizers import adamw
+from repro.runtime.supervisor import Supervisor, SupervisorCfg
+
+
+def model_for(full: bool) -> ModelConfig:
+    if full:
+        return ModelConfig(  # ≈102M params
+            name="stream-100m", family="dense", num_layers=24, d_model=512,
+            num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=32768,
+            compute_dtype="float32",
+        )
+    return ModelConfig(  # ≈11M params
+        name="stream-10m", family="dense", num_layers=8, d_model=256,
+        num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=8192,
+        compute_dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/stream100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_for(args.full)
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-4, grad_clip=1.0)
+    opt_state = opt.init(params)
+    raw_step = jax.jit(make_train_step(cfg, opt, remat=True))
+
+    def step_fn(state, batch):
+        p, o = state
+        b = {"tokens": batch["tokens"] % cfg.vocab_size,
+             "labels": batch["labels"] % cfg.vocab_size}
+        p, o, m = raw_step(p, o, b)
+        return (p, o), m
+
+    sup = Supervisor(
+        SupervisorCfg(checkpoint_dir=args.ckpt_dir, checkpoint_every=100,
+                      step_timeout_s=3600),
+        step_fn, (params, opt_state),
+    )
+    source = TokenStreamSource(cfg.vocab_size,
+                               PipelineCfg(batch=args.batch, seq=args.seq),
+                               drift_rate=0.01)
+    sup.try_restore(extras_hook=lambda ex: source.seek(ex.get("cursor", 0)))
+    pipe = DataPipeline(source, PipelineCfg(batch=args.batch, seq=args.seq)).start()
+
+    t0, losses = time.time(), []
+    try:
+        while sup.step < args.steps:
+            batch = pipe.get()
+            rep = sup.run_step(batch, extras={"cursor": int(batch["_cursor"])})
+            if not np.isnan(rep.loss):
+                losses.append(rep.loss)
+            if sup.step % 20 == 0:
+                tput = sup.step * args.batch * args.seq / (time.time() - t0)
+                print(f"step {sup.step:5d} loss={rep.loss:.4f} ({tput:,.0f} tok/s)",
+                      flush=True)
+    finally:
+        pipe.stop()
+        sup.finalize(extras={"cursor": source.cursor})
+    print(f"done: {sup.step} steps, loss {losses[0]:.3f} → {losses[-1]:.3f}, "
+          f"dropped={pipe.dropped}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned architecture configs (one module per arch) + input shapes."""
+
+from repro.configs.common import SHAPES, InputShape, input_specs, shape_applicable
+
+__all__ = ["SHAPES", "InputShape", "input_specs", "shape_applicable"]

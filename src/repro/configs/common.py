@@ -1,0 +1,73 @@
+"""Input-shape definitions shared by every architecture.
+
+The assigned benchmark cells are (arch × shape) with:
+
+    train_4k     seq=4096    global_batch=256   -> lowers train_step
+    prefill_32k  seq=32768   global_batch=32    -> lowers serve prefill
+    decode_32k   seq=32768   global_batch=128   -> lowers serve decode (1 new token, KV cache of seq)
+    long_500k    seq=524288  global_batch=1     -> decode; sub-quadratic archs only
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for every
+model input of a given (cfg, shape) cell — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k requires sub-quadratic attention (see DESIGN.md)."""
+    if shape.name == "long_500k" and cfg.full_attention_only:
+        return False
+    return True
+
+
+def _token_or_embed_spec(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_inputs:
+        return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    # Frontend stub: precomputed patch/frame embeddings.
+    return {"embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cd)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """ShapeDtypeStruct stand-ins for the *batch* argument of the lowered fn."""
+    if shape.kind == "train":
+        specs = _token_or_embed_spec(cfg, shape.batch, shape.seq)
+        specs["labels"] = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+        if cfg.mrope_sections is not None:
+            specs["positions"] = jax.ShapeDtypeStruct((3, shape.batch, shape.seq), jnp.int32)
+        return specs
+    if shape.kind == "prefill":
+        specs = _token_or_embed_spec(cfg, shape.batch, shape.seq)
+        if cfg.mrope_sections is not None:
+            specs["positions"] = jax.ShapeDtypeStruct((3, shape.batch, shape.seq), jnp.int32)
+        return specs
+    # decode: one new token against a cache of length shape.seq
+    specs = _token_or_embed_spec(cfg, shape.batch, 1)
+    if cfg.mrope_sections is not None:
+        specs["positions"] = jax.ShapeDtypeStruct((3, shape.batch, 1), jnp.int32)
+    return specs

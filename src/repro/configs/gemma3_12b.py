@@ -1,0 +1,39 @@
+"""gemma3-12b [dense] — 5:1 local:global attention, 128k. [hf:google/gemma-3-1b-pt; unverified]
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144, head_dim=256,
+local window 1024, every 6th layer global.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    head_dim=256,
+    local_global_ratio=5,
+    local_window=1024,
+    rope_theta=1_000_000.0,
+    # bf16 weights + fp32 Adam moments: halves FSDP all-gather wire
+    # (EXPERIMENTS.md §Perf iteration 9)
+    param_dtype="bfloat16",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="gemma3-12b-smoke",
+    family="dense",
+    num_layers=6,  # one full 5:1 local:global group
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    local_global_ratio=5,
+    local_window=8,
+)

@@ -1,0 +1,41 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads. [arXiv:2411.13676; hf]
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Attention branch uses a sliding window (1024) so long_500k runs bounded.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    window=1024,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_conv=4,
+    ssm_chunk=256,
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="hymba-1.5b-smoke",
+    family="hybrid",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    window=8,
+    ssm_state=8,
+    ssm_expand=2,
+    ssm_headdim=16,
+    ssm_conv=4,
+    ssm_chunk=8,
+)

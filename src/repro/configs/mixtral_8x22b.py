@@ -1,0 +1,37 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, SWA. [arXiv:2401.04088; hf]
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    window=4096,
+    num_experts=8,
+    experts_per_token=2,
+    # ≥70B total params: bf16 weights + fp32 optimizer moments (memory fit,
+    # standard mixed-precision recipe; see EXPERIMENTS.md §Perf iteration 4)
+    param_dtype="bfloat16",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="mixtral-8x22b-smoke",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    window=8,
+    num_experts=4,
+    experts_per_token=2,
+)

@@ -1,0 +1,36 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+
+48L d_model=1536 24H (GQA kv=24) d_ff=6144 vocab=2048.
+
+Backbone only: the EnCodec tokenizer is the stubbed frontend — inputs are
+already EnCodec codebook token ids.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    frontend="audio",
+    # 32k-token MHA/GQA cache exceeds 16 GB/chip in bf16 — int8 KV cache
+    # (per-position/head scales) halves it (EXPERIMENTS.md §Perf iteration 7)
+    kv_cache_dtype="int8",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="musicgen-medium-smoke",
+    family="audio",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    frontend="audio",
+)

@@ -1,0 +1,36 @@
+"""qwen1.5-4b [dense] — QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]
+
+40L d_model=2560 20H (GQA kv=20) d_ff=6912 vocab=151936.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    # 32k-token MHA/GQA cache exceeds 16 GB/chip in bf16 — int8 KV cache
+    # (per-position/head scales) halves it (EXPERIMENTS.md §Perf iteration 7)
+    kv_cache_dtype="int8",
+    # bf16 weights + fp32 Adam moments: halves FSDP all-gather wire
+    # (EXPERIMENTS.md §Perf iteration 9)
+    param_dtype="bfloat16",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen1.5-4b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    qkv_bias=True,
+)

@@ -1,0 +1,46 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+
+Backbone only: the vision frontend is a stub — ``input_specs`` provides
+precomputed patch embeddings (b, s, d_model) plus (3, b, s) M-RoPE positions.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),  # sums to head_dim/2 = 64
+    embed_inputs=False,
+    frontend="vision",
+    # ≥70B total params: bf16 weights + fp32 optimizer moments (memory fit,
+    # standard mixed-precision recipe; see EXPERIMENTS.md §Perf iteration 4)
+    param_dtype="bfloat16",
+    # 32k-token MHA/GQA cache exceeds 16 GB/chip in bf16 — int8 KV cache
+    # (per-position/head scales) halves it (EXPERIMENTS.md §Perf iteration 7)
+    kv_cache_dtype="int8",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="qwen2-vl-72b-smoke",
+    family="vlm",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    head_dim=16,
+    qkv_bias=True,
+    mrope_sections=(4, 2, 2),  # sums to head_dim/2 = 8
+    embed_inputs=False,
+    frontend="vision",
+)

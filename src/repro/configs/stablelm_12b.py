@@ -1,0 +1,31 @@
+"""stablelm-12b [dense]. [hf:stabilityai/stablelm-2-1_6b; hf]
+
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    # bf16 weights + fp32 Adam moments: halves FSDP all-gather wire
+    # (EXPERIMENTS.md §Perf iteration 9)
+    param_dtype="bfloat16",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="stablelm-12b-smoke",
+    family="dense",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,9 @@
+"""The paper's primary contribution — Ferret's core systems.
+
+- profiler:       per-layer t^f/t^b/|w|/|a| profile (analytic TPU roofline)
+- cost_model:     Eq. 3 (adaptation rate R_F), Eq. 4 (memory M_F), Eq. 19-22 deltas
+- planner:        Alg. 2 iterative configuration search + Alg. 3 brute-force planning
+- compensation:   Alg. 1 Iter-Fisher (+ Step-Aware / Gap-Aware / Fisher baselines)
+- pipeline:       fine-grained asynchronous 1F1B engine with T1-T4 semantics
+- ferret:         the top-level trainer tying everything together
+"""

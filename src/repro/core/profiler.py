@@ -1,0 +1,186 @@
+"""Layer profiling: per-layer forward/backward time, weight and activation sizes.
+
+The paper profiles wall-clock per layer on the target GPU (appendix Alg. 3,
+``profile(θ)``). This container has no TPU, so the default profile is
+*analytic*: per-layer FLOPs and bytes are derived from the architecture
+config and converted to time with the TPU-v5e roofline
+(t = max(flops / (util · peak), bytes / hbm_bw)). A measured profile
+(timing real CPU executions of single blocks) is also provided for the
+small benchmark models and can override the analytic one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+# TPU v5e hardware constants (per chip) — also used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+DEFAULT_UTILIZATION = 0.55  # achievable fraction of peak for dense matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerProfile:
+    """One model layer (block) as seen by the planner."""
+
+    t_fwd: float  # seconds, forward
+    t_bwd: float  # seconds, backward
+    w_bytes: int  # parameter bytes |ŵ_i|
+    a_bytes: int  # boundary activation bytes |â_i| (stage input/output)
+    a_internal_bytes: int  # intra-layer activations recomputable under T1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    layers: List[LayerProfile]
+    embed_bytes: int  # embedding + head parameter bytes (stage 0 / last stage)
+    batch: int
+    seq: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    def total_w(self) -> int:
+        return sum(l.w_bytes for l in self.layers)
+
+
+def _block_flops_per_token(cfg: ModelConfig, seq: int) -> float:
+    """Forward FLOPs per token for one block (matmul-dominated, 2·m·n·k)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    f = 0.0
+    if cfg.uses_attention:
+        q, kv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+        f += 2.0 * d * (q + 2 * kv + q)  # qkv + out projections (wq,wk,wv,wo)
+        # score/value matmuls against effective context length
+        kinds = cfg.layer_kinds()
+        w0 = cfg.window_for_kind(kinds[0])
+        ctx = min(seq, w0) if w0 is not None else seq
+        f += 2.0 * 2.0 * cfg.num_heads * hd * (ctx / 2.0)  # causal: avg ctx/2
+    if cfg.uses_ssm:
+        di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+        f += 2.0 * d * (2 * di + 2 * n + nh)  # z/x/B/C/dt projections
+        f += 2.0 * di * d  # out projection
+        # SSD: intra-chunk (Q per token) + state update (n per channel)
+        Q = cfg.ssm_chunk
+        f += 2.0 * nh * ph * Q  # C·B^T ⊙ L intra-chunk (amortized per token)
+        f += 4.0 * di * n  # state update + output contraction
+    if ff > 0:
+        active = cfg.experts_per_token if cfg.uses_moe else 1
+        f += 2.0 * 3.0 * d * ff * active
+        if cfg.uses_moe:
+            f += 2.0 * d * cfg.num_experts  # router
+    return f
+
+
+def _block_w_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    total = cfg.param_count()
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    per_layer = (total - embed - cfg.d_model) // cfg.num_layers
+    return per_layer * dtype_bytes
+
+
+def _block_a_bytes(cfg: ModelConfig, batch: int, seq: int, dtype_bytes: int = 2) -> int:
+    """Boundary activation bytes per microbatch: (b, s, d)."""
+    return batch * seq * cfg.d_model * dtype_bytes
+
+
+def _block_a_internal_bytes(cfg: ModelConfig, batch: int, seq: int, dtype_bytes: int = 2) -> int:
+    """Intra-block activations that T1 recomputation avoids storing."""
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    per_token = 0
+    if cfg.uses_attention:
+        per_token += cfg.num_heads * hd + 2 * cfg.num_kv_heads * hd  # q, k, v
+        per_token += cfg.num_heads * hd  # attn out pre-proj
+    if cfg.uses_ssm:
+        per_token += 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+        per_token += cfg.d_inner
+    if ff > 0:
+        active = cfg.experts_per_token if cfg.uses_moe else 1
+        per_token += 2 * ff * active + d
+    return batch * seq * per_token * dtype_bytes
+
+
+def analytic_profile(
+    cfg: ModelConfig,
+    batch: int,
+    seq: int,
+    utilization: float = DEFAULT_UTILIZATION,
+    chips: int = 1,
+    param_dtype_bytes: int = 4,
+    act_dtype_bytes: int = 2,
+) -> ModelProfile:
+    """Roofline-derived per-layer profile for a microbatch of (batch, seq)."""
+    tokens = batch * seq
+    f_fwd = _block_flops_per_token(cfg, seq) * tokens / chips
+    w_b = _block_w_bytes(cfg, param_dtype_bytes) // chips
+    a_b = _block_a_bytes(cfg, batch, seq, act_dtype_bytes) // chips
+    a_int = _block_a_internal_bytes(cfg, batch, seq, act_dtype_bytes) // chips
+
+    def t_of(flops, bytes_moved):
+        return max(flops / (utilization * PEAK_FLOPS_BF16), bytes_moved / HBM_BW)
+
+    t_f = t_of(f_fwd, w_b + a_b + a_int)
+    t_b = t_of(2.0 * f_fwd, 2 * (w_b + a_b + a_int))
+    layers = [LayerProfile(t_f, t_b, w_b, a_b, a_int) for _ in range(cfg.num_layers)]
+    embed_bytes = cfg.vocab_size * cfg.d_model * param_dtype_bytes
+    if not cfg.tie_embeddings:
+        embed_bytes *= 2
+    return ModelProfile(layers=layers, embed_bytes=embed_bytes // chips, batch=batch, seq=seq)
+
+
+def measured_profile(
+    cfg: ModelConfig,
+    batch: int,
+    seq: int,
+    repeats: int = 3,
+    rng_seed: int = 0,
+) -> ModelProfile:
+    """Wall-clock profile of a single block on the local backend (paper-style).
+
+    Only sensible for small (benchmark-scale) models on CPU.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+
+    one = dataclasses.replace(cfg, num_layers=1)
+    params = T.init_params(one, jax.random.PRNGKey(rng_seed))
+    block = jax.tree.map(lambda a: a[0], params["blocks"])
+    x = jnp.zeros((batch, seq, cfg.d_model), dtype=jnp.dtype(cfg.compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, batch, seq))
+
+    from repro.models.transformer import _block_train
+
+    fwd = jax.jit(lambda p, x: _block_train(cfg, p, x, jnp.int32(0), pos)[0])
+    bwd = jax.jit(jax.grad(lambda p, x: jnp.sum(_block_train(cfg, p, x, jnp.int32(0), pos)[0] ** 2)))
+
+    fwd(block, x).block_until_ready()
+    jax.block_until_ready(bwd(block, x))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fwd(block, x).block_until_ready()
+    t_f = (time.perf_counter() - t0) / repeats
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(bwd(block, x))
+    t_b = (time.perf_counter() - t0) / repeats
+
+    w_b = _block_w_bytes(cfg)
+    a_b = _block_a_bytes(cfg, batch, seq)
+    a_int = _block_a_internal_bytes(cfg, batch, seq)
+    layers = [LayerProfile(t_f, t_b, w_b, a_b, a_int) for _ in range(cfg.num_layers)]
+    embed_bytes = cfg.vocab_size * cfg.d_model * 4 * (1 if cfg.tie_embeddings else 2)
+    return ModelProfile(layers=layers, embed_bytes=embed_bytes, batch=batch, seq=seq)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, PipelineCfg, TokenStreamSource
+
+__all__ = ["DataPipeline", "PipelineCfg", "TokenStreamSource"]

@@ -1,0 +1,125 @@
+"""Host data pipeline: sources → shard-aware batching → background prefetch.
+
+OCL semantics drive the design: items arrive continuously; the pipeline
+never blocks the training loop (a bounded queue + drop-oldest policy is the
+data-plane half of the paper's admission control), and every emitted batch
+carries its arrival timestamp so the trainer can compute per-item delays
+r^t for the adaptation-rate metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCfg:
+    batch: int
+    seq: int
+    prefetch: int = 4  # bounded queue depth
+    drop_policy: str = "oldest"  # oldest | newest | block
+    shard_index: int = 0  # this host's data shard
+    num_shards: int = 1
+    seed: int = 0
+
+
+class TokenStreamSource:
+    """Deterministic synthetic token source (shard-aware, resumable).
+
+    Produces drifting-Markov token sequences (see repro.ocl.streams for the
+    generator used by benchmarks); resumable via an integer cursor so
+    checkpoint/restart replays exactly-once.
+    """
+
+    def __init__(self, vocab: int, cfg: PipelineCfg, drift_rate: float = 0.0):
+        self.vocab = vocab
+        self.cfg = cfg
+        self.drift_rate = drift_rate
+        self.cursor = 0
+
+    def seek(self, cursor: int) -> None:
+        self.cursor = cursor
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        # fold the cursor + shard into the seed: reproducible & disjoint
+        rng = np.random.default_rng(
+            (c.seed * 1_000_003 + self.cursor) * c.num_shards + c.shard_index
+        )
+        toks = rng.integers(0, self.vocab, size=(c.batch, c.seq + 1), dtype=np.int64)
+        # simple drifting bias so later cursors have shifted distribution
+        if self.drift_rate:
+            shift = int(self.cursor * self.drift_rate) % self.vocab
+            toks = (toks + shift) % self.vocab
+        self.cursor += 1
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "_cursor": np.asarray(self.cursor - 1, np.int64),
+            "_arrival": np.asarray(time.time(), np.float64),
+        }
+
+
+class DataPipeline:
+    """Background-thread prefetcher with bounded queue + admission policy."""
+
+    def __init__(self, source, cfg: PipelineCfg):
+        self.source = source
+        self.cfg = cfg
+        self._q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
+        self._stop = threading.Event()
+        self._dropped = 0
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "DataPipeline":
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+    # -- worker --------------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            batch = self.source.next_batch()
+            if self.cfg.drop_policy == "block":
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(batch, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                continue
+            try:
+                self._q.put_nowait(batch)
+            except queue.Full:
+                self._dropped += 1
+                if self.cfg.drop_policy == "oldest":
+                    try:
+                        self._q.get_nowait()  # discard stalest
+                        self._q.put_nowait(batch)
+                    except (queue.Empty, queue.Full):
+                        pass
+                # 'newest': drop the incoming batch (already counted)
+
+    # -- consumer ------------------------------------------------------------
+    def get(self, timeout: float = 10.0) -> Dict[str, np.ndarray]:
+        return self._q.get(timeout=timeout)
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.get()
+
+    @property
+    def dropped(self) -> int:
+        return self._dropped

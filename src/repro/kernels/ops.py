@@ -1,0 +1,114 @@
+"""Public jit'd wrappers for the Pallas kernels (with jnp reference fallback).
+
+Dispatch policy
+---------------
+- On TPU, the Pallas kernels are used (``pl.pallas_call`` with explicit
+  BlockSpec VMEM tiling).
+- On CPU (this container), the kernels only execute under
+  ``interpret=True`` — correct but slow — so the default execution path is
+  the jnp reference, and the Pallas path is exercised by the kernel tests
+  and by setting ``REPRO_USE_PALLAS=1`` (interpret mode) / running on TPU.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _use_pallas() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS", "").strip()
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return _backend() == "tpu"
+
+
+def _pallas_interpret() -> bool:
+    return _backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (Mamba-2)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    l = x.shape[1]
+    pad = (-l) % chunk
+    if pad:
+        # dt=0 padding is a no-op on the state (decay exp(0)=1, increment 0).
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    if _use_pallas():
+        from repro.kernels import ssd_scan as _k
+
+        y, state = _k.ssd_scan_pallas(
+            x, dt, A, B, C, chunk, initial_state, interpret=_pallas_interpret()
+        )
+    else:
+        y, state = _ref.ssd_scan_ref(x, dt, A, B, C, chunk, initial_state)
+    return (y[:, :l] if pad else y), state
+
+
+@jax.jit
+def ssd_decode_step(
+    x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array, state: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    # Single-token recurrence is tiny & fusion-friendly; XLA handles it.
+    return _ref.ssd_decode_step_ref(x, dt, A, B, C, state)
+
+
+# ---------------------------------------------------------------------------
+# Iter-Fisher gradient compensation
+# ---------------------------------------------------------------------------
+
+
+def iter_fisher_compensate(grad: jax.Array, deltas: jax.Array, lam: jax.Array) -> jax.Array:
+    """Apply τ iterative Fisher compensations; deltas: (τ, *grad.shape)."""
+    if _use_pallas() and grad.ndim >= 1 and grad.size % 128 == 0:
+        from repro.kernels import iter_fisher as _k
+
+        return _k.iter_fisher_compensate_pallas(
+            grad, deltas, lam, interpret=_pallas_interpret()
+        )
+    return _ref.iter_fisher_compensate_ref(grad, deltas, lam)
+
+
+def iter_fisher_leaf_stats(
+    grad: jax.Array,
+    delta: jax.Array,
+    v_r: jax.Array,
+    v_a: jax.Array,
+    alpha: float,
+):
+    """Per-leaf λ-statistics + EMA updates. Returns (v_r', v_a', s1, s2)."""
+    if _use_pallas() and grad.ndim >= 1 and grad.size % 128 == 0:
+        from repro.kernels import iter_fisher as _k
+
+        return _k.iter_fisher_leaf_stats_pallas(
+            grad, delta, v_r, v_a, alpha, interpret=_pallas_interpret()
+        )
+    return _ref.iter_fisher_leaf_stats_ref(grad, delta, v_r, v_a, alpha)

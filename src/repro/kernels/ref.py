@@ -1,0 +1,169 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference semantics*; kernels must match them to
+``assert_allclose`` tolerances across shape/dtype sweeps (see
+``tests/test_kernels.py``). The model code calls these through
+``repro.kernels.ops`` which dispatches kernel vs. reference.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Iter-Fisher gradient compensation (paper Eq. 8 / Alg. 1 inner loop)
+# ---------------------------------------------------------------------------
+
+
+def iter_fisher_compensate_ref(
+    grad: jax.Array,
+    deltas: jax.Array,  # (tau, *grad.shape): θ^{t+i} − θ^{t+i-1} for i = 0..τ-1
+    lam: jax.Array,  # scalar λ
+) -> jax.Array:
+    """Iteratively apply  g ← g + λ · g ⊙ g ⊙ Δθ_i  for each staleness step.
+
+    This is Eq. 9: A_I(... A_I(∇L(D;θ), θ^{t}, θ^{t-1}) ..., θ^{t+τ-1}, θ^{t+τ-2}).
+    """
+
+    def body(g, delta):
+        g32 = g.astype(jnp.float32)
+        g32 = g32 + lam * g32 * g32 * delta.astype(jnp.float32)
+        return g32.astype(grad.dtype), None
+
+    out, _ = jax.lax.scan(body, grad, deltas)
+    return out
+
+
+def iter_fisher_leaf_stats_ref(
+    grad: jax.Array,
+    delta: jax.Array,  # θ^t − θ^{t-1}
+    v_r: jax.Array,
+    v_a: jax.Array,
+    alpha: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-leaf λ statistics (paper Eq. 10–12 / Alg. 1 lines 3–7).
+
+    Returns (new_v_r, new_v_a, s1, s2) where
+
+    dv_r = (1-α)(g − v_r)                     # Eq. 12: D − E
+    s1   = Σ dv_r ⊙ v_a   (old v_a)           # for ∂/∂λ ‖dv_r − λ v_a‖²
+    s2   = Σ v_a ⊙ v_a    (old v_a)
+    v_r  ← α v_r + (1-α) g
+    v_a  ← α v_a + (1-α) (g ⊙ g ⊙ Δθ)
+
+    The caller combines s1/s2 over all leaves to update the *global* λ:
+    λ ← λ − η_λ (−2 Σ s1 + 2 λ Σ s2 + 2 ν λ).
+    """
+    g = grad.astype(jnp.float32)
+    d = delta.astype(jnp.float32)
+    vr = v_r.astype(jnp.float32)
+    va = v_a.astype(jnp.float32)
+
+    dv_r = (1.0 - alpha) * (g - vr)
+    s1 = jnp.sum(dv_r * va)
+    s2 = jnp.sum(va * va)
+
+    new_vr = alpha * vr + (1.0 - alpha) * g
+    new_va = alpha * va + (1.0 - alpha) * (g * g * d)
+    return new_vr.astype(v_r.dtype), new_va.astype(v_a.dtype), s1, s2
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD chunked scan (state-space duality)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., l, s] = sum_{i=s+1..l} x[..., i], -inf above diag.
+
+    x: (..., Q)  ->  (..., Q, Q) lower-triangular (inclusive of diagonal = 0
+    on the diagonal since the sum over an empty range is 0).
+    """
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)  # inclusive
+    diff = cs[..., :, None] - cs[..., None, :]  # cs[l] - cs[s]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (b, l, h, p)
+    dt: jax.Array,  # (b, l, h)  positive (already softplus'd)
+    A: jax.Array,  # (h,)       negative
+    B: jax.Array,  # (b, l, n)
+    C: jax.Array,  # (b, l, n)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (b, h, p, n)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (Mamba-2). Returns (y (b,l,h,p), final_state (b,h,p,n)).
+
+    Semantics: s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t ;  y_t = C_t · s_t.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, f"seq {l} not divisible by chunk {chunk}"
+    c = l // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, c, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, c, chunk, h).astype(f32)
+    Bc = B.reshape(b, c, chunk, n).astype(f32)
+    Cc = C.reshape(b, c, chunk, n).astype(f32)
+
+    dA = dtc * A.astype(f32)  # (b, c, Q, h)
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (diagonal blocks) ----
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, 2)))  # (b, c, h, Q, Q)
+    y_diag = jnp.einsum(
+        "bcln,bcsn,bchls,bcsh,bcshp->bclhp", Cc, Bc, Lmat, dtc, xc
+    )
+
+    # ---- per-chunk end states ----
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b, c, Q, h)
+    chunk_states = jnp.einsum("bcln,bclh,bclh,bclhp->bchpn", Bc, decay_to_end, dtc, xc)
+
+    # ---- inter-chunk recurrence over chunk boundary states ----
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, c, h)
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, p, n), dtype=f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def scan_body(s_prev, inp):
+        decay_c, state_c = inp  # (b, h), (b, h, p, n)
+        s_before = s_prev
+        s_after = s_prev * decay_c[:, :, None, None] + state_c
+        return s_after, s_before
+
+    decays = jnp.moveaxis(chunk_decay, 1, 0)  # (c, b, h)
+    states = jnp.moveaxis(chunk_states, 1, 0)  # (c, b, h, p, n)
+    final_state, states_before = jax.lax.scan(scan_body, s0, (decays, states))
+    states_before = jnp.moveaxis(states_before, 0, 1)  # (b, c, h, p, n)
+
+    # ---- contribution of carried-in state to each position ----
+    state_decay = jnp.exp(dA_cs)  # (b, c, Q, h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, states_before, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step_ref(
+    x: jax.Array,  # (b, h, p)
+    dt: jax.Array,  # (b, h)
+    A: jax.Array,  # (h,)
+    B: jax.Array,  # (b, n)
+    C: jax.Array,  # (b, n)
+    state: jax.Array,  # (b, h, p, n)
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent SSD update. Returns (y (b,h,p), new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))  # (b, h)
+    inc = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32), B.astype(f32))
+    new_state = state.astype(f32) * dA[:, :, None, None] + inc
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(f32))
+    return y.astype(x.dtype), new_state.astype(state.dtype)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+TPU adaptation of the paper-adjacent SSD algorithm (arXiv:2405.21060): the
+sequence is tiled into chunks of Q tokens; each grid step keeps one
+(Q × headdim) input tile, the (Q × state) B/C tiles and the running
+(headdim × state) SSM state in VMEM, does the three MXU contractions
+(C·Bᵀ intra-chunk, W·x, state outer-product) at f32, and carries the state
+across the sequential chunk axis in a VMEM scratch accumulator — the HBM
+traffic is exactly one read of x/dt/B/C and one write of y per token.
+
+Grid: (batch·heads, num_chunks); the chunk axis is the minor (sequential)
+grid dimension, so the state scratch persists across it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, Q, 1, p)
+    dt_ref,  # (1, Q, 1)
+    A_ref,  # (1,)
+    B_ref,  # (1, Q, n)
+    C_ref,  # (1, Q, n)
+    s0_ref,  # (1, 1, p, n)
+    y_ref,  # out (1, Q, 1, p)
+    sf_ref,  # out (1, 1, p, n)
+    state,  # scratch (p, n) f32
+    *,
+    num_chunks: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = A_ref[0].astype(jnp.float32)  # scalar
+    B = B_ref[0].astype(jnp.float32)  # (Q, n)
+    C = C_ref[0].astype(jnp.float32)  # (Q, n)
+
+    dA = dt * A
+    cs = jnp.cumsum(dA)  # (Q,) inclusive; ≤ 0 since A < 0
+
+    s_in = state[...]
+    # carried-state contribution: y_off[l] = exp(cs[l]) · C_l · s_in
+    y_off = jnp.dot(C, s_in.T, preferred_element_type=jnp.float32) * jnp.exp(cs)[:, None]
+
+    # intra-chunk: W[l,s] = (C_l·B_s) e^{cs_l - cs_s} dt_s for s ≤ l
+    G = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    Q = x.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(li >= si, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+    W = G * L * dt[None, :]
+    y_diag = jnp.dot(W, x, preferred_element_type=jnp.float32)  # (Q, p)
+
+    # state recurrence to the chunk end
+    decay_end = jnp.exp(cs[-1] - cs)  # (Q,)
+    inc = jnp.dot((x * (dt * decay_end)[:, None]).T, B, preferred_element_type=jnp.float32)
+    new_state = s_in * jnp.exp(cs[-1]) + inc  # (p, n)
+    state[...] = new_state
+
+    y_ref[0, :, 0, :] = (y_off + y_diag).astype(y_ref.dtype)
+    sf_ref[0, 0] = new_state.astype(sf_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (b, l, h, p)
+    dt: jax.Array,  # (b, l, h)
+    A: jax.Array,  # (h,)
+    B: jax.Array,  # (b, l, n)
+    C: jax.Array,  # (b, l, n)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # (b, h, p, n)
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    y, sf = pl.pallas_call(
+        functools.partial(_ssd_kernel, num_chunks=nc),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bh, c: (bh // h, c, bh % h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, c: (bh // h, c, bh % h)),
+            pl.BlockSpec((1,), lambda bh, c: (bh % h,)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh // h, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, c: (bh // h, c, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bh, c: (bh // h, bh % h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bh, c: (bh // h, c, bh % h, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bh, c: (bh // h, bh % h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, initial_state)
+    return y, sf

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402
+"""Optimized dry-run: per-cell best sharding variant (EXPERIMENTS.md §Perf).
+
+- train_4k  → 'fsdp'   (global batch 256 covers the chips; TP collectives
+                         replaced by weight streaming — iteration 6)
+- others    → 'baseline' (batch 32/128/1 < chips: FSDP would replicate)
+plus every config-level optimization (bf16 weights, int8 KV, flash, grouped
+MoE) already in the model configs.
+"""
+
+import json
+import time
+import traceback
+
+from repro.configs.common import SHAPES
+from repro.launch.dryrun import dryrun_cell
+from repro.models.registry import ARCHITECTURES
+
+OUT = "results/dryrun_v3.json"
+
+
+def main() -> None:
+    records = []
+    for arch in ARCHITECTURES:
+        for sname, shape in SHAPES.items():
+            for multi in (False, True):
+                variant = "fsdp" if sname == "train_4k" else "baseline"
+                t0 = time.time()
+                try:
+                    rec = dryrun_cell(arch, shape, multi, variant=variant)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": sname,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "variant": variant, "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-1500:],
+                    }
+                rec["wall_s"] = round(time.time() - t0, 1)
+                records.append(rec)
+                extra = ""
+                if rec["status"] == "ok" and "roofline" in rec:
+                    r = rec["roofline"]
+                    ma = rec.get("memory_analysis") or {}
+                    extra = (
+                        f" hbm={ma.get('total_hbm_bytes', 0)/2**30:.2f}G"
+                        f" tC={r['t_compute_s']:.3f} tMm={r.get('t_memory_model_s', 0):.3f}"
+                        f" tX={r['t_collective_s']:.3f}"
+                    )
+                elif rec["status"] == "error":
+                    extra = " " + rec["error"][:150]
+                print(f"[{rec['status']:7s}] {arch} × {sname} × "
+                      f"{'2x16x16' if multi else '16x16'} ({variant}){extra}", flush=True)
+                os.makedirs("results", exist_ok=True)
+                with open(OUT, "w") as f:
+                    json.dump(records, f, indent=1)
+    ok = sum(1 for r in records if r["status"] == "ok")
+    sk = sum(1 for r in records if r["status"] == "skipped")
+    err = sum(1 for r in records if r["status"] == "error")
+    print(f"\ndone: {ok} ok, {sk} skipped, {err} errors → {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+touches no jax device state — the dry-run sets XLA_FLAGS *before* first jax
+init and only then calls these.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; 2 pods for the multi-pod dry-run (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Axes that shard the batch (pod ⊗ data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

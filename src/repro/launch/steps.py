@@ -1,0 +1,110 @@
+"""Jittable train / serve step builders used by drivers and the dry-run."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.compression import CompressionConfig, compress_gradients
+from repro.optim.optimizers import Optimizer
+
+Pytree = Any
+
+
+def _value_and_grad_microbatched(cfg, params, batch, remat, microbatch):
+    """Gradient accumulation over `microbatch` splits of the global batch.
+
+    The activation peak scales with the microbatch, not the global batch —
+    the in-step analogue of Ferret's T2 (gradient accumulation) knob."""
+
+    def loss_of(p, b):
+        return T.loss_fn(cfg, p, b, remat=remat)
+
+    if microbatch <= 1:
+        return jax.value_and_grad(loss_of, has_aux=True)(params, batch)
+
+    data_keys = [k for k in batch if k != "positions"]
+    b_total = batch[data_keys[0]].shape[0]
+    assert b_total % microbatch == 0, (b_total, microbatch)
+    mb = b_total // microbatch
+
+    def split(v, leading_batch_axis=0):
+        return v.reshape(microbatch, mb, *v.shape[1:])
+
+    sb = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim >= 1 and v.shape[0] == 3:
+            # mrope positions: (3, b, s) -> (micro, 3, mb, s)
+            sb[k] = jnp.moveaxis(v.reshape(3, microbatch, mb, *v.shape[2:]), 1, 0)
+        else:
+            sb[k] = split(v)
+
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, micro):
+        g_acc, loss_acc, acc_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params, micro)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+        return (g_acc, loss_acc + loss, acc_acc + metrics["acc"]), None
+
+    (grads, loss_sum, acc_sum), _ = jax.lax.scan(
+        body, (zero_grads, jnp.zeros(()), jnp.zeros(())), sb
+    )
+    grads = jax.tree.map(lambda g: g / microbatch, grads)
+    n = float(microbatch)
+    metrics = {"ce": loss_sum / n, "acc": acc_sum / n, "moe_aux": jnp.zeros(())}
+    return (loss_sum / n, metrics), grads
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    remat: bool = True,
+    compression: Optional[CompressionConfig] = None,
+    microbatch: int = 1,
+):
+    """(params, opt_state, batch[, ef_residual]) -> (params, opt_state, metrics[, resid])."""
+
+    if compression is None or compression.method == "none":
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = _value_and_grad_microbatched(
+                cfg, params, batch, remat, microbatch
+            )
+            new_params, new_opt = optimizer.update(params, grads, opt_state)
+            return new_params, new_opt, {"loss": loss, **metrics}
+
+        return train_step
+
+    def train_step_c(params, opt_state, batch, residual):
+        (loss, metrics), grads = _value_and_grad_microbatched(
+            cfg, params, batch, remat, microbatch
+        )
+        grads, residual = compress_gradients(compression, grads, residual)
+        new_params, new_opt = optimizer.update(params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics}, residual
+
+    return train_step_c
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """(params, batch) -> (next-token logits (b, V), cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache = T.prefill(cfg, params, batch, max_len=max_len)
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, batch) -> (logits (b, V), cache)."""
+
+    def decode_step(params, cache, batch):
+        return T.decode_step(cfg, params, cache, batch)
+
+    return decode_step

@@ -1,0 +1,19 @@
+"""Model zoo: pure-pytree JAX decoder LMs (dense / MoE / SSM / hybrid / VLM / audio).
+
+Every architecture exposes the same functional API:
+
+    params = init_params(cfg, rng)                  # pytree of jnp arrays
+    pspecs = param_pspecs(cfg)                      # matching pytree of PartitionSpec
+    logits = forward(cfg, params, batch)            # training forward
+    loss, aux = loss_fn(cfg, params, batch)
+    cache  = init_cache(cfg, batch, max_len)        # decode caches (KV / ring / SSM state)
+    logits, cache = decode_step(cfg, params, cache, batch)
+
+Blocks are homogeneous and scanned (``jax.lax.scan`` over stacked per-layer
+parameters) so that the lowered HLO stays compact even for 80-layer models.
+"""
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_config, build_model, ARCHITECTURES
+
+__all__ = ["ModelConfig", "get_config", "build_model", "ARCHITECTURES"]

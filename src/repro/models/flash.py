@@ -1,0 +1,153 @@
+"""Memory-efficient causal attention with a custom VJP (flash-attention).
+
+Without this, differentiating the blocked-attention scan saves the
+(b, h, s, KB) probability tiles for every KV block — O(s²) residuals per
+layer, which is exactly the blow-up blocking the 16 GB/chip budget (see
+EXPERIMENTS.md §Perf iteration 2). Here the forward saves only
+(q, k, v, out, m, l) — O(s·d) — and the backward recomputes each tile once:
+
+  fwd:  online-softmax scan over KV blocks  →  out, m (row max), l (row sum)
+  bwd:  one more scan over KV blocks; per block recompute p, then
+        dv += pᵀ·do,  ds = p∘(dp − D),  dq += ds·k,  dk += dsᵀ·q
+        with D = rowsum(do ∘ out).
+
+Supports GQA grouping and a *traced* sliding-window size (gemma3's
+local:global pattern selects the window per layer inside one scan).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_KV_BLOCK = 512
+_NEG = -1e30
+
+
+def _blocks(x: jax.Array, KB: int) -> jax.Array:
+    """(b, s, kv, d) -> (nb, b, KB, kv, d), zero-padded."""
+    b, s, kv, d = x.shape
+    pad = (-s) % KB
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = x.shape[1] // KB
+    return jnp.moveaxis(x.reshape(b, nb, KB, kv, d), 1, 0)
+
+
+def _fwd_scan(qg, k, v, window_eff, KB):
+    b, s, kvh, g, d = qg.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qpos = jnp.arange(s)
+    kb, vb = _blocks(k, KB), _blocks(v, KB)
+    nb = kb.shape[0]
+
+    m0 = jnp.full((b, kvh, g, s), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, s, kvh, g, d), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, idx = inp
+        scores = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk, preferred_element_type=jnp.float32)
+            * scale
+        )
+        kpos = idx * KB + jnp.arange(KB)
+        allowed = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window_eff
+        )
+        scores = jnp.where(allowed[None, None, None], scores, _NEG)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) * allowed[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        acc_new = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 3, 1), 1e-30)[..., None]  # (b,s,kv,g,d)
+    return out, m, l
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def flash_gqa_attention(
+    q: jax.Array,  # (b, s, h, d)
+    k: jax.Array,  # (b, s, kv, d)
+    v: jax.Array,  # (b, s, kv, d)
+    window_eff: jax.Array,  # traced int scalar
+    kv_block: int = 0,  # 0 -> module-level DEFAULT_KV_BLOCK (read at call time)
+) -> jax.Array:
+    if kv_block <= 0:
+        kv_block = DEFAULT_KV_BLOCK
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, d)
+    out, _, _ = _fwd_scan(qg, k, v, window_eff, min(kv_block, s))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _flash_fwd(q, k, v, window_eff, kv_block):
+    if kv_block <= 0:
+        kv_block = DEFAULT_KV_BLOCK
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, d)
+    out, m, l = _fwd_scan(qg, k, v, window_eff, min(kv_block, s))
+    # residual `out` in model dtype (bf16): halves the per-layer residual
+    # footprint; D = rowsum(do∘out) tolerates the rounding (flash standard)
+    res = (q, k, v, window_eff, out.astype(q.dtype), m, l)
+    return out.reshape(b, s, h, d).astype(q.dtype), res
+
+
+def _flash_bwd(kv_block, res, dout):
+    if kv_block <= 0:
+        kv_block = DEFAULT_KV_BLOCK
+    q, k, v, window_eff, out, m, l = res
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    KB = min(kv_block, s)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qpos = jnp.arange(s)
+
+    qg = q.reshape(b, s, kvh, g, d).astype(jnp.float32)
+    dog = dout.reshape(b, s, kvh, g, d).astype(jnp.float32)
+    # D = rowsum(dout ∘ out): (b, kv, g, s)
+    Drow = jnp.moveaxis(jnp.sum(dog * out.astype(jnp.float32), axis=-1), 1, 3)
+    l_safe = jnp.maximum(l, 1e-30)
+
+    kb, vb = _blocks(k, KB), _blocks(v, KB)
+    nb = kb.shape[0]
+
+    dq0 = jnp.zeros_like(qg)
+
+    def body(dq, inp):
+        kblk, vblk, idx = inp
+        kf, vf = kblk.astype(jnp.float32), vblk.astype(jnp.float32)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf, preferred_element_type=jnp.float32) * scale
+        kpos = idx * KB + jnp.arange(KB)
+        allowed = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window_eff
+        )
+        p = jnp.exp(scores - m[..., None]) * allowed[None, None, None]
+        pn = p / l_safe[..., None]  # normalized probabilities (b,kv,g,s,KB)
+        dv_b = jnp.einsum("bkgqs,bqkgd->bskd", pn, dog)
+        dp = jnp.einsum("bqkgd,bskd->bkgqs", dog, vf, preferred_element_type=jnp.float32)
+        ds = pn * (dp - Drow[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqs,bskd->bqkgd", ds, kf)
+        dk_b = jnp.einsum("bkgqs,bqkgd->bskd", ds, qg)
+        return dq, (dk_b, dv_b)
+
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nb)))
+    dk = jnp.moveaxis(dk_blocks, 0, 1).reshape(b, nb * KB, kvh, d)[:, :s]
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(b, nb * KB, kvh, d)[:, :s]
+    dq = dq.reshape(b, s, h, d)
+    zero_w = jnp.zeros((), dtype=jax.dtypes.float0)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), zero_w
+
+
+flash_gqa_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,497 @@
+"""Shared neural-net layers (pure functions over pytrees).
+
+Conventions
+-----------
+- Activations travel in ``cfg.compute_dtype`` (bf16 by default); softmax,
+  norms and router math accumulate in float32.
+- Attention tensors are laid out ``(batch, seq, heads, head_dim)``.
+- All layers are shape-polymorphic and jit/scan-friendly (no Python control
+  flow on traced values).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.
+
+    x: (b, s, h, d); positions: (b, s) int32.
+    """
+    head_dim = x.shape[-1]
+    freqs = _rope_freqs(head_dim, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Tuple[int, int, int],
+    theta: float,
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) own
+
+    disjoint sections of the frequency spectrum.
+
+    x: (b, s, h, d); positions: (3, b, s) int32; sum(sections) == d // 2.
+    """
+    head_dim = x.shape[-1]
+    freqs = _rope_freqs(head_dim, theta)  # (d/2,)
+    sec = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )  # (d/2,) section id per frequency
+    # Select, per frequency, the matching position stream.
+    pos = positions.astype(jnp.float32)  # (3, b, s)
+    pos_per_freq = jnp.take(pos, sec, axis=0)  # (d/2, b, s)
+    angles = jnp.transpose(pos_per_freq, (1, 2, 0)) * freqs  # (b, s, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def causal_mask_bias(seq: int, window: Optional[int]) -> jax.Array:
+    """(1, 1, seq, seq) additive float32 bias; window=None -> plain causal."""
+    q_pos = jnp.arange(seq)[:, None]
+    k_pos = jnp.arange(seq)[None, :]
+    allowed = k_pos <= q_pos
+    if window is not None:
+        allowed &= k_pos > q_pos - window
+    return jnp.where(allowed, 0.0, _NEG_INF).astype(jnp.float32)[None, None]
+
+
+def gqa_scores_softmax_value(
+    q: jax.Array,  # (b, s_q, h, d)
+    k: jax.Array,  # (b, s_k, kv, d)
+    v: jax.Array,  # (b, s_k, kv, d)
+    bias: Optional[jax.Array],  # broadcastable to (b, h, s_q, s_k) or None
+) -> jax.Array:
+    """Grouped-query attention core. Returns (b, s_q, h, d)."""
+    b, s_q, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s_q, kv, g, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if bias is not None:
+        # bias (1/b, 1/h, s_q, s_k) -> (b, kv, g, s_q, s_k)
+        bias_ = jnp.broadcast_to(bias, (b, h, s_q, scores.shape[-1])).reshape(
+            b, kv, g, s_q, scores.shape[-1]
+        )
+        scores = scores + bias_
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, s_q, h, d)
+
+
+# Sequences at or above this length use the blocked (flash-style) path:
+# O(s·KB) live scores instead of the O(s²) dense materialization.
+BLOCKED_ATTN_THRESHOLD = 2048
+BLOCKED_ATTN_KV_BLOCK = 512
+
+
+def blocked_gqa_attention(
+    q: jax.Array,  # (b, s, h, d)
+    k: jax.Array,  # (b, s, kv, d)
+    v: jax.Array,  # (b, s, kv, d)
+    window_eff: jax.Array,  # traced scalar: effective window (≥ s+KB ⇒ full causal)
+    kv_block: int = BLOCKED_ATTN_KV_BLOCK,
+) -> jax.Array:
+    """Flash-style causal attention: scan over KV blocks with online softmax.
+
+    Never materializes the (s × s) score matrix — the live working set is
+    (b, kv, g, s, KB). Masked positions get probability exactly 0, so the
+    result matches the dense path bit-for-bit up to fp accumulation order.
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    KB = min(kv_block, s)
+    pad = (-s) % KB
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = k.shape[1] // KB
+    kb = jnp.moveaxis(k.reshape(b, nb, KB, kvh, d), 1, 0)  # (nb, b, KB, kv, d)
+    vb = jnp.moveaxis(v.reshape(b, nb, KB, kvh, d), 1, 0)
+
+    qg = q.reshape(b, s, kvh, g, d)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qpos = jnp.arange(s)
+
+    m0 = jnp.full((b, kvh, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, s, kvh, g, d), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, idx = inp
+        scores = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk, preferred_element_type=jnp.float32)
+            * scale
+        )  # (b, kv, g, s, KB)
+        kpos = idx * KB + jnp.arange(KB)
+        allowed = (kpos[None, :] <= qpos[:, None]) & (
+            kpos[None, :] > qpos[:, None] - window_eff
+        )  # (s, KB)
+        scores = jnp.where(allowed[None, None, None], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) * allowed[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        acc_new = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(jnp.moveaxis(l, 3, 1), 1e-30)[..., None]
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _window_eff(cfg: ModelConfig, kind: jax.Array, s: int) -> jax.Array:
+    """Traced effective window: local layers use their window, full layers s+∞."""
+    full_w = cfg.window_for_kind(0)
+    local_w = cfg.window_for_kind(1)
+    big = jnp.asarray(s + BLOCKED_ATTN_KV_BLOCK + 1, jnp.int32)
+    w0 = jnp.asarray(full_w, jnp.int32) if full_w is not None else big
+    w1 = jnp.asarray(local_w, jnp.int32) if local_w is not None else big
+    return jnp.where(kind == 1, w1, w0)
+
+
+def attention_train(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (b, s, d_model)
+    kind: jax.Array,  # scalar int: 0 full/global, 1 local
+    positions: jax.Array,  # (b, s) or (3, b, s) for mrope
+) -> jax.Array:
+    """Full-sequence causal attention for training / prefill."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    cd = x.dtype
+
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if s >= BLOCKED_ATTN_THRESHOLD:
+        from repro.models.flash import flash_gqa_attention
+
+        out = flash_gqa_attention(q, k, v, _window_eff(cfg, kind, s), 0)
+    else:
+        # Additive bias: full-causal and windowed variants selected by `kind`.
+        full_bias = causal_mask_bias(s, cfg.window_for_kind(0))
+        if cfg.local_global_ratio > 0 or cfg.window is not None:
+            local_bias = causal_mask_bias(s, cfg.window_for_kind(1))
+            bias = jnp.where(kind == 1, local_bias, full_bias)
+        else:
+            bias = full_bias
+        out = gqa_scores_softmax_value(q, k, v, bias)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(cd))
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(…, head) int8 quantization over the trailing head_dim.
+
+    x: (..., hd) -> (q int8 (..., hd), scale f32 (...,))."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (b, 1, d_model)
+    cache: dict,  # {'k','v'[, 'k_scale','v_scale']} — int8 cache carries scales
+    cache_len: jax.Array,  # scalar int32: number of valid entries
+    position: jax.Array,  # (b, 1) absolute position (or (3, b, 1) for mrope)
+    kind: jax.Array,  # scalar int (unused in decode; validity via cache_len)
+    ring: bool,
+) -> Tuple[jax.Array, dict]:
+    """One decode step against a (possibly ring-buffered, possibly int8-
+
+    quantized) KV cache. Returns (out (b,1,d_model), new_cache)."""
+    b, _, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    cd = x.dtype
+    S = cache["k"].shape[1]
+
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kvh, hd)
+    v = v.reshape(b, 1, kvh, hd)
+
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, position, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, position, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, position, cfg.rope_theta)
+        k = apply_rope(k, position, cfg.rope_theta)
+
+    slot = jnp.where(ring, cache_len % S, jnp.minimum(cache_len, S - 1))
+    dus = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
+        buf, new.astype(buf.dtype), slot, axis=1
+    )
+    newc = dict(cache)
+    if "k_scale" in cache:  # int8 path
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        newc["k"] = dus(cache["k"], kq)
+        newc["v"] = dus(cache["v"], vq)
+        newc["k_scale"] = dus(cache["k_scale"], ks)
+        newc["v_scale"] = dus(cache["v_scale"], vs)
+        k_full = dequantize_kv(newc["k"], newc["k_scale"], cd)
+        v_full = dequantize_kv(newc["v"], newc["v_scale"], cd)
+    else:
+        newc["k"] = dus(cache["k"], k)
+        newc["v"] = dus(cache["v"], v)
+        k_full = newc["k"].astype(cd)
+        v_full = newc["v"].astype(cd)
+
+    valid = jnp.arange(S) < jnp.minimum(cache_len + 1, S)  # (S,)
+    bias = jnp.where(valid, 0.0, _NEG_INF).astype(jnp.float32)[None, None, None, :]
+    out = gqa_scores_softmax_value(q, k_full, v_full, bias)
+    out = out.reshape(b, 1, h * hd)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(cd)), newc
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    cd = x.dtype
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(cd))
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(cd) * up
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity dispatch (dropless up to the capacity factor)
+# ---------------------------------------------------------------------------
+
+
+def moe_dispatch(
+    expert_ids: jax.Array,  # (T, k) int32
+    num_experts: int,
+    capacity: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Compute scatter destinations for sorted token->expert dispatch.
+
+    Returns (dest (T*k,), keep (T*k,), order (T*k,)) where ``dest`` indexes a
+    flattened (E * C + 1) buffer (the final slot is the drop bin), for tokens
+    in *sorted* order, and ``order`` is the sort permutation over the
+    flattened (T*k,) routed copies.
+    """
+    flat = expert_ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat, stable=True)
+    sorted_ids = flat[order]
+    counts = jnp.bincount(flat, length=num_experts)  # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(flat.shape[0]) - starts[sorted_ids]
+    keep = rank < capacity
+    dest = jnp.where(keep, sorted_ids * capacity + rank, num_experts * capacity)
+    return dest, keep, order
+
+
+def moe_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,  # (b, s, d)
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed MoE FFN, GShard-style *grouped* dispatch.
+
+    Each batch row is its own dispatch group (capacity = cf·s·k/E per row),
+    so every sort/scatter/gather carries the batch dim — the data-parallel
+    sharding of `b` survives through the whole block and no (tokens, d)
+    tensor is ever replicated (see EXPERIMENTS.md §Perf iteration 3).
+    Returns (output, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    cd = x.dtype
+    E, k = cfg.num_experts, cfg.experts_per_token
+    capacity = int(cfg.moe_capacity_factor * s * k / E)
+    capacity = max(4, min(capacity, s))
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (b, s, E)
+    top_w, top_ids = jax.lax.top_k(probs, k)  # (b, s, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- per-row dispatch bookkeeping (every op carries the leading b) ---
+    flat_ids = top_ids.reshape(b, s * k)
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)  # (b, sk)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    counts = jnp.sum(jax.nn.one_hot(flat_ids, E, dtype=jnp.int32), axis=1)  # (b, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]], axis=-1
+    )
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, sorted_ids, axis=-1)
+    keep = rank < capacity
+    dest = jnp.where(keep, sorted_ids * capacity + rank, E * capacity)  # (b, sk)
+    token_of_copy = order // k  # (b, sk)
+
+    # --- scatter into per-row (E·C [+1 drop]) buffers ---
+    from repro.models import shard_hints
+
+    xk = jnp.take_along_axis(x.astype(cd), token_of_copy[..., None], axis=1)  # (b, sk, d)
+    xk = shard_hints.constrain_batch_dim(xk)
+    buf = jnp.zeros((b, E * capacity + 1, d), dtype=cd)
+    buf = jax.vmap(lambda bb, dd, xx: bb.at[dd].set(xx))(buf, dest, xk)
+    buf = shard_hints.constrain_batch_dim(buf)
+    expert_in = buf[:, : E * capacity].reshape(b, E, capacity, d)
+    expert_in = shard_hints.constrain_batch_dim(expert_in)
+
+    # One expert at a time (lax.scan): bounds the FSDP-gathered weight
+    # liveness to a single expert's (d, ff) tiles in fwd AND bwd — without
+    # this the scheduler keeps several full (E, d, ff) gathers alive and
+    # 141B-class MoE trains blow the 16 GB/chip budget.
+    from repro.models.scan_util import scan_or_unroll
+
+    def _one_expert(_, xs):
+        wg, wu, wd, xin = xs  # (d,ff), (d,ff), (ff,d), (b, C, d)
+        g = jnp.einsum("bcd,df->bcf", xin, wg.astype(cd))
+        u = jnp.einsum("bcd,df->bcf", xin, wu.astype(cd))
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+        return None, jnp.einsum("bcf,fd->bcd", a, wd.astype(cd))
+
+    _, expert_out = scan_or_unroll(
+        _one_expert,
+        None,
+        (p["we_gate"], p["we_up"], p["we_down"], jnp.moveaxis(expert_in, 1, 0)),
+    )
+    expert_out = jnp.moveaxis(expert_out, 0, 1)  # (b, E, C, d)
+    expert_out = shard_hints.constrain_batch_dim(expert_out)
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(b, E * capacity, d), jnp.zeros((b, 1, d), dtype=cd)], axis=1
+    )
+    y_copies = jnp.take_along_axis(flat_out, dest[..., None], axis=1)
+    y_copies = shard_hints.constrain_batch_dim(y_copies) * keep[..., None].astype(cd)
+    w_copies = jnp.take_along_axis(top_w.reshape(b, s * k), order, axis=-1).astype(cd)
+    y = jnp.zeros((b, s, d), dtype=jnp.float32)
+    y = jax.vmap(lambda yy, tt, vv: yy.at[tt].add(vv))(
+        y, token_of_copy, (y_copies * w_copies[..., None]).astype(jnp.float32)
+    )
+    y = shard_hints.constrain_batch_dim(y)
+
+    # Switch-style load-balance aux loss.
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_ids[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    return y.astype(cd), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0).astype(compute_dtype)
+
+
+def lm_head_logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    from repro.models import shard_hints
+
+    cd = x.dtype
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cd)  # (V, d)
+        logits = jnp.einsum("...d,vd->...v", x, w)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"].astype(cd))
+    hint = shard_hints.current().logits
+    if hint is not None and logits.ndim != len(hint):
+        hint = None  # spatial-pipeline path: (M, b, s, V) — let GSPMD decide
+    return shard_hints.constrain(logits, hint)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,  # (b, s, V)
+    labels: jax.Array,  # (b, s) int32
+    mask: Optional[jax.Array] = None,  # (b, s) float/bool
+) -> jax.Array:
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,40 @@
+"""Architecture registry: ``--arch <id>`` → (full config, smoke config)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+# arch id -> config module under repro.configs
+ARCHITECTURES: Dict[str, str] = {
+    "mamba2-780m": "mamba2_780m",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "stablelm-12b": "stablelm_12b",
+    "gemma3-12b": "gemma3_12b",
+    "hymba-1.5b": "hymba_1_5b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+
+def _module(arch: str):
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHITECTURES)}")
+    return importlib.import_module(f"repro.configs.{ARCHITECTURES[arch]}")
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = _module(arch)
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def build_model(arch: str, smoke: bool = False) -> Tuple[ModelConfig, object]:
+    """Returns (cfg, module of model functions) — all archs share transformer.py."""
+    from repro.models import transformer
+
+    return get_config(arch, smoke=smoke), transformer

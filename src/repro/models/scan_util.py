@@ -1,0 +1,28 @@
+"""Scan-or-unroll helper shared by the stack and the MoE block.
+
+XLA's cost analysis counts a scan body once (trip count not folded in), so
+the dry-run flips UNROLL to extrapolate exact per-layer costs from small-L
+unrolled lowerings (see repro.launch.dryrun). Runtime always uses lax.scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL = False
+
+
+def scan_or_unroll(body, carry, xs):
+    if not UNROLL:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys

@@ -1,0 +1,59 @@
+"""Optional sharding hints for model internals.
+
+Models stay mesh-agnostic; launchers install hints (PartitionSpecs for the
+few internal tensors whose sharding GSPMD gets wrong at 256+ chips: logits,
+MoE dispatch buffers) via the context manager. ``None`` hints are no-ops,
+so tests and small runs never touch jax sharding machinery.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_local = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardHints:
+    logits: Optional[P] = None  # (b, s, V)
+    moe_buffer: Optional[P] = None  # (E*C+1, d) dispatch buffer
+    activations: Optional[P] = None  # (b, s, d) block boundaries
+
+
+def current() -> ShardHints:
+    return getattr(_local, "hints", None) or ShardHints()
+
+
+@contextlib.contextmanager
+def use_hints(hints: ShardHints):
+    prev = getattr(_local, "hints", None)
+    _local.hints = hints
+    try:
+        yield
+    finally:
+        _local.hints = prev
+
+
+def constrain(x: jax.Array, spec: Optional[P]) -> jax.Array:
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch_dim(x: jax.Array) -> jax.Array:
+    """Pin only the leading (batch) dim to the data axes of the active hints.
+
+    Used for tensors whose trailing dims vary (MoE dispatch buffers): the
+    scatter/gather ops lose GSPMD's batch-dim propagation and would
+    otherwise replicate multi-GB buffers per device."""
+    act = current().activations
+    if act is None or len(act) == 0:
+        return x
+    spec = P(act[0], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

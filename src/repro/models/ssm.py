@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD) mixer used by the `ssm` and `hybrid` families.
+
+The projection is de-fused relative to the reference implementation (separate
+z/x/B/C/dt projections instead of one fused ``in_proj``) — mathematically
+identical, but every weight then has TPU-friendly, mesh-divisible dims.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+
+def rms_norm_gated(y: jax.Array, z: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    """Mamba-2 gated RMSNorm: norm(y * silu(z)) * (1 + w)."""
+    dtype = y.dtype
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    out = y32 * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (batch, seq, ch); w: (K, ch); b: (ch,). Causal depthwise conv1d."""
+    K, ch = w.shape
+    lhs = jnp.moveaxis(x, 1, 2)  # (batch, ch, seq)
+    rhs = jnp.moveaxis(w, 0, 1)[:, None, :]  # (ch, 1, K)
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32),
+        rhs.astype(jnp.float32),
+        window_strides=(1,),
+        padding=[(K - 1, 0)],
+        feature_group_count=ch,
+    )
+    out = jnp.moveaxis(out, 2, 1) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Common z/x/B/C/dt projection. x: (b, s, d)."""
+    cd = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(cd))
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(cd))
+    B = jnp.einsum("bsd,dn->bsn", x, p["in_B"].astype(cd))
+    C = jnp.einsum("bsd,dn->bsn", x, p["in_C"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(cd))
+    return z, xs, B, C, dt_raw
+
+
+def ssm_mixer_train(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence SSD mixer. x: (b, s, d_model) -> (b, s, d_model)."""
+    from repro.kernels import ops  # local import: avoids cycle at module load
+
+    b, s, _ = x.shape
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cd = x.dtype
+
+    z, xs, B, C, dt_raw = _project(cfg, p, x)
+    xs = jax.nn.silu(causal_depthwise_conv(xs, p["conv_x"], p["conv_bx"]).astype(jnp.float32)).astype(cd)
+    B = jax.nn.silu(causal_depthwise_conv(B, p["conv_B"], p["conv_bB"]).astype(jnp.float32)).astype(cd)
+    C = jax.nn.silu(causal_depthwise_conv(C, p["conv_C"], p["conv_bC"]).astype(jnp.float32)).astype(cd)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+
+    xh = xs.reshape(b, s, nh, ph)
+    y, _ = ops.ssd_scan(xh, dt, A, B, C, cfg.ssm_chunk)
+    y = y + p["D"].astype(cd)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+
+    y = rms_norm_gated(y, z, p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+
+def ssm_mixer_prefill(
+    cfg: ModelConfig, p: dict, x: jax.Array
+) -> Tuple[jax.Array, dict]:
+    """Like train, but also returns the decode cache (conv tails + final state)."""
+    from repro.kernels import ops
+
+    b, s, _ = x.shape
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.ssm_conv
+    cd = x.dtype
+
+    z, xs_raw, B_raw, C_raw, dt_raw = _project(cfg, p, x)
+    xs = jax.nn.silu(causal_depthwise_conv(xs_raw, p["conv_x"], p["conv_bx"]).astype(jnp.float32)).astype(cd)
+    B = jax.nn.silu(causal_depthwise_conv(B_raw, p["conv_B"], p["conv_bB"]).astype(jnp.float32)).astype(cd)
+    C = jax.nn.silu(causal_depthwise_conv(C_raw, p["conv_C"], p["conv_bC"]).astype(jnp.float32)).astype(cd)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, s, nh, ph)
+    y, final_state = ops.ssd_scan(xh, dt, A, B, C, cfg.ssm_chunk)
+    y = y + p["D"].astype(cd)[None, None, :, None] * xh
+    y = y.reshape(b, s, di)
+    y = rms_norm_gated(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+    cache = {
+        "conv_x": xs_raw[:, -K:, :].astype(cd),
+        "conv_B": B_raw[:, -K:, :].astype(cd),
+        "conv_C": C_raw[:, -K:, :].astype(cd),
+        "state": final_state.astype(jnp.float32),
+    }
+    return out, cache
+
+
+def _conv_step(buf: jax.Array, new: jax.Array, w: jax.Array, b: jax.Array):
+    """buf: (batch, K, ch) raw inputs; new: (batch, 1, ch). Returns (out (batch, ch), new_buf)."""
+    buf = jnp.concatenate([buf[:, 1:, :], new], axis=1)  # shift-in
+    out = jnp.einsum("bkc,kc->bc", buf.astype(jnp.float32), w.astype(jnp.float32))
+    return (out + b.astype(jnp.float32)).astype(new.dtype), buf
+
+
+def ssm_mixer_decode(
+    cfg: ModelConfig, p: dict, x: jax.Array, cache: dict
+) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: (b, 1, d_model); cache from ``ssm_mixer_prefill``."""
+    from repro.kernels import ops
+
+    b = x.shape[0]
+    di, n, nh, ph = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    cd = x.dtype
+
+    z, xs_raw, B_raw, C_raw, dt_raw = _project(cfg, p, x)
+    xs_c, conv_x = _conv_step(cache["conv_x"], xs_raw, p["conv_x"], p["conv_bx"])
+    B_c, conv_B = _conv_step(cache["conv_B"], B_raw, p["conv_B"], p["conv_bB"])
+    C_c, conv_C = _conv_step(cache["conv_C"], C_raw, p["conv_C"], p["conv_bC"])
+    xs = jax.nn.silu(xs_c.astype(jnp.float32)).astype(cd)
+    B = jax.nn.silu(B_c.astype(jnp.float32)).astype(cd)
+    C = jax.nn.silu(C_c.astype(jnp.float32)).astype(cd)
+
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, nh, ph)
+    y, new_state = ops.ssd_decode_step(xh, dt, A, B, C, cache["state"])
+    y = y + p["D"].astype(cd)[None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rms_norm_gated(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cd))
+
+    new_cache = {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": new_state}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def ssm_param_shapes(cfg: ModelConfig) -> dict:
+    """Shapes for one layer (callers stack a leading L dim)."""
+    d, di, n, nh, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    return {
+        "in_z": (d, di),
+        "in_x": (d, di),
+        "in_B": (d, n),
+        "in_C": (d, n),
+        "in_dt": (d, nh),
+        "conv_x": (K, di),
+        "conv_bx": (di,),
+        "conv_B": (K, n),
+        "conv_bB": (n,),
+        "conv_C": (K, n),
+        "conv_bC": (n,),
+        "dt_bias": (nh,),
+        "A_log": (nh,),
+        "D": (nh,),
+        "gate_norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, num_layers: int, batch: int, dtype) -> dict:
+    di, n, nh, ph, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((num_layers, batch, K, di), dtype=dtype),
+        "conv_B": jnp.zeros((num_layers, batch, K, n), dtype=dtype),
+        "conv_C": jnp.zeros((num_layers, batch, K, n), dtype=dtype),
+        "state": jnp.zeros((num_layers, batch, nh, ph, n), dtype=jnp.float32),
+    }

@@ -1,0 +1,19 @@
+"""Online Continual Learning substrate: streams, metrics, algorithms, baselines."""
+
+from repro.ocl.metrics import online_accuracy, agm, tagm, adaptation_rate_empirical
+from repro.ocl.streams import StreamConfig, make_stream
+from repro.ocl.algorithms import OCLConfig, make_ocl_step
+from repro.ocl.baselines import AdmissionPolicy, make_admission_mask
+
+__all__ = [
+    "online_accuracy",
+    "agm",
+    "tagm",
+    "adaptation_rate_empirical",
+    "StreamConfig",
+    "make_stream",
+    "OCLConfig",
+    "make_ocl_step",
+    "AdmissionPolicy",
+    "make_admission_mask",
+]

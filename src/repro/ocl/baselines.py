@@ -1,0 +1,123 @@
+"""Stream-admission baselines (paper §6.1).
+
+Every method decides *which* stream items get trained and *when*, given the
+arrival interval t^d and per-item training time t^train:
+
+- Oracle      : trains every item with zero delay (ideal upper bound)
+- 1-Skip      : trains one item at a time; items arriving mid-training are
+                dropped [29]
+- Random-N    : buffers the latest B unprocessed items, trains a random N
+- Last-N      : same, trains the newest N
+- Camel       : same, trains a diversity coreset of size N [46]
+                (greedy k-center on raw features — Camel's coreset spirit)
+
+Output: an AdmissionTrace — per item, whether it was trained and its delay
+r^t (∞ if dropped) — which feeds both the sequential trainer and the
+empirical adaptation-rate metric (Def. 4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    method: str = "oracle"  # oracle | one_skip | random_n | last_n | camel
+    buffer: int = 16  # B
+    select: int = 4  # N
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AdmissionTrace:
+    trained_at: np.ndarray  # (R,) float — wall-time the item's update finished (inf = dropped)
+    delays: np.ndarray  # (R,) float — r^t
+    order: List[int]  # training order (indices into the stream)
+
+    @property
+    def admitted(self) -> np.ndarray:
+        return np.isfinite(self.delays)
+
+
+def make_admission_mask(
+    policy: AdmissionPolicy,
+    num_items: int,
+    t_d: float,
+    t_train: float,
+    features: Optional[np.ndarray] = None,  # (R, d) for camel
+) -> AdmissionTrace:
+    rng = np.random.default_rng(policy.seed)
+    arrive = np.arange(num_items) * t_d
+    delays = np.full(num_items, np.inf)
+    done_at = np.full(num_items, np.inf)
+    order: List[int] = []
+
+    if policy.method == "oracle":
+        for i in range(num_items):
+            delays[i] = 0.0
+            done_at[i] = arrive[i]
+            order.append(i)
+        return AdmissionTrace(done_at, delays, order)
+
+    if policy.method == "one_skip":
+        free = 0.0
+        for i in range(num_items):
+            if arrive[i] >= free:
+                start = arrive[i]
+                free = start + t_train
+                delays[i] = free - arrive[i]
+                done_at[i] = free
+                order.append(i)
+        return AdmissionTrace(done_at, delays, order)
+
+    # Buffered policies: every service cycle (N·t_train), select N from the
+    # latest ≤B unprocessed arrivals.
+    B, N = policy.buffer, policy.select
+    cycle = N * t_train
+    t = 0.0
+    next_item = 0
+    pending: List[int] = []
+    while next_item < num_items or pending:
+        # absorb arrivals up to time t
+        while next_item < num_items and arrive[next_item] <= t:
+            pending.append(next_item)
+            next_item += 1
+        pending = pending[-B:]  # only the latest B are kept
+        if not pending:
+            if next_item >= num_items:
+                break
+            t = arrive[next_item]
+            continue
+        if policy.method == "random_n":
+            sel = list(rng.choice(pending, size=min(N, len(pending)), replace=False))
+        elif policy.method == "last_n":
+            sel = pending[-N:]
+        elif policy.method == "camel":
+            sel = _kcenter_select(pending, features, N, rng)
+        else:
+            raise ValueError(policy.method)
+        finish = t + cycle
+        for k, i in enumerate(sorted(sel)):
+            delays[i] = (t + (k + 1) * t_train) - arrive[i]
+            done_at[i] = t + (k + 1) * t_train
+            order.append(i)
+        pending = [i for i in pending if i not in set(sel)]
+        t = finish
+    return AdmissionTrace(done_at, delays, order)
+
+
+def _kcenter_select(pending: List[int], features: Optional[np.ndarray], N: int, rng):
+    if features is None:
+        return pending[-N:]
+    pts = features[pending]
+    chosen = [int(rng.integers(0, len(pending)))]
+    dists = np.linalg.norm(pts - pts[chosen[0]], axis=-1)
+    while len(chosen) < min(N, len(pending)):
+        nxt = int(np.argmax(dists))
+        chosen.append(nxt)
+        dists = np.minimum(dists, np.linalg.norm(pts - pts[nxt], axis=-1))
+    return [pending[i] for i in chosen]

@@ -1,0 +1,50 @@
+"""OCL evaluation metrics (paper §2 / §6.1).
+
+- online accuracy  oacc_A(t) = Σ_{i≤t} acc(y^i, ŷ^i) / t        [11]
+- agm  = log(exp(oacc_A − oacc_B) / (M_A / M_B))                 (Eq. 18)
+- tagm = log(exp(tacc_A − tacc_B) / (M_A / M_B))                 (Eq. 17)
+- empirical adaptation rate R_A^T = Σ_t e^{-c r_A^t} V_{D^t} / T (Def. 4.1)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+def online_accuracy(per_item_acc: Sequence[float]) -> float:
+    """Running mean of pre-update prediction accuracy over the stream."""
+    a = np.asarray(per_item_acc, dtype=np.float64)
+    return float(a.mean()) if a.size else 0.0
+
+
+def online_accuracy_curve(per_item_acc: Sequence[float]) -> np.ndarray:
+    a = np.asarray(per_item_acc, dtype=np.float64)
+    return np.cumsum(a) / np.arange(1, a.size + 1)
+
+
+def agm(oacc_a: float, oacc_b: float, mem_a: float, mem_b: float) -> float:
+    """Eq. 18: Online Accuracy Gain per unit of Memory (higher is better).
+
+    Accuracies in the same units the paper uses (percentage points)."""
+    return math.log(math.exp(oacc_a - oacc_b) / (mem_a / mem_b))
+
+
+def tagm(tacc_a: float, tacc_b: float, mem_a: float, mem_b: float) -> float:
+    """Eq. 17: Test Accuracy Gain per unit of Memory."""
+    return math.log(math.exp(tacc_a - tacc_b) / (mem_a / mem_b))
+
+
+def adaptation_rate_empirical(
+    delays: Sequence[float], c: float = 1.0, values: Sequence[float] | None = None
+) -> float:
+    """Def. 4.1 with measured per-item processing delays r_A^t.
+
+    delays: seconds from arrival to the parameter update that consumed the
+    item; +inf (or np.inf) for discarded items."""
+    d = np.asarray(delays, dtype=np.float64)
+    v = np.ones_like(d) if values is None else np.asarray(values, dtype=np.float64)
+    contrib = np.where(np.isinf(d), 0.0, np.exp(-c * d) * v)
+    return float(contrib.sum() / max(d.size, 1))

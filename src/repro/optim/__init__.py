@@ -1,0 +1,15 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.compression import (
+    CompressionConfig,
+    compress_gradients,
+    init_error_feedback,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "sgd",
+    "CompressionConfig",
+    "compress_gradients",
+    "init_error_feedback",
+]

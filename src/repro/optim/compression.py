@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod data-parallel reduction.
+
+At 512+ chips the DP all-reduce of full fp32 gradients dominates the
+collective term of the roofline. Two standard compressors with
+error-feedback (so compression error is re-injected next step and the
+method stays convergent):
+
+- top-k sparsification (keep the k largest-magnitude entries per leaf)
+- int8 stochastic-free linear quantization (per-leaf scale)
+
+Both are pure functions: compress -> (to-be-reduced tensor, new residual).
+The launcher applies them *before* ``psum`` so the wire format is what is
+actually reduced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "none"  # none | topk | int8
+    topk_frac: float = 0.01  # fraction of entries kept per leaf
+    min_leaf_size: int = 4096  # smaller leaves pass through uncompressed
+
+
+def init_error_feedback(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _topk_leaf(g: jax.Array, resid: jax.Array, frac: float, min_size: int):
+    g32 = g.astype(jnp.float32) + resid
+    n = g.size
+    if n < min_size:
+        return g32, jnp.zeros_like(g32)
+    k = max(1, int(n * frac))
+    flat = g32.reshape(-1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = (jnp.abs(flat) >= thresh).astype(jnp.float32)
+    kept = (flat * mask).reshape(g32.shape)
+    return kept, g32 - kept
+
+
+def _int8_leaf(g: jax.Array, resid: jax.Array, min_size: int):
+    g32 = g.astype(jnp.float32) + resid
+    if g.size < min_size:
+        return g32, jnp.zeros_like(g32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g32 - deq
+
+
+def compress_gradients(
+    cfg: CompressionConfig, grads: Pytree, residual: Pytree
+) -> Tuple[Pytree, Pytree]:
+    """Returns (compressed_grads, new_residual). ``none`` passes through."""
+    if cfg.method == "none":
+        return grads, residual
+    if cfg.method == "topk":
+        out = jax.tree.map(
+            lambda g, r: _topk_leaf(g, r, cfg.topk_frac, cfg.min_leaf_size), grads, residual
+        )
+    elif cfg.method == "int8":
+        out = jax.tree.map(lambda g, r: _int8_leaf(g, r, cfg.min_leaf_size), grads, residual)
+    else:
+        raise ValueError(f"unknown compression {cfg.method!r}")
+    is_pair = lambda t: isinstance(t, tuple)
+    comp = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_resid = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return comp, new_resid

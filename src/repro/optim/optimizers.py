@@ -1,0 +1,93 @@
+"""Pytree optimizers (self-contained; no optax in the container).
+
+The interface mirrors optax but supports Ferret's per-stage partial
+updates: an Optimizer is a pair of pure functions over arbitrary pytrees,
+so each pipeline stage can carry its own optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
+    # update(params, grads, state) -> (new_params, new_state)
+
+
+class AdamWState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jax.Array
+
+
+def adamw(
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+) -> Optimizer:
+    def init(params: Pytree) -> AdamWState:
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(mu=zeros(), nu=zeros(), count=jnp.zeros((), jnp.int32))
+
+    def update(params: Pytree, grads: Pytree, state: AdamWState):
+        if grad_clip > 0.0:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        b1c = 1.0 - b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / b1c
+            vhat = v / b2c
+            step = lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+        out = jax.tree.map(leaf, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(new_mu, new_nu, count)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    momentum: Pytree
+
+
+def sgd(lr: float = 1e-3, momentum: float = 0.0) -> Optimizer:
+    def init(params: Pytree) -> SGDState:
+        return SGDState(
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        )
+
+    def update(params: Pytree, grads: Pytree, state: SGDState):
+        def leaf(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        out = jax.tree.map(leaf, params, grads, state.momentum)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, SGDState(new_m)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,4 @@
+from repro.runtime.supervisor import Supervisor, SupervisorCfg
+from repro.runtime.elastic import ElasticPlanner
+
+__all__ = ["Supervisor", "SupervisorCfg", "ElasticPlanner"]

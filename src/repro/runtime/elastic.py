@@ -1,0 +1,70 @@
+"""Elastic scaling: resource changes re-enter the paper's own planner.
+
+A device/host loss (or gain) changes two planner inputs:
+  1. the per-chip memory budget share M, and
+  2. the per-layer profile (per-chip t^f/t^b scale with the TP degree).
+
+Ferret's bi-level planner (Alg. 2+3) was built to answer exactly the
+question "best pipeline under memory budget M", so elasticity is a
+re-plan + checkpoint-restore: no bespoke rebalancing logic. This is the
+paper's memory-adaptivity claim operationalized as fault tolerance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import planner as planner_lib
+from repro.core.profiler import ModelProfile, analytic_profile
+from repro.models.config import ModelConfig
+
+HBM_PER_CHIP = 16 * 2**30  # TPU v5e
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    chips: int
+    hbm_per_chip: int = HBM_PER_CHIP
+
+    @property
+    def total_hbm(self) -> int:
+        return self.chips * self.hbm_per_chip
+
+
+class ElasticPlanner:
+    """Re-plans the pipeline when the cluster shrinks or grows."""
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        batch: int,
+        seq: int,
+        decay_c: float = 1.0,
+        memory_fraction: float = 0.9,  # budget headroom for runtime buffers
+        max_workers: Optional[int] = 8,
+    ):
+        self.model_cfg = model_cfg
+        self.batch = batch
+        self.seq = seq
+        self.decay_c = decay_c
+        self.memory_fraction = memory_fraction
+        self.max_workers = max_workers
+
+    def profile_for(self, cluster: ClusterSpec) -> ModelProfile:
+        return analytic_profile(self.model_cfg, self.batch, self.seq, chips=cluster.chips)
+
+    def replan(self, cluster: ClusterSpec) -> planner_lib.Plan:
+        profile = self.profile_for(cluster)
+        t_d = planner_lib.default_data_interval(profile)
+        budget = self.memory_fraction * cluster.total_hbm
+        return planner_lib.plan(
+            profile, t_d, budget, c=self.decay_c, max_workers=self.max_workers
+        )
+
+    def degradation(self, before: planner_lib.Plan, after: planner_lib.Plan) -> float:
+        """Fractional adaptation-rate loss from the resource change."""
+        if before.rate <= 0:
+            return 0.0
+        return max(0.0, 1.0 - after.rate / before.rate)

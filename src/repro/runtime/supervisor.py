@@ -1,0 +1,128 @@
+"""Fault-tolerant step-loop supervisor.
+
+Wraps any jitted step function with the failure handling a 1000-node OCL
+deployment needs:
+
+- **NaN/Inf detection**  — a poisoned update (bad batch, numeric blow-up,
+  silent data corruption — SDC) triggers a rollback to the last checkpoint
+  instead of propagating garbage into the stream-serving model.
+- **Timeout / crash detection** — steps that exceed a deadline count as
+  failures (on a real pod: a missing heartbeat from a host). After
+  ``max_retries`` consecutive failures the supervisor escalates to the
+  elastic planner (runtime/elastic.py) to re-plan on fewer resources.
+- **Straggler mitigation is admission control** — uniquely for OCL, a slow
+  step does not stall the system: the data pipeline's bounded queue drops
+  stale items (the paper's 1-Skip semantics), so the supervisor only has to
+  keep the *model* healthy, not the stream. The dropped count is reported
+  per step for the adaptation-rate accounting.
+- **Exactly-once stream consumption** — the stream cursor rides inside the
+  checkpoint extras; a restart resumes the source where the checkpoint
+  left it, so no item is silently skipped or double-trained.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.checkpoint import CheckpointManager
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorCfg:
+    checkpoint_dir: str
+    checkpoint_every: int = 100
+    keep: int = 3
+    step_timeout_s: float = 300.0
+    max_retries: int = 3
+    nan_check_every: int = 10  # device->host sync cadence for the NaN probe
+
+
+@dataclasses.dataclass
+class StepReport:
+    step: int
+    loss: float
+    restarted: bool
+    dropped_items: int
+    duration_s: float
+
+
+class Supervisor:
+    def __init__(
+        self,
+        cfg: SupervisorCfg,
+        step_fn: Callable,  # (state, batch) -> (state, metrics dict with 'loss')
+        init_state: Pytree,
+        on_fatal: Optional[Callable] = None,  # escalate to elastic re-plan
+    ):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = init_state
+        self.on_fatal = on_fatal
+        self.manager = CheckpointManager(
+            cfg.checkpoint_dir, keep=cfg.keep, every_steps=cfg.checkpoint_every
+        )
+        self.step = 0
+        self.failures = 0
+
+    # ------------------------------------------------------------------
+    def try_restore(self, extras_hook: Optional[Callable[[Dict], None]] = None) -> bool:
+        try:
+            state, step, extras = self.manager.restore_latest(self.state)
+        except FileNotFoundError:
+            return False
+        self.state = state
+        self.step = step
+        if extras_hook:
+            extras_hook(extras)
+        return True
+
+    # ------------------------------------------------------------------
+    def run_step(self, batch: Dict, extras: Optional[Dict] = None, dropped: int = 0) -> StepReport:
+        t0 = time.time()
+        restarted = False
+        for attempt in range(self.cfg.max_retries + 1):
+            try:
+                new_state, metrics = self.step_fn(self.state, batch)
+                loss = metrics["loss"]
+                if self.step % self.cfg.nan_check_every == 0:
+                    loss_val = float(jax.device_get(loss))
+                    if not np.isfinite(loss_val):
+                        raise FloatingPointError(f"non-finite loss {loss_val} @ step {self.step}")
+                else:
+                    loss_val = float("nan")  # not synced this step
+                dt = time.time() - t0
+                if dt > self.cfg.step_timeout_s:
+                    raise TimeoutError(f"step took {dt:.1f}s > {self.cfg.step_timeout_s}s")
+                # success
+                self.state = new_state
+                self.step += 1
+                self.failures = 0
+                if self.manager.should_save(self.step):
+                    self.manager.save_async(self.step, self.state, extras)
+                return StepReport(self.step, loss_val, restarted, dropped, dt)
+            except (FloatingPointError, TimeoutError) as e:
+                self.failures += 1
+                restarted = True
+                if self.failures > self.cfg.max_retries:
+                    if self.on_fatal is not None:
+                        self.on_fatal(e)
+                    raise
+                # rollback: restore last good checkpoint (or keep state if none)
+                try:
+                    self.state, self.step, _ = self.manager.restore_latest(self.state)
+                except FileNotFoundError:
+                    pass  # no checkpoint yet: retry from current state
+        raise RuntimeError("unreachable")
+
+    # ------------------------------------------------------------------
+    def finalize(self, extras: Optional[Dict] = None) -> None:
+        self.manager.save_async(self.step, self.state, extras)
+        self.manager.wait()

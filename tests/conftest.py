@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device sharding tests spawn subprocesses that set the flag first."""
+
+import dataclasses
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def smoke_cfg(arch: str, **overrides):
+    from repro.models.registry import get_config
+
+    cfg = get_config(arch, smoke=True)
+    defaults = dict(compute_dtype="float32", moe_capacity_factor=8.0)
+    defaults.update(overrides)
+    return dataclasses.replace(cfg, **defaults)

@@ -1,0 +1,141 @@
+"""Cost-model (Eq. 3/4, S1–S4) and planner (Alg. 2/3) properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import planner
+from repro.core.profiler import LayerProfile, ModelProfile
+
+
+def _profile(num_layers=8, t_f=1.0, t_b=2.0, w=100, a=50, a_int=30, batch=1, seq=8):
+    layers = [LayerProfile(t_f, t_b, w, a, a_int) for _ in range(num_layers)]
+    return ModelProfile(layers=layers, embed_bytes=0, batch=batch, seq=seq)
+
+
+def _default_config(P, N=2):
+    return cm.PipelineConfig(
+        workers=[
+            cm.WorkerConfig(delay=n, recompute=0, stages=[cm.StageKnobs() for _ in range(P)])
+            for n in range(N)
+        ]
+    )
+
+
+def test_memory_formula_matches_paper_counts():
+    """Eq. 4 copies: stage i holds (1 + ⌈(P-i-1)/c^a⌉ - c^o) copies."""
+    prof = _profile(num_layers=4)
+    part = cm.Partition((0, 1, 2, 3, 4))
+    stats = cm.stage_stats(prof, part)
+    cfg = _default_config(4, N=1)
+    mem = cm.memory_footprint(stats, cfg)
+    per = stats.w[0] + stats.a[0]
+    expected = sum((1 + (4 - i - 1)) * per for i in range(4))
+    assert mem == pytest.approx(expected)
+
+
+def test_s3_reduces_copies_to_one():
+    prof = _profile(num_layers=4)
+    stats = cm.stage_stats(prof, cm.Partition((0, 1, 2, 3, 4)))
+    w = cm.WorkerConfig(0, 0, [cm.StageKnobs() for _ in range(4)])
+    # exhaust T2 on stage 0 so S3 becomes eligible
+    while cm.s2_accum_increment(4, 0, w.stages[0].accum) is not None:
+        w.stages[0].accum += cm.s2_accum_increment(4, 0, w.stages[0].accum)
+    r3 = cm.delta_s3(stats, w, 0)
+    assert r3 is not None
+    _, _, trial = r3
+    assert trial.stages[0].omit == 3 and trial.stages[0].accum == 1
+    assert cm._stage_copies(4, 0, trial.stages[0]) == 1
+
+
+def test_deltas_equal_recompute_diffs():
+    """Closed-form deltas (Eq. 19-22 semantics) = recompute diffs of Eq. 3/4."""
+    prof = _profile(num_layers=6)
+    stats = cm.stage_stats(prof, cm.Partition((0, 2, 4, 6)))
+    w = cm.WorkerConfig(0, 0, [cm.StageKnobs() for _ in range(3)])
+    for fn in (lambda: cm.delta_s1(stats, w), lambda: cm.delta_s2(stats, w, 0)):
+        res = fn()
+        assert res is not None
+        dR, dM, trial = res
+        assert dR == pytest.approx(
+            cm.worker_rate(stats, w) - cm.worker_rate(stats, trial)
+        )
+        assert dM == pytest.approx(
+            cm.worker_memory(stats, w) - cm.worker_memory(stats, trial)
+        )
+
+
+def test_recompute_trades_memory_for_rate():
+    """S1 (T1): memory strictly drops, adaptation rate strictly drops."""
+    prof = _profile(num_layers=6)
+    stats = cm.stage_stats(prof, cm.Partition((0, 2, 4, 6)))
+    w = cm.WorkerConfig(0, 0, [cm.StageKnobs() for _ in range(3)])
+    dR, dM, _ = cm.delta_s1(stats, w)
+    assert dM > 0 and dR > 0
+
+
+def test_s4_requires_all_omitted():
+    prof = _profile(num_layers=4)
+    stats = cm.stage_stats(prof, cm.Partition((0, 2, 4)))
+    w = cm.WorkerConfig(0, 0, [cm.StageKnobs() for _ in range(2)])
+    assert cm.delta_s4(stats, w) is None
+    w.stages[0].omit = 1
+    r = cm.delta_s4(stats, w)
+    assert r is not None
+    assert r[1] == pytest.approx(cm.worker_memory(stats, w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    L=st.integers(2, 12),
+    budget_frac=st.floats(0.02, 1.0),
+    tf=st.floats(0.5, 3.0),
+    tb_ratio=st.floats(1.0, 3.0),
+    c=st.floats(0.01, 2.0),
+)
+def test_planner_respects_budget(L, budget_frac, tf, tb_ratio, c):
+    """Property: Alg. 3 output satisfies M_F ≤ M whenever marked feasible."""
+    prof = _profile(num_layers=L, t_f=tf, t_b=tf * tb_ratio)
+    t_d = planner.default_data_interval(prof)
+    unconstrained = planner.plan(prof, t_d, budget=math.inf, c=c, max_workers=4)
+    budget = unconstrained.memory * budget_frac
+    p = planner.plan(prof, t_d, budget=budget, c=c, max_workers=4)
+    if p.feasible:
+        assert p.memory <= budget * (1 + 1e-9)
+    assert p.rate <= unconstrained.rate * (1 + 1e-9)
+    # partition is contiguous and covers all layers
+    b = list(p.partition.bounds)
+    assert b[0] == 0 and b[-1] == L and all(x < y for x, y in zip(b, b[1:]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(L=st.integers(2, 8), seed=st.integers(0, 100))
+def test_planner_rate_monotone_in_budget(L, seed):
+    """More memory never hurts the planned adaptation rate."""
+    rng = np.random.default_rng(seed)
+    prof = _profile(num_layers=L, t_f=float(rng.uniform(0.5, 2)), t_b=float(rng.uniform(1, 4)))
+    t_d = planner.default_data_interval(prof)
+    m_plus = planner.plan(prof, t_d, budget=math.inf, max_workers=4)
+    rates = []
+    for frac in (0.1, 0.3, 0.6, 1.0):
+        p = planner.plan(prof, t_d, budget=m_plus.memory * frac, max_workers=4)
+        rates.append(p.rate)
+    assert all(a <= b + 1e-9 for a, b in zip(rates, rates[1:]))
+
+
+def test_itersearch_infeasible_flag():
+    prof = _profile(num_layers=4)
+    stats = cm.stage_stats(prof, cm.Partition((0, 1, 2, 3, 4)))
+    cfg, rate, mem, ok = planner.itersearch(stats, t_d=1.0, c_r=0, budget=1.0)
+    assert not ok or mem <= 1.0
+    # with budget 1 byte everything must be removed -> rate 0 (still "searchable")
+    assert rate >= 0.0
+
+
+def test_lcm_tail():
+    stages = [cm.StageKnobs(omit=o) for o in (1, 2, 0)]
+    assert cm._lcm_tail(stages, 0) == math.lcm(2, 3, 1)
+    assert cm._lcm_tail(stages, 2) == 1

@@ -1,0 +1,172 @@
+"""Pallas kernel validation: hypothesis shape/dtype sweeps vs ref.py oracles.
+
+Kernels execute under interpret=True on CPU (the TPU path is the same body).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.iter_fisher import (
+    iter_fisher_compensate_pallas,
+    iter_fisher_leaf_stats_pallas,
+)
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+# ---------------------------------------------------------------------------
+# iter_fisher
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(3, 4500),
+    tau=st.integers(1, 6),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_iter_fisher_compensate_matches_ref(n, tau, dtype, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n,)), jnp.dtype(dtype))
+    d = jnp.asarray(rng.normal(size=(tau, n)) * 0.01, jnp.dtype(dtype))
+    lam = jnp.asarray(0.2, jnp.float32)
+    want = ref.iter_fisher_compensate_ref(g, d, lam)
+    got = iter_fisher_compensate_pallas(g, d, lam, interpret=True)
+    tol = 1e-6 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.sampled_from([(128,), (513,), (32, 33), (4, 8, 130)]),
+    alpha=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**16),
+)
+def test_iter_fisher_stats_matches_ref(shape, alpha, seed):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    g, d, vr, va = mk(), mk(), mk(), mk()
+    want = ref.iter_fisher_leaf_stats_ref(g, d, vr, va, alpha)
+    got = iter_fisher_leaf_stats_pallas(g, d, vr, va, alpha, interpret=True)
+    for a, b in zip(want, got):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=1e-4, atol=1e-4)
+
+
+def test_iter_fisher_zero_delta_is_identity():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(300,)), jnp.float32)
+    d = jnp.zeros((4, 300), jnp.float32)
+    out = iter_fisher_compensate_pallas(g, d, jnp.asarray(0.5), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nc=st.integers(1, 4),
+    h=st.integers(1, 4),
+    p=st.sampled_from([8, 16, 64]),
+    n=st.sampled_from([8, 16, 128]),
+    Q=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_ssd_kernel_matches_ref(b, nc, h, p, n, Q, seed):
+    l = nc * Q
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(b, h, p, n)) * 0.1, jnp.float32)
+    y_ref, s_ref = ref.ssd_scan_ref(x, dt, A, B, C, Q, s0)
+    y_k, s_k = ssd_scan_pallas(x, dt, A, B, C, Q, s0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref), rtol=3e-5, atol=3e-5)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked kernel == exact token-by-token recurrence (ground truth)."""
+    b, l, h, p, n, Q = 2, 32, 3, 8, 16, 8
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(b, l, h, p))
+    dt = rng.uniform(0.001, 0.2, size=(b, l, h))
+    A = -rng.uniform(0.5, 2.0, size=(h,))
+    B = rng.normal(size=(b, l, n))
+    C = rng.normal(size=(b, l, n))
+    y_k, s_k = ssd_scan_pallas(
+        *(jnp.asarray(a, jnp.float32) for a in (x, dt, A, B, C)), Q, None, interpret=True
+    )
+    s = np.zeros((b, h, p, n))
+    ys = np.zeros((b, l, h, p))
+    for t in range(l):
+        dA = np.exp(dt[:, t] * A)
+        s = s * dA[:, :, None, None] + np.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
+        ys[:, t] = np.einsum("bhpn,bn->bhp", s, C[:, t])
+    np.testing.assert_allclose(np.asarray(y_k), ys, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), s, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_step_continues_scan():
+    """Prefill final state + decode step == scan over s+1 tokens."""
+    b, l, h, p, n, Q = 1, 16, 2, 8, 8, 8
+    rng = np.random.default_rng(2)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    x, B, C = mk(b, l + 1, h, p), mk(b, l + 1, n), mk(b, l + 1, n)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(b, l + 1, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+    y_all, s_all = ref.ssd_scan_ref(x, dt, A, B, C, chunk=l + 1)
+    _, s_pre = ref.ssd_scan_ref(x[:, :l], dt[:, :l], A, B[:, :l], C[:, :l], chunk=Q)
+    y_dec, s_dec = ref.ssd_decode_step_ref(
+        x[:, l], dt[:, l], A, B[:, l], C[:, l], s_pre
+    )
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_all[:, l]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_dec), np.asarray(s_all), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (custom VJP) — values AND gradients vs dense oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    s=st.sampled_from([32, 64, 96]),
+    heads=st.sampled_from([(4, 2), (4, 4), (8, 2)]),
+    d=st.sampled_from([8, 16]),
+    window=st.sampled_from([None, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_fwd_bwd_matches_dense(b, s, heads, d, window, seed):
+    from repro.models.flash import flash_gqa_attention
+    from repro.models.layers import causal_mask_bias, gqa_scores_softmax_value
+
+    h, kv = heads
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    weff = jnp.asarray(window if window else s + 100, jnp.int32)
+    probe = jnp.cos(jnp.arange(d, dtype=jnp.float32))
+
+    def f_flash(q, k, v):
+        return jnp.sum(flash_gqa_attention(q, k, v, weff, 32) * probe)
+
+    def f_dense(q, k, v):
+        return jnp.sum(gqa_scores_softmax_value(q, k, v, causal_mask_bias(s, window)) * probe)
+
+    np.testing.assert_allclose(float(f_flash(q, k, v)), float(f_dense(q, k, v)), rtol=1e-4)
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gd):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,139 @@
+"""OCL substrate: metrics, streams, replay, admission baselines."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ocl import metrics
+from repro.ocl.algorithms import OCLConfig, ReplayBuffer, mix_replay_into_stream
+from repro.ocl.baselines import AdmissionPolicy, make_admission_mask
+from repro.ocl.streams import StreamConfig, make_stream
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_agm_matches_eq18():
+    # agm = log(exp(oacc_A - oacc_B) / (M_A / M_B))
+    val = metrics.agm(0.8, 0.5, 2.0, 1.0)
+    assert val == pytest.approx((0.8 - 0.5) - math.log(2.0))
+
+
+def test_agm_baseline_is_zero():
+    assert metrics.agm(0.5, 0.5, 3.0, 3.0) == pytest.approx(0.0)
+
+
+def test_adaptation_rate_discounts_delay_and_drops():
+    r = metrics.adaptation_rate_empirical([0.0, 1.0, np.inf], c=1.0)
+    assert r == pytest.approx((1.0 + math.exp(-1.0) + 0.0) / 3)
+
+
+# ---------------------------------------------------------------------------
+# streams
+# ---------------------------------------------------------------------------
+
+
+def test_token_stream_shapes_and_determinism():
+    cfg = StreamConfig(kind="drift", modality="tokens", length=16, batch=2, vocab=32, seq=8)
+    s1, s2 = make_stream(cfg), make_stream(cfg)
+    assert s1["tokens"].shape == (16, 2, 8)
+    np.testing.assert_array_equal(s1["tokens"], s2["tokens"])
+    assert s1["tokens"].max() < 32
+
+
+def test_split_stream_partitions_classes():
+    cfg = StreamConfig(kind="split", modality="vectors", length=100, batch=1,
+                       num_classes=10, num_tasks=5)
+    s = make_stream(cfg)
+    first = set(np.unique(s["labels"][:20]))
+    last = set(np.unique(s["labels"][-20:]))
+    assert first.isdisjoint(last)
+
+
+def test_drift_stream_rotates_distribution():
+    cfg = StreamConfig(kind="drift", modality="vectors", length=400, batch=4,
+                       drift_rate=0.02, noise=0.01)
+    s = make_stream(cfg)
+    # class-0 mean early vs late should differ (prototypes rotated)
+    m0 = s["x"][:50][s["labels"][:50] == 0].mean(0)
+    m1 = s["x"][-50:][s["labels"][-50:] == 0].mean(0)
+    assert np.linalg.norm(m0 - m1) > 0.05
+
+
+# ---------------------------------------------------------------------------
+# replay buffer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(cap=st.integers(2, 32), n=st.integers(1, 200))
+def test_reservoir_capacity_and_coverage(cap, n):
+    buf = ReplayBuffer(cap, seed=0)
+    for i in range(n):
+        buf.add({"x": np.asarray([i])})
+    assert len(buf) == min(cap, n)
+    assert buf.seen == n
+
+
+def test_mix_replay_marks_new_rows():
+    stream = {
+        "tokens": np.zeros((10, 2, 4), np.int32),
+        "labels": np.zeros((10, 2, 4), np.int32),
+    }
+    mixed = mix_replay_into_stream(stream, OCLConfig(method="er", replay_batch=3))
+    assert mixed["tokens"].shape == (10, 5, 4)
+    np.testing.assert_array_equal(mixed["new_mask"][:, :2], 1.0)
+    np.testing.assert_array_equal(mixed["new_mask"][:, 2:], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# admission baselines
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_admits_everything_with_zero_delay():
+    tr = make_admission_mask(AdmissionPolicy("oracle"), 20, t_d=1.0, t_train=5.0)
+    assert tr.admitted.all()
+    np.testing.assert_array_equal(tr.delays, 0.0)
+
+
+def test_one_skip_drops_items_when_training_is_slow():
+    # t_train = 3 t_d  → roughly 1/3 of items admitted
+    tr = make_admission_mask(AdmissionPolicy("one_skip"), 30, t_d=1.0, t_train=3.0)
+    assert 8 <= tr.admitted.sum() <= 12
+    # no two trainings overlap
+    done = tr.trained_at[np.isfinite(tr.trained_at)]
+    assert np.all(np.diff(np.sort(done)) >= 3.0 - 1e-9)
+
+
+def test_one_skip_admits_everything_when_fast():
+    tr = make_admission_mask(AdmissionPolicy("one_skip"), 30, t_d=1.0, t_train=0.5)
+    assert tr.admitted.all()
+
+
+def test_last_n_prefers_recent():
+    tr = make_admission_mask(AdmissionPolicy("last_n", buffer=8, select=2), 40, 1.0, 2.0)
+    admitted = np.where(tr.admitted)[0]
+    assert len(admitted) > 0
+    # buffered policies never train more than the arrival rate allows
+    assert len(admitted) <= 40
+
+
+def test_camel_selects_diverse_coreset():
+    rng = np.random.default_rng(0)
+    # two tight clusters: k-center should pick from both
+    feats = np.concatenate([rng.normal(0, 0.01, (20, 4)), rng.normal(5, 0.01, (20, 4))])
+    order = rng.permutation(40)
+    feats = feats[order]
+    tr = make_admission_mask(
+        AdmissionPolicy("camel", buffer=40, select=2), 40, t_d=1.0, t_train=10.0,
+        features=feats,
+    )
+    sel = np.where(tr.admitted)[0]
+    if len(sel) >= 2:
+        norms = np.linalg.norm(feats[sel] - feats[sel][0], axis=1)
+        assert norms.max() > 2.0  # spans both clusters

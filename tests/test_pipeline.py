@@ -1,0 +1,205 @@
+"""Pipeline engine: schedule correctness + learning-dynamics equivalences."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_cfg
+from repro.core import compensation as comp
+from repro.core import pipeline as pl
+from repro.core import schedule as sch
+from repro.core.cost_model import PipelineConfig, StageKnobs, WorkerConfig
+from repro.models import transformer as T
+from repro.optim.optimizers import sgd
+
+
+def _stream(cfg, rng, R, b=2, s=8):
+    toks = jax.random.randint(rng, (R, b, s + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :, :-1], "labels": toks[:, :, 1:]}
+
+
+def _pcfg(P, N=1, accum=1, omit=0, removed=()):
+    ws = []
+    for n in range(N):
+        ws.append(
+            WorkerConfig(
+                delay=-1 if n in removed else n,
+                recompute=0,
+                stages=[StageKnobs(accum=accum, omit=omit) for _ in range(P)],
+            )
+        )
+    return PipelineConfig(workers=ws)
+
+
+# ---------------------------------------------------------------------------
+# schedule properties
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_staleness_matches_pipeline_depth():
+    s = sch.build_schedule(_pcfg(4), 4, 40)
+    pops = s.pop_slot >= 0
+    # stage P-1 updates fresh, stage 0 is (P-1) stale at steady state
+    for j in range(4):
+        taus = s.tau[pops[:, j], j]
+        if len(taus) > 2:
+            assert taus.max() <= 4 - 1 - j
+            assert taus[2:].min() >= 0
+
+
+def test_schedule_accumulation_reduces_updates():
+    s1 = sch.build_schedule(_pcfg(2), 2, 40)
+    s2 = sch.build_schedule(_pcfg(2, accum=4), 2, 40)
+    assert (s2.pop_slot >= 0).sum() < (s1.pop_slot >= 0).sum()
+
+
+def test_schedule_omission_skips_backward():
+    s = sch.build_schedule(_pcfg(2, omit=1), 2, 40)
+    # with c_o=1, half the items skip backward at each stage
+    assert s.backward[:, 0].sum() == 20
+
+
+def test_schedule_worker_removal_drops_items():
+    s = sch.build_schedule(_pcfg(2, N=2, removed=(1,)), 2, 40)
+    assert s.process.sum() == 20
+    assert s.stats()["admitted"] == 20
+
+
+def test_delta_ring_order_is_oldest_first():
+    """Ground truth: replay the schedule and check gathered Δ ordering."""
+    P, R = 3, 30
+    s = sch.build_schedule(_pcfg(P), P, R)
+    K = s.delta_ring
+    # simulate: each update u of stage j writes value u at slot u%K
+    upd = [0] * P
+    for m in range(R):
+        for j in range(P):
+            if s.pop_slot[m, j] >= 0:
+                slot = s.delta_push_slot[m, j]
+                assert slot == upd[j] % K
+                # engine gathers (slot + i) % K as oldest→newest
+                tau = s.tau[m, j]
+                assert tau <= K
+                upd[j] += 1
+
+
+# ---------------------------------------------------------------------------
+# engine equivalences
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = smoke_cfg("h2o-danube-1.8b", num_layers=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_p1_sync_equals_sequential_sgd(tiny, rng):
+    cfg, params = tiny
+    R = 10
+    stream = _stream(cfg, rng, R)
+
+    opt = sgd(lr=1e-2)
+    p_ref, st = params, sgd(lr=1e-2).init(params)
+    for m in range(R):
+        batch = {k: v[m] for k, v in stream.items()}
+        g = jax.grad(lambda p: T.loss_fn(cfg, p, batch)[0])(p_ref)
+        p_ref, st = opt.update(p_ref, g, st)
+
+    boundaries = [0, cfg.num_layers]
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    schedule = sch.build_schedule(_pcfg(1), 1, R, sync_period=1)
+    eng = pl.FerretEngine(staged, schedule, sgd(lr=1e-2), comp.CompensationConfig(method="none"))
+    state = eng.init_state(T.split_stage_params(cfg, params, boundaries))
+    final, ys = eng.run(state, stream)
+    p_eng = T.merge_stage_params(cfg, list(final[0]))
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_eng)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_sync_period_k_equals_accumulated_sgd(tiny, rng):
+    """DAPPLE-style flush: update every K items with the mean gradient,
+    all grads evaluated at the group-start parameters."""
+    cfg, params = tiny
+    R, K = 8, 4
+    stream = _stream(cfg, rng, R)
+
+    opt = sgd(lr=1e-2)
+    p_ref, st = params, opt.init(params)
+    for g0 in range(0, R, K):
+        acc = None
+        for m in range(g0, g0 + K):
+            batch = {k: v[m] for k, v in stream.items()}
+            g = jax.grad(lambda p: T.loss_fn(cfg, p, batch)[0])(p_ref)
+            acc = g if acc is None else jax.tree.map(jnp.add, acc, g)
+        acc = jax.tree.map(lambda a: a / K, acc)
+        p_ref, st = opt.update(p_ref, acc, st)
+
+    boundaries = [0, cfg.num_layers]
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    schedule = sch.build_schedule(_pcfg(1), 1, R, sync_period=K)
+    eng = pl.FerretEngine(staged, schedule, sgd(lr=1e-2), comp.CompensationConfig(method="none"))
+    state = eng.init_state(T.split_stage_params(cfg, params, boundaries))
+    final, _ = eng.run(state, stream)
+    p_eng = T.merge_stage_params(cfg, list(final[0]))
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_eng)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_async_applies_stale_gradients(tiny, rng):
+    """Async P=2: stage 0's update at round m uses the gradient from round
+    m-1 (τ=1). Verified against a hand-rolled replay."""
+    cfg, params = tiny
+    R = 6
+    stream = _stream(cfg, rng, R)
+    boundaries = [0, 2, 4]
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    schedule = sch.build_schedule(_pcfg(2), 2, R)
+    eng = pl.FerretEngine(staged, schedule, sgd(lr=1e-2), comp.CompensationConfig(method="none"))
+    stages0 = T.split_stage_params(cfg, params, boundaries)
+    state = eng.init_state(stages0)
+    final, ys = eng.run(state, stream)
+
+    # manual replay
+    opt = sgd(lr=1e-2)
+    stages = list(stages0)
+    opt_states = [opt.init(sp) for sp in stages]
+    pending = {0: [], 1: []}  # stage -> queue of grads
+
+    def loss_of(stages_t, batch):
+        x = None
+        for j in range(2):
+            x = staged.forward_stage(j, stages_t[j], x, batch)
+        return staged.loss(x, batch)[0]
+
+    for m in range(R):
+        batch = {k: v[m] for k, v in stream.items()}
+        grads = jax.grad(lambda st_: loss_of(st_, batch))(tuple(stages))
+        # stage 1: fresh (τ=0); stage 0: delayed by 1 round
+        pending[0].append(grads[0])
+        stages[1], opt_states[1] = opt.update(stages[1], grads[1], opt_states[1])
+        if m >= 1:
+            g0 = pending[0].pop(0)
+            stages[0], opt_states[0] = opt.update(stages[0], g0, opt_states[0])
+
+    for a, b in zip(jax.tree.leaves(tuple(stages)), jax.tree.leaves(final[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_engine_worker_removal_freezes_updates(tiny, rng):
+    cfg, params = tiny
+    R = 6
+    stream = _stream(cfg, rng, R)
+    boundaries = [0, cfg.num_layers]
+    staged = pl.staged_from_transformer(cfg, boundaries)
+    schedule = sch.build_schedule(_pcfg(1, N=1, removed=(0,)), 1, R)
+    eng = pl.FerretEngine(staged, schedule, sgd(lr=1e-2), comp.CompensationConfig(method="none"))
+    state = eng.init_state(T.split_stage_params(cfg, params, boundaries))
+    final, ys = eng.run(state, stream)
+    assert float(np.asarray(ys["admitted"]).sum()) == 0
+    for a, b in zip(jax.tree.leaves(state[0]), jax.tree.leaves(final[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,132 @@
+"""Checkpointing + supervisor fault tolerance + elastic replanning."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing.checkpoint import (
+    CheckpointManager,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.runtime.elastic import ClusterSpec, ElasticPlanner
+from repro.runtime.supervisor import Supervisor, SupervisorCfg
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+        "opt": {"m": jnp.zeros((4, 8)), "count": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 7, state, extras={"cursor": 42})
+    restored, step, extras = restore_checkpoint(str(tmp_path), jax.tree.map(jnp.zeros_like, state))
+    assert step == 7 and extras["cursor"] == 42
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state())
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert latest_checkpoint(str(tmp_path)).endswith("step_0000000001")
+
+
+def test_manager_retention_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every_steps=1)
+    for s in range(1, 5):
+        mgr.save_async(s, _state(s))
+    mgr.wait()
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 2 and kept[-1] == "step_0000000004"
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _state())
+    bad = {"w": jnp.zeros((2, 2)), "opt": {"m": jnp.zeros((4, 8)), "count": jnp.asarray(0)}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_supervisor_nan_rollback(tmp_path):
+    """A poisoned batch must trigger restore from the last checkpoint."""
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        w = state["w"] + batch["delta"]
+        loss = jnp.sum(w)
+        return {"w": w}, {"loss": loss}
+
+    sup = Supervisor(
+        SupervisorCfg(checkpoint_dir=str(tmp_path), checkpoint_every=1, nan_check_every=1),
+        step_fn,
+        {"w": jnp.ones(4)},
+    )
+    r1 = sup.run_step({"delta": jnp.ones(4)})
+    sup.manager.wait()
+    assert r1.step == 1 and not r1.restarted
+    # poison: NaN loss -> rollback to step 1 and retry (same batch) succeeds
+    # only if retried batch is clean; feed NaN then rely on retries failing
+    with pytest.raises(FloatingPointError):
+        sup.run_step({"delta": jnp.full(4, jnp.nan)})
+    # state was rolled back to the last checkpoint (step 1)
+    np.testing.assert_array_equal(np.asarray(sup.state["w"]), np.full(4, 2.0))
+    assert sup.step == 1
+
+
+def test_supervisor_recovers_and_continues(tmp_path):
+    flaky = {"fail_next": False}
+
+    def step_fn(state, batch):
+        if flaky["fail_next"]:
+            flaky["fail_next"] = False
+            return state, {"loss": jnp.asarray(float("nan"))}
+        return {"w": state["w"] + 1}, {"loss": jnp.sum(state["w"])}
+
+    sup = Supervisor(
+        SupervisorCfg(checkpoint_dir=str(tmp_path), checkpoint_every=1, nan_check_every=1),
+        step_fn,
+        {"w": jnp.zeros(2)},
+    )
+    sup.run_step({})
+    sup.manager.wait()
+    flaky["fail_next"] = True
+    rep = sup.run_step({})  # fails once, rolls back, retries, succeeds
+    assert rep.restarted and rep.step == 2
+    np.testing.assert_array_equal(np.asarray(sup.state["w"]), np.full(2, 2.0))
+
+
+def test_elastic_replan_degrades_gracefully():
+    from repro.models.registry import get_config
+
+    cfg = get_config("h2o-danube-1.8b")
+    ep = ElasticPlanner(cfg, batch=8, seq=512, max_workers=4)
+    full = ep.replan(ClusterSpec(chips=256))
+    shrunk = ep.replan(ClusterSpec(chips=128))
+    assert full.feasible and shrunk.feasible
+    deg = ep.degradation(full, shrunk)
+    assert 0.0 <= deg < 1.0
+    # less memory budget -> planned memory within the shrunken budget
+    assert shrunk.memory <= 0.9 * ClusterSpec(chips=128).total_hbm * (1 + 1e-9)
+
+
+def test_data_pipeline_exactly_once_cursor(tmp_path):
+    from repro.data.pipeline import PipelineCfg, TokenStreamSource
+
+    cfg = PipelineCfg(batch=2, seq=8)
+    s1 = TokenStreamSource(64, cfg)
+    batches = [s1.next_batch() for _ in range(5)]
+    # resume from cursor 3 reproduces batch 3 exactly
+    s2 = TokenStreamSource(64, cfg)
+    s2.seek(3)
+    b3 = s2.next_batch()
+    np.testing.assert_array_equal(b3["tokens"], batches[3]["tokens"])
