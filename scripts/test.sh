@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test runner. Single source of truth for the test environment:
+# .github/workflows/ci.yml calls this script, so running it locally
+# reproduces the CI run exactly.
+#
+#   bash scripts/test.sh             # full tier-1 suite (-x -q)
+#   bash scripts/test.sh tests/test_elastic_trainer.py   # one module
+#
+# 8 fake host devices (the olmax/HomebrewNLP idiom) so multi-device code
+# paths lower on CPU; tests that need a specific device count spawn
+# subprocesses that set their own XLA_FLAGS.
+set -euo pipefail
+cd "$(dirname "${BASH_SOURCE[0]}")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+export PYTHONPATH="src${PYTHONPATH:+:${PYTHONPATH}}"
+
+exec python -m pytest -x -q "$@"

@@ -122,6 +122,31 @@ def restore_checkpoint(
     return state, int(manifest["step"]), manifest.get("extras", {})
 
 
+def plan_manifest(plan, cursor: Optional[int] = None, budget_bytes: Optional[float] = None) -> Dict[str, Any]:
+    """JSON-safe checkpoint extras describing a live pipeline plan.
+
+    Rides in the manifest so an elastic restart (runtime/elastic_trainer.py)
+    can resume the stream exactly where it stopped (``cursor``) and knows
+    which partition the saved per-stage state was split on (``bounds``) —
+    the restorer remaps to the new plan's bounds before resuming.
+    """
+    out: Dict[str, Any] = {
+        "bounds": [int(b) for b in plan.partition.bounds],
+        "num_stages": int(plan.partition.num_stages),
+        "rate": float(plan.rate),
+        "memory_bytes": float(plan.memory),
+        "feasible": bool(plan.feasible),
+    }
+    if cursor is not None:
+        out["cursor"] = int(cursor)
+    if budget_bytes is not None:
+        # inf round-trips through json.dump as Infinity; stringify instead.
+        out["budget_bytes"] = (
+            float(budget_bytes) if budget_bytes != float("inf") else "inf"
+        )
+    return out
+
+
 class CheckpointManager:
     """Async writer with bounded in-flight saves + retention policy."""
 

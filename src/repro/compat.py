@@ -1,0 +1,45 @@
+"""Cross-version jax API compatibility helpers.
+
+The container pins jax 0.4.37; several APIs this repo uses moved or changed
+shape around that release. Every call site goes through this shim so a
+future jax bump is a one-line change here instead of a repo-wide sweep:
+
+- ``jax.tree.flatten_with_path`` only exists from 0.4.38 on (0.4.37 has it
+  in ``jax.tree_util``).
+- ``jax.shard_map`` graduated from ``jax.experimental.shard_map`` after
+  0.4.37.
+- ``jax.lax.pvary`` (varying-manual-axes marker) doesn't exist yet in
+  0.4.37; data-wise it is the identity, so the fallback is a no-op.
+- ``Compiled.cost_analysis()`` returns a list of per-computation dicts on
+  older jax and a single dict on newer.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax.tree, "flatten_with_path"):  # jax >= 0.4.38
+    tree_flatten_with_path = jax.tree.flatten_with_path
+else:
+    tree_flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+if hasattr(jax, "shard_map"):  # jax >= 0.4.38-ish graduation
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+
+    def pvary(x, axis_names):  # identity: pvary only marks replication info
+        del axis_names
+        return x
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized to one flat dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -61,6 +61,20 @@ class StreamResult:
     plan: planner_lib.Plan
 
 
+def empirical_adaptation_rate(
+    cfg: FerretConfig, plan: planner_lib.Plan, admitted: np.ndarray, R: int
+) -> float:
+    """Def. 4.1 empirically: admitted items complete after one full pipeline
+    traversal; dropped items contribute 0 (r = ∞)."""
+    active = plan.config.active_workers()
+    cr = max(w.recompute for w in active) if active else 0
+    traversal = plan.partition.num_stages * (
+        plan.stats.t_f + plan.stats.t_b + cr * plan.stats.t_f
+    )
+    contrib = admitted * math.exp(-cfg.decay_c * traversal) * cfg.data_value
+    return float(contrib.sum() / max(R, 1))
+
+
 class FerretTrainer:
     def __init__(
         self,
@@ -73,6 +87,8 @@ class FerretTrainer:
     ):
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
+        self.batch = batch
+        self.seq = seq
         self.profile = profile or analytic_profile(model_cfg, batch, seq)
         t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
         self.t_d = t_d
@@ -108,15 +124,7 @@ class FerretTrainer:
 
         acc = np.asarray(ys["acc"], dtype=np.float64)
         admitted = np.asarray(ys["admitted"], dtype=np.float64)
-
-        # Empirical adaptation rate: admitted items complete after one full
-        # pipeline traversal; dropped items contribute 0 (r = ∞).
-        cr = max(w.recompute for w in self.plan.config.active_workers()) if \
-            self.plan.config.active_workers() else 0
-        traversal = P * (self.plan.stats.t_f + self.plan.stats.t_b
-                         + cr * self.plan.stats.t_f)
-        contrib = admitted * math.exp(-self.cfg.decay_c * traversal) * self.cfg.data_value
-        empirical_rate = float(contrib.sum() / max(R, 1))
+        empirical_rate = empirical_adaptation_rate(self.cfg, self.plan, admitted, R)
 
         return StreamResult(
             online_acc=float(acc.mean()),
@@ -129,6 +137,29 @@ class FerretTrainer:
             lam_curve=np.asarray(ys["lam"]),
             plan=self.plan,
         )
+
+    # ------------------------------------------------------------------
+    def run_stream_elastic(self, params: Pytree, stream: Dict[str, np.ndarray],
+                           schedule=(), **kwargs):
+        """Segmented run under a varying memory budget (Ferret_M live).
+
+        Delegates to ``repro.runtime.elastic_trainer.ElasticStreamTrainer``:
+        the stream executes in segments, re-planning and remapping live
+        state at every budget change. ``schedule`` is a list of
+        ``BudgetEvent`` or a ``round -> budget_bytes | None`` callable; see
+        ``ElasticStreamTrainer.run_stream`` for the remaining kwargs.
+        Returns an ``ElasticStreamResult`` with per-segment ``StreamResult``s
+        and the stitched online-accuracy curve.
+        """
+        from repro.runtime.elastic_trainer import ElasticStreamTrainer
+
+        et = ElasticStreamTrainer(
+            self.model_cfg, self.cfg, batch=self.batch, seq=self.seq,
+            optimizer=self.optimizer, profile=self.profile,
+        )
+        result = et.run_stream(params, stream, schedule, **kwargs)
+        self.final_params = result.final_params
+        return result
 
 
 def sequential_oracle_run(

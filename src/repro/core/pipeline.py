@@ -102,7 +102,15 @@ class FerretEngine:
         self.lr = lr
 
     # -- state ------------------------------------------------------------
-    def init_state(self, stage_params: List[Pytree]):
+    def init_state(self, stage_params: List[Pytree], opt_states=None, comp_states=None):
+        """Engine state for ``stage_params``.
+
+        ``opt_states`` / ``comp_states`` carry per-stage optimizer and
+        compensation state across a re-plan (runtime/elastic_trainer.py);
+        when omitted they are freshly initialized. The gradient and Δθ rings
+        are always re-initialized — their shapes are schedule-dependent and
+        in-flight accumulation groups do not survive a partition change.
+        """
         Rsz, K = self.sched.ring_size, self.sched.delta_ring
         f32 = jnp.float32
         rings = tuple(
@@ -111,11 +119,13 @@ class FerretEngine:
         deltas = tuple(
             jax.tree.map(lambda p: jnp.zeros((K, *p.shape), f32), sp) for sp in stage_params
         )
-        opt_states = tuple(self.opt.init(sp) for sp in stage_params)
-        comp_states = tuple(
-            comp_lib.init_state(sp, self.comp_cfg) for sp in stage_params
-        )
-        return (tuple(stage_params), rings, deltas, opt_states, comp_states)
+        if opt_states is None:
+            opt_states = tuple(self.opt.init(sp) for sp in stage_params)
+        if comp_states is None:
+            comp_states = tuple(
+                comp_lib.init_state(sp, self.comp_cfg) for sp in stage_params
+            )
+        return (tuple(stage_params), rings, deltas, tuple(opt_states), tuple(comp_states))
 
     # -- schedule arrays as scan xs ----------------------------------------
     def _schedule_xs(self) -> Dict[str, jnp.ndarray]:

@@ -59,6 +59,7 @@ def build_schedule(
     num_stages: int,
     num_rounds: int,
     sync_period: Optional[int] = None,
+    phase: int = 0,
 ) -> EngineSchedule:
     """Builds the engine schedule for a pipeline configuration.
 
@@ -66,6 +67,11 @@ def build_schedule(
     stage accumulates `sync_period` items and applies a fresh (τ=0) update
     at the group boundary (DAPPLE/GPipe-style flushes). Ferret's async
     schedule is `sync_period=None`.
+
+    phase: global round index of this schedule's first round. A segmented
+    run (runtime/elastic_trainer.py) passes the stream cursor so the worker
+    interleave — and hence the T4 admission pattern — continues seamlessly
+    across segment boundaries instead of restarting at worker 0.
     """
     P = num_stages
     R = num_rounds
@@ -122,7 +128,7 @@ def build_schedule(
     pending = [[] for _ in range(R)]
 
     for m in range(R):
-        w = m % N
+        w = (m + phase) % N
         worker = workers[w]
         if worker.removed:
             continue

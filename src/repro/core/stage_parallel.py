@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pvary, shard_map
 from repro.models.config import ModelConfig
 
 
@@ -76,7 +77,7 @@ def spatial_pipeline_logits(
     T = M + num_stages - 1  # wavefront ticks
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_blocks), P(None)),
         out_specs=P(None),
@@ -86,7 +87,7 @@ def spatial_pipeline_logits(
         blocks_local = jax.tree.map(lambda a: a[0], blocks_local)
         idx = jax.lax.axis_index(axis)
         last = num_stages - 1
-        zero = jax.lax.pvary(jnp.zeros((b, s, cfg.d_model), cd), (axis,))
+        zero = pvary(jnp.zeros((b, s, cfg.d_model), cd), (axis,))
 
         def tick(carry, t):
             buf = carry  # activation held by this stage

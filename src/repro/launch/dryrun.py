@@ -31,6 +31,7 @@ from typing import Dict, Optional
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import cost_analysis_dict
 from repro.configs.common import SHAPES, InputShape, input_specs, shape_applicable
 from repro.launch import shardings as sh
 from repro.launch.hlo_analysis import RooflineTerms, analytic_memory_bytes, parse_collectives, roofline_from_compiled
@@ -166,9 +167,7 @@ def _cost_point(cfg, shape, mesh, remat, num_layers, variant="baseline"):
         compiled = _lower_compile(small, shape, mesh, remat, microbatch=1, variant=variant)
     finally:
         scan_util.UNROLL = False
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
+    ca = cost_analysis_dict(compiled)
     text = compiled.as_text()
     colls = parse_collectives(text, default_group=mesh.devices.size)
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), colls

@@ -16,6 +16,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional
 
+from repro.compat import cost_analysis_dict
 from repro.core.profiler import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 _DTYPE_BYTES = {
@@ -197,9 +198,7 @@ def analytic_memory_bytes(
 
 def roofline_from_compiled(compiled, mesh, hlo_text: Optional[str] = None) -> RooflineTerms:
     chips = mesh.devices.size
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

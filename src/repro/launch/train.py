@@ -37,6 +37,29 @@ from repro.optim.optimizers import adamw
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
 
 
+def parse_budget_schedule(spec: str):
+    """``"0:inf,120:2,180:0.5"`` → BudgetEvents (round : budget in GiB).
+
+    ``inf`` (or ``0``) means unconstrained (Ferret_M+)."""
+    from repro.runtime import BudgetEvent
+
+    events = []
+    for item in spec.split(","):
+        try:
+            r, v = item.split(":")
+            gib = math.inf if v.strip() == "inf" else float(v)
+            if gib == 0:  # 0 = unconstrained, same semantics as --budget-gb
+                gib = math.inf
+            budget = gib if gib == math.inf else gib * 2**30
+            events.append(BudgetEvent(round=int(r), budget_bytes=budget))
+        except ValueError:
+            raise SystemExit(
+                f"--budget-schedule: bad entry {item!r} — expected "
+                f"'round:GiB' items like '0:inf,120:2,180:0.5'"
+            ) from None
+    return events
+
+
 def run_ferret(args) -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     cfg = dataclasses.replace(cfg, compute_dtype="float32" if args.smoke else cfg.compute_dtype)
@@ -66,6 +89,22 @@ def run_ferret(args) -> None:
         f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible}"
     )
     t0 = time.time()
+    if args.budget_schedule:
+        res = tr.run_stream_elastic(params, stream, parse_budget_schedule(args.budget_schedule))
+        dt = time.time() - t0
+        for s in res.segments:
+            p = s.result.plan
+            b = "inf" if math.isinf(s.budget_bytes) else f"{s.budget_bytes/2**30:.2f}GiB"
+            tag = f" replan={1e3*s.replan_s:.0f}ms remap={1e3*s.remap_s:.0f}ms" if s.replanned else ""
+            print(f"  seg [{s.start},{s.end}) budget={b} P={p.partition.num_stages} "
+                  f"N={len(p.config.active_workers())} M={p.memory/2**20:.1f}MiB "
+                  f"oacc={s.result.online_acc:.4f}{tag}")
+        print(
+            f"oacc={res.online_acc:.4f} admitted={res.admitted_frac:.2f} "
+            f"replans={res.num_replans} "
+            f"({res.rounds} items, exactly once, in {dt:.1f}s)"
+        )
+        return
     res = tr.run_stream(params, stream)
     dt = time.time() - t0
     print(
@@ -134,6 +173,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--budget-gb", type=float, default=0.0, help="0 = unconstrained (M+)")
+    ap.add_argument(
+        "--budget-schedule", default=None,
+        help="mid-stream budget changes as 'round:GiB,...' e.g. '0:inf,120:2,180:0.5' "
+             "(ferret mode; live replan + state remap, no restart)",
+    )
     ap.add_argument("--compensation", default="iter_fisher")
     ap.add_argument("--ocl", default="vanilla")
     ap.add_argument("--stream", default="drift", choices=["iid", "split", "drift"])

@@ -1,4 +1,20 @@
+from repro.runtime.elastic import ClusterSpec, DeviceLossError, ElasticPlanner
+from repro.runtime.elastic_trainer import (
+    BudgetEvent,
+    ElasticStreamResult,
+    ElasticStreamTrainer,
+    SegmentReport,
+)
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
-from repro.runtime.elastic import ElasticPlanner
 
-__all__ = ["Supervisor", "SupervisorCfg", "ElasticPlanner"]
+__all__ = [
+    "BudgetEvent",
+    "ClusterSpec",
+    "DeviceLossError",
+    "ElasticPlanner",
+    "ElasticStreamResult",
+    "ElasticStreamTrainer",
+    "SegmentReport",
+    "Supervisor",
+    "SupervisorCfg",
+]

@@ -23,6 +23,15 @@ from repro.models.config import ModelConfig
 HBM_PER_CHIP = 16 * 2**30  # TPU v5e
 
 
+class DeviceLossError(RuntimeError):
+    """A device/host dropped out mid-run.
+
+    Unlike a NaN or a timeout, this is not retryable in place: the lost
+    capacity is gone, so the supervisor escalates straight to the elastic
+    planner (shrink-replan) instead of burning its retry budget.
+    """
+
+
 @dataclasses.dataclass
 class ClusterSpec:
     chips: int
@@ -68,3 +77,7 @@ class ElasticPlanner:
         if before.rate <= 0:
             return 0.0
         return max(0.0, 1.0 - after.rate / before.rate)
+
+    def budget_for(self, cluster: ClusterSpec) -> float:
+        """The memory budget M the planner gets for this cluster shape."""
+        return self.memory_fraction * cluster.total_hbm

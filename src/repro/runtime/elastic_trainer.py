@@ -1,0 +1,535 @@
+"""Budget-elastic streaming trainer: live re-plan + state remap (paper §5.2).
+
+Ferret's headline claim is adaptivity to *varying* memory budgets (Ferret_M,
+Alg. 2+3), but a plan is chosen once per run everywhere else in the repo.
+This module runs one stream in **segments**: when the memory budget changes
+mid-stream — a scheduled ``BudgetEvent``, a callback, or a simulated device
+loss escalated through ``Supervisor.on_fatal`` — it
+
+  1. re-enters the planner for the new budget (Alg. 3 ∘ Alg. 2),
+  2. rebuilds the ``EngineSchedule``/``FerretEngine`` for the new partition
+     (the worker-interleave ``phase`` continues from the stream cursor), and
+  3. **remaps live state across partition boundaries**: stage params are
+     merged (``T.merge_stage_params``) and re-split on the new
+     ``plan.partition.bounds``; per-parameter optimizer moments and
+     Iter-Fisher λ statistics travel the same merge/re-split path, so no
+     learned state is thrown away. Only the gradient-accumulation and Δθ
+     rings are re-initialized — their shapes are schedule-dependent and
+     in-flight accumulation groups do not survive a partition change.
+
+The stream cursor advances only when a segment completes, so a failed or
+re-planned segment is re-run from its first round with unchanged state:
+no item is lost and none is consumed twice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.checkpoint import plan_manifest
+from repro.core import compensation as comp_lib
+from repro.core import planner as planner_lib
+from repro.core import schedule as sched_lib
+from repro.core.ferret import FerretConfig, StreamResult, empirical_adaptation_rate
+from repro.core.pipeline import FerretEngine, staged_from_transformer
+from repro.core.profiler import ModelProfile, analytic_profile
+from repro.models.config import ModelConfig
+from repro.ocl.algorithms import wrap_staged_model
+from repro.optim.optimizers import AdamWState, Optimizer, SGDState, adamw
+from repro.runtime.elastic import DeviceLossError
+from repro.runtime.supervisor import Supervisor, SupervisorCfg
+
+Pytree = Any
+BudgetSchedule = Union[Sequence["BudgetEvent"], Callable[[int], Optional[float]]]
+
+# A segment that keeps losing devices faster than shrink-replans can help is
+# a cluster problem, not a planning problem — surface it instead of looping.
+_MAX_FAULTS_PER_SEGMENT = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetEvent:
+    """From stream round ``round`` on, the memory budget is ``budget_bytes``."""
+
+    round: int
+    budget_bytes: float
+
+
+@dataclasses.dataclass
+class SegmentReport:
+    start: int  # first stream round of the segment (inclusive)
+    end: int  # one past the last round
+    budget_bytes: float
+    replanned: bool  # did this segment start with a re-plan + remap?
+    replan_s: float  # host-side planner time (0.0 when not replanned)
+    remap_s: float  # merge/re-split remap time (0.0 when not replanned)
+    run_s: float  # engine build + compile + scan wall time
+    result: StreamResult
+
+
+@dataclasses.dataclass
+class ElasticStreamResult:
+    segments: List[SegmentReport]
+    online_acc: float
+    online_acc_curve: np.ndarray  # continuous across segments (no restart)
+    losses: np.ndarray
+    admitted_frac: float
+    empirical_rate: float  # round-weighted across segments
+    final_params: Pytree
+    rounds: int  # stream rounds consumed (== stream length: exactly once)
+    num_replans: int
+    num_faults: int
+
+
+# ---------------------------------------------------------------------------
+# State remap across partition boundaries
+# ---------------------------------------------------------------------------
+
+
+def _merge_resplit(model_cfg: ModelConfig, stage_trees: Sequence[Pytree], new_bounds) -> List[Pytree]:
+    """Merge stage-params-shaped trees and re-split on ``new_bounds``.
+
+    Works for anything that mirrors the stage-param structure: the params
+    themselves, optimizer moments, and Iter-Fisher EMA statistics.
+    """
+    from repro.models import transformer as T
+
+    merged = T.merge_stage_params(model_cfg, list(stage_trees))
+    return T.split_stage_params(model_cfg, merged, new_bounds)
+
+
+def _overlaps(old_bounds, lo: int, hi: int) -> List[Tuple[int, int]]:
+    """(old stage index, #overlapping layers) for new-stage span [lo, hi)."""
+    out = []
+    for i in range(len(old_bounds) - 1):
+        n = min(hi, old_bounds[i + 1]) - max(lo, old_bounds[i])
+        if n > 0:
+            out.append((i, n))
+    return out
+
+
+def remap_stage_params(
+    model_cfg: ModelConfig, stage_params: Sequence[Pytree], new_bounds
+) -> List[Pytree]:
+    return _merge_resplit(model_cfg, stage_params, new_bounds)
+
+
+def remap_opt_states(
+    model_cfg: ModelConfig,
+    opt_states: Sequence[Any],
+    old_bounds,
+    new_bounds,
+    optimizer: Optimizer,
+    new_stage_params: Sequence[Pytree],
+) -> Tuple[Any, ...]:
+    """Carry per-parameter optimizer moments through a partition change.
+
+    Moments mirror the stage-param tree, so they take the same
+    merge/re-split path as the weights. Per-stage scalars that cannot be
+    split per-layer (the Adam bias-correction count) take the conservative
+    minimum over the old stages a new stage overlaps. Optimizers this
+    module does not know structurally are re-initialized.
+    """
+    first = opt_states[0]
+    P_new = len(new_bounds) - 1
+    if isinstance(first, AdamWState):
+        mu = _merge_resplit(model_cfg, [s.mu for s in opt_states], new_bounds)
+        nu = _merge_resplit(model_cfg, [s.nu for s in opt_states], new_bounds)
+        out = []
+        for j in range(P_new):
+            ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
+            count = jnp.min(jnp.stack([opt_states[i].count for i, _ in ov]))
+            out.append(AdamWState(mu=mu[j], nu=nu[j], count=count))
+        return tuple(out)
+    if isinstance(first, SGDState):
+        mom = _merge_resplit(model_cfg, [s.momentum for s in opt_states], new_bounds)
+        return tuple(SGDState(momentum=m) for m in mom)
+    return tuple(optimizer.init(sp) for sp in new_stage_params)
+
+
+def remap_comp_states(
+    model_cfg: ModelConfig,
+    comp_states: Sequence[comp_lib.CompensationState],
+    old_bounds,
+    new_bounds,
+) -> Tuple[comp_lib.CompensationState, ...]:
+    """Carry Iter-Fisher λ and its EMA statistics through a partition change.
+
+    v_r/v_a mirror the stage params (merge/re-split; the fixed-λ mode's
+    empty placeholders pass through unchanged). λ is a per-stage scalar:
+    a new stage takes the layer-overlap-weighted mean of the old stages it
+    covers; ``steps`` takes the overlap maximum (EMA warm-up state).
+    """
+    v_r = _merge_resplit(model_cfg, [s.v_r for s in comp_states], new_bounds)
+    v_a = _merge_resplit(model_cfg, [s.v_a for s in comp_states], new_bounds)
+    out = []
+    for j in range(len(new_bounds) - 1):
+        ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
+        w = jnp.asarray([n for _, n in ov], jnp.float32)
+        lams = jnp.stack([comp_states[i].lam for i, _ in ov])
+        steps = jnp.max(jnp.stack([comp_states[i].steps for i, _ in ov]))
+        out.append(
+            comp_lib.CompensationState(
+                lam=jnp.sum(w * lams) / jnp.sum(w),
+                v_r=v_r[j],
+                v_a=v_a[j],
+                steps=steps,
+            )
+        )
+    return tuple(out)
+
+
+def remap_engine_state(
+    model_cfg: ModelConfig,
+    engine_state,
+    old_bounds,
+    new_bounds,
+    optimizer: Optimizer,
+):
+    """Remap a live ``FerretEngine`` state tuple onto a new partition.
+
+    Returns (stage_params, opt_states, comp_states) for ``new_bounds``; the
+    rings are intentionally dropped (see module docstring) and rebuilt by
+    ``FerretEngine.init_state``.
+    """
+    stages, _rings, _deltas, opts, comps = engine_state
+    new_sp = remap_stage_params(model_cfg, list(stages), new_bounds)
+    new_opts = remap_opt_states(model_cfg, opts, old_bounds, new_bounds, optimizer, new_sp)
+    new_comps = remap_comp_states(model_cfg, comps, old_bounds, new_bounds)
+    return new_sp, new_opts, new_comps
+
+
+# ---------------------------------------------------------------------------
+# The elastic trainer
+# ---------------------------------------------------------------------------
+
+
+class ElasticStreamTrainer:
+    """Runs one stream across a schedule of memory budgets, re-planning and
+    remapping live state at every budget change instead of restarting."""
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        ferret_cfg: FerretConfig,
+        batch: int,
+        seq: int,
+        optimizer: Optional[Optimizer] = None,
+        profile: Optional[ModelProfile] = None,
+    ):
+        self.model_cfg = model_cfg
+        self.cfg = ferret_cfg
+        self.batch = batch
+        self.seq = seq
+        self.profile = profile or analytic_profile(model_cfg, batch, seq)
+        self.t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
+        self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
+        self._pending_budget: Optional[float] = None
+
+    # -- budget control ---------------------------------------------------
+    def request_budget(self, budget_bytes: float) -> None:
+        """Ask for a re-plan at the next segment boundary (fault path).
+
+        This is what a ``Supervisor.on_fatal`` handler calls when a device
+        loss shrinks the cluster: the current segment's failed attempt is
+        abandoned (state unchanged), and the re-run happens under the new
+        budget from the same stream cursor.
+        """
+        self._pending_budget = float(budget_bytes)
+
+    def fatal_handler(self, scale: float = 0.5) -> Callable[[BaseException], None]:
+        """An ``on_fatal`` callback: device loss → request a shrunken budget.
+
+        ``scale`` models the surviving fraction of the cluster; wiring a
+        ``ClusterSpec``-accurate policy instead is one line with
+        ``ElasticPlanner.budget_for``. Under an unconstrained budget
+        (Ferret_M+) the shrink is taken relative to the live plan's actual
+        footprint — ``inf × scale`` would be a no-op.
+        """
+
+        def handler(_exc: BaseException) -> None:
+            base = self._current_budget
+            if not math.isfinite(base):
+                base = self._current_plan.memory
+            self.request_budget(base * scale)
+
+        return handler
+
+    def plan_for(self, budget_bytes: float) -> planner_lib.Plan:
+        return planner_lib.plan(
+            self.profile,
+            self.t_d,
+            budget_bytes,
+            c=self.cfg.decay_c,
+            V_D=self.cfg.data_value,
+            max_workers=self.cfg.max_workers,
+            max_stages=self.cfg.max_stages,
+        )
+
+    # -- main entry -------------------------------------------------------
+    def run_stream(
+        self,
+        params: Pytree,
+        stream: Dict[str, np.ndarray],
+        schedule: BudgetSchedule = (),
+        *,
+        segment_rounds: Optional[int] = None,
+        supervisor_cfg: Optional[SupervisorCfg] = None,
+        fault_rounds: Sequence[int] = (),
+        fault_budget_scale: float = 0.5,
+    ) -> ElasticStreamResult:
+        """Run ``stream`` across the budget ``schedule``.
+
+        schedule: ``BudgetEvent`` list (budget switches at fixed rounds) or a
+        callable ``round -> budget_bytes | None`` polled at segment
+        boundaries (None keeps the current budget).
+        segment_rounds: optional cap on segment length; callable schedules
+        and fault injection are only observed at segment boundaries, so this
+        bounds their reaction latency.
+        supervisor_cfg: when given, every segment executes as one supervised
+        step — NaN rollback, retries, async checkpoints (plan + cursor in
+        the manifest extras), and ``on_fatal`` escalation all active.
+        fault_rounds: stream rounds at which a device loss is simulated
+        (each fires once); the escalation path shrinks the budget by
+        ``fault_budget_scale`` and re-plans.
+        """
+        from repro.models import transformer as T
+
+        R = next(iter(stream.values())).shape[0]
+        events, budget_fn = self._normalize_schedule(schedule)
+        if callable(schedule) and segment_rounds is None:
+            segment_rounds = 16
+        stream_j = {k: jnp.asarray(v) for k, v in stream.items()}
+        pending_faults = sorted(set(int(r) for r in fault_rounds))
+
+        event_idx = 0
+        budget = self.cfg.budget_bytes
+        if budget_fn is not None:
+            b0 = budget_fn(0)
+            budget = float(b0) if b0 is not None else budget
+        while event_idx < len(events) and events[event_idx].round <= 0:
+            budget = events[event_idx].budget_bytes
+            event_idx += 1
+        self._current_budget = budget
+        plan = self.plan_for(budget)
+        self._current_plan = plan
+        bounds = list(plan.partition.bounds)
+        stage_params = T.split_stage_params(self.model_cfg, params, bounds)
+        opt_states: Optional[Tuple] = None  # None → engine initializes fresh
+        comp_states: Optional[Tuple] = None
+
+        segments: List[SegmentReport] = []
+        acc_all: List[np.ndarray] = []
+        loss_all: List[np.ndarray] = []
+        admitted_all: List[np.ndarray] = []
+        num_faults = 0
+        faults_at_cursor = 0
+        cursor = 0
+
+        while cursor < R:
+            # ---- budget for this segment: fault request beats the schedule.
+            # Events are consumed exactly once, so a fault-shrunk budget is
+            # not clobbered by re-reading an already-applied event.
+            target = budget
+            if budget_fn is not None:
+                b = budget_fn(cursor)
+                if b is not None:
+                    target = float(b)
+            while event_idx < len(events) and events[event_idx].round <= cursor:
+                target = events[event_idx].budget_bytes
+                event_idx += 1
+            if self._pending_budget is not None:
+                target, self._pending_budget = self._pending_budget, None
+            replanned, replan_s, remap_s = False, 0.0, 0.0
+            if target != budget:
+                t0 = time.perf_counter()
+                new_plan = self.plan_for(target)
+                replan_s = time.perf_counter() - t0
+                new_bounds = list(new_plan.partition.bounds)
+                t0 = time.perf_counter()
+                if new_bounds != bounds:
+                    if opt_states is None:
+                        # no segment ran yet: only params exist to remap
+                        stage_params = remap_stage_params(
+                            self.model_cfg, stage_params, new_bounds
+                        )
+                    else:
+                        state_tuple = (stage_params, None, None, opt_states, comp_states)
+                        stage_params, opt_states, comp_states = remap_engine_state(
+                            self.model_cfg, state_tuple, bounds, new_bounds, self.optimizer
+                        )
+                remap_s = time.perf_counter() - t0
+                budget, plan, bounds, replanned = target, new_plan, new_bounds, True
+                self._current_budget = budget
+                self._current_plan = plan
+
+            seg_end = self._segment_end(cursor, R, events, segment_rounds)
+            seg_len = seg_end - cursor
+            fault_round = next(
+                (r for r in pending_faults if cursor <= r < seg_end), None
+            )
+
+            t0 = time.perf_counter()
+            P = plan.partition.num_stages
+            staged = wrap_staged_model(
+                staged_from_transformer(self.model_cfg, bounds), self.cfg.ocl
+            )
+            engine_sched = sched_lib.build_schedule(plan.config, P, seg_len, phase=cursor)
+            engine = FerretEngine(
+                staged, engine_sched, self.optimizer, self.cfg.compensation, lr=self.cfg.lr
+            )
+            state = engine.init_state(stage_params, opt_states, comp_states)
+            seg_stream = {k: v[cursor:seg_end] for k, v in stream_j.items()}
+            try:
+                final_state, ys = self._execute_segment(
+                    engine, state, seg_stream, supervisor_cfg,
+                    fault_round, fault_budget_scale, plan, cursor, seg_end, budget,
+                )
+                faults_at_cursor = 0
+            except DeviceLossError as e:
+                # Re-run this segment from the same cursor — state is
+                # unchanged, so the stream stays exactly-once. Injected
+                # faults fire once; a genuine device loss may not have gone
+                # through a Supervisor, so make sure a shrink was requested,
+                # and bail out if shrinking stops making progress.
+                if fault_round is not None:
+                    pending_faults.remove(fault_round)
+                num_faults += 1
+                faults_at_cursor += 1
+                if self._pending_budget is None:
+                    self.fatal_handler(fault_budget_scale)(e)
+                if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
+                    raise
+                continue
+            run_s = time.perf_counter() - t0
+
+            stage_params = list(final_state[0])
+            opt_states = tuple(final_state[3])
+            comp_states = tuple(final_state[4])
+
+            acc = np.asarray(ys["acc"], dtype=np.float64)
+            admitted = np.asarray(ys["admitted"], dtype=np.float64)
+            result = StreamResult(
+                online_acc=float(acc.mean()),
+                online_acc_curve=np.cumsum(acc) / np.arange(1, seg_len + 1),
+                losses=np.asarray(ys["loss"]),
+                admitted_frac=float(admitted.mean()),
+                memory_bytes=plan.memory,
+                planned_rate=plan.rate,
+                empirical_rate=empirical_adaptation_rate(self.cfg, plan, admitted, seg_len),
+                lam_curve=np.asarray(ys["lam"]),
+                plan=plan,
+            )
+            segments.append(
+                SegmentReport(
+                    start=cursor, end=seg_end, budget_bytes=budget,
+                    replanned=replanned, replan_s=replan_s, remap_s=remap_s,
+                    run_s=run_s, result=result,
+                )
+            )
+            acc_all.append(acc)
+            loss_all.append(np.asarray(ys["loss"]))
+            admitted_all.append(admitted)
+            cursor = seg_end
+
+        acc_cat = np.concatenate(acc_all) if acc_all else np.zeros(0)
+        admitted_cat = np.concatenate(admitted_all) if admitted_all else np.zeros(0)
+        final_params = T.merge_stage_params(self.model_cfg, list(stage_params))
+        self.final_params = final_params
+        rate = sum(
+            s.result.empirical_rate * (s.end - s.start) for s in segments
+        ) / max(R, 1)
+        return ElasticStreamResult(
+            segments=segments,
+            online_acc=float(acc_cat.mean()) if acc_cat.size else 0.0,
+            online_acc_curve=np.cumsum(acc_cat) / np.arange(1, acc_cat.size + 1),
+            losses=np.concatenate(loss_all) if loss_all else np.zeros(0),
+            admitted_frac=float(admitted_cat.mean()) if admitted_cat.size else 0.0,
+            empirical_rate=rate,
+            final_params=final_params,
+            rounds=int(sum(s.end - s.start for s in segments)),
+            num_replans=sum(1 for s in segments if s.replanned),
+            num_faults=num_faults,
+        )
+
+    # -- internals --------------------------------------------------------
+    def _execute_segment(
+        self,
+        engine: FerretEngine,
+        state,
+        seg_stream: Dict[str, jnp.ndarray],
+        supervisor_cfg: Optional[SupervisorCfg],
+        fault_round: Optional[int],
+        fault_budget_scale: float,
+        plan: planner_lib.Plan,
+        cursor: int,
+        seg_end: int,
+        budget: float,
+    ):
+        """One segment, either direct or as a single supervised step."""
+        out: Dict[str, Any] = {}
+
+        def step_fn(st, batch):
+            if fault_round is not None:
+                raise DeviceLossError(
+                    f"simulated device loss at stream round {fault_round}"
+                )
+            new_st, ys = engine.run(st, batch)
+            out["ys"] = ys
+            return new_st, {"loss": jnp.mean(ys["loss"])}
+
+        if supervisor_cfg is None:
+            if fault_round is not None:
+                raise DeviceLossError(
+                    f"simulated device loss at stream round {fault_round}"
+                )
+            return engine.run(state, seg_stream)
+
+        # Per-segment checkpoint dir: state shapes are partition-dependent,
+        # so a NaN/timeout rollback inside this segment must never restore a
+        # checkpoint written under a different partition.
+        seg_cfg = dataclasses.replace(
+            supervisor_cfg,
+            checkpoint_dir=f"{supervisor_cfg.checkpoint_dir}/seg_{cursor:06d}",
+        )
+        sup = Supervisor(
+            seg_cfg,
+            step_fn,
+            state,
+            on_fatal=self.fatal_handler(fault_budget_scale),
+        )
+        # Saves happen only after the segment step succeeds, i.e. the saved
+        # state is the *end-of-segment* state — the cursor must say so, or a
+        # restore would re-consume the whole segment.
+        sup.run_step(
+            seg_stream,
+            extras=plan_manifest(plan, cursor=seg_end, budget_bytes=budget),
+        )
+        sup.manager.wait()
+        return sup.state, out["ys"]
+
+    @staticmethod
+    def _normalize_schedule(schedule: BudgetSchedule):
+        if callable(schedule):
+            return [], schedule
+        events = sorted(
+            (BudgetEvent(int(e.round), float(e.budget_bytes)) for e in schedule),
+            key=lambda e: e.round,
+        )
+        return events, None
+
+    @staticmethod
+    def _segment_end(cursor, R, events, segment_rounds) -> int:
+        end = R
+        for e in events:
+            if cursor < e.round < end:
+                end = e.round
+        if segment_rounds is not None:
+            end = min(end, cursor + segment_rounds)
+        return end

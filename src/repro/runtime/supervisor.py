@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpointing.checkpoint import CheckpointManager
+from repro.runtime.elastic import DeviceLossError
 
 Pytree = Any
 
@@ -108,6 +109,15 @@ class Supervisor:
                 if self.manager.should_save(self.step):
                     self.manager.save_async(self.step, self.state, extras)
                 return StepReport(self.step, loss_val, restarted, dropped, dt)
+            except DeviceLossError as e:
+                # Lost capacity cannot come back through retries: escalate
+                # immediately so the handler can request a shrink-replan
+                # (runtime/elastic_trainer.py), then surface the error to the
+                # caller, which rebuilds on the smaller footprint.
+                self.failures = 0
+                if self.on_fatal is not None:
+                    self.on_fatal(e)
+                raise
             except (FloatingPointError, TimeoutError) as e:
                 self.failures += 1
                 restarted = True

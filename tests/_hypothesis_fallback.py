@@ -1,0 +1,140 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container that runs the tier-1 suite has no network access, so the real
+``hypothesis`` may be absent even though it's declared in the dev deps.
+``conftest.py`` registers this module under ``sys.modules['hypothesis']``
+only in that case; with hypothesis installed, the real library is used.
+
+Coverage is intentionally tiny — exactly the API surface the test suite
+uses: ``given``, ``settings``, and ``strategies.integers / floats /
+sampled_from / booleans``. ``given`` enumerates the strategy bounds first
+(hypothesis-style edge cases), then deterministic pseudo-random draws up to
+``max_examples`` — no shrinking, no database, fully reproducible.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+DEFAULT_MAX_EXAMPLES = 20
+_MAX_EXAMPLES_ATTR = "_stub_max_examples"
+
+
+class _Strategy:
+    def edge_values(self) -> Sequence[Any]:
+        return ()
+
+    def draw(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def edge_values(self):
+        return (self.lo, self.hi) if self.lo != self.hi else (self.lo,)
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def edge_values(self):
+        return (self.lo, self.hi) if self.lo != self.hi else (self.lo,)
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+
+    def edge_values(self):
+        return (self.options[0], self.options[-1])
+
+    def draw(self, rng):
+        return rng.choice(self.options)
+
+
+class _Booleans(_Strategy):
+    def edge_values(self):
+        return (False, True)
+
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+
+class strategies:  # noqa: N801 — mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> _Strategy:
+        return _SampledFrom(options)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Booleans()
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored) -> Callable:
+    """Decorator: records max_examples on the (already given-wrapped) test."""
+
+    def deco(fn):
+        setattr(fn, _MAX_EXAMPLES_ATTR, int(max_examples))
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs) -> Callable:
+    names = sorted(strategy_kwargs)
+
+    def deco(fn):
+        def runner():
+            n = getattr(runner, _MAX_EXAMPLES_ATTR, DEFAULT_MAX_EXAMPLES)
+            # First examples pin every strategy to one of its bounds in turn;
+            # the rest are seeded draws (seed = test name, so runs repeat).
+            examples = []
+            for k in names:
+                for edge in strategy_kwargs[k].edge_values():
+                    rng = random.Random(f"{fn.__name__}:{k}:{edge!r}")
+                    ex = {
+                        kk: (edge if kk == k else strategy_kwargs[kk].draw(rng))
+                        for kk in names
+                    }
+                    examples.append(ex)
+            i = 0
+            while len(examples) < n:
+                rng = random.Random(f"{fn.__name__}:{i}")
+                examples.append({k: strategy_kwargs[k].draw(rng) for k in names})
+                i += 1
+            for ex in examples[:n]:
+                try:
+                    fn(**ex)
+                except Exception as e:  # noqa: BLE001 — re-raise with the example
+                    raise AssertionError(
+                        f"falsifying example (hypothesis stub): {fn.__name__}({ex})"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+# ``from hypothesis import given, settings, strategies as st`` compatibility
+st = strategies

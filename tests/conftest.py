@@ -2,6 +2,16 @@
 multi-device sharding tests spawn subprocesses that set the flag first."""
 
 import dataclasses
+import importlib.util
+import sys
+
+# The container has no network access: if the real hypothesis isn't
+# installed, register the deterministic fallback before test collection so
+# the property-based modules still collect and run (see _hypothesis_fallback).
+if importlib.util.find_spec("hypothesis") is None:
+    import _hypothesis_fallback as _hyp_stub
+
+    sys.modules["hypothesis"] = _hyp_stub
 
 import jax
 import pytest

@@ -118,7 +118,8 @@ SUBPROCESS_SHARDING = textwrap.dedent(
             step = make_decode_step(cfg)
             c = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh)).lower(
                 jax.eval_shape(lambda: params), cache_s, batch_s).compile()
-    print(json.dumps({{"ok": True, "flops": c.cost_analysis().get("flops", 0)}}))
+    from repro.compat import cost_analysis_dict
+    print(json.dumps({{"ok": True, "flops": cost_analysis_dict(c).get("flops", 0)}}))
     """
 )
 
