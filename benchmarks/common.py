@@ -1,4 +1,4 @@
-"""Shared benchmark scaffolding.
+"""Shared benchmark scaffolding (now on the ``repro.api`` session layer).
 
 The paper's image datasets aren't available offline, so every benchmark runs
 the paper's *protocol* over generated streams (DESIGN.md §9): a drifting
@@ -9,19 +9,17 @@ in the paper's tables.
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
-import numpy as np
 
+from repro.api import FerretSession, OCLAlgorithm, StreamResult
 from repro.core.compensation import CompensationConfig
-from repro.core.ferret import FerretConfig, FerretTrainer, sequential_oracle_run
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.ocl.algorithms import OCLConfig
-from repro.ocl.baselines import AdmissionPolicy, make_admission_mask
+from repro.ocl.baselines import AdmissionPolicy
 from repro.ocl.streams import StreamConfig, make_stream
 
 VOCAB = 32
@@ -57,55 +55,50 @@ def init_params(cfg: ModelConfig, seed: int = 0):
     return T.init_params(cfg, jax.random.PRNGKey(seed))
 
 
-def run_ferret(
+def bench_session(
     cfg: ModelConfig,
     params,
     stream,
     budget: float = math.inf,
+    algorithm: Union[str, OCLConfig, OCLAlgorithm] = "vanilla",
     method: str = "iter_fisher",
     eta_lambda: float = 1e-4,
     ocl: Optional[OCLConfig] = None,
     lr: float = 5e-3,
     max_workers: int = 3,
     max_stages: int = 4,
-):
-    fc = FerretConfig(
-        budget_bytes=budget,
-        lr=lr,
+    profile=None,
+) -> FerretSession:
+    """One benchmark-shaped ``FerretSession`` (CPU-smoke planner limits)."""
+    return FerretSession(
+        cfg, budget, algorithm, stream,
+        ocl=ocl, lr=lr, batch=BATCH, seq=SEQ, params=params, profile=profile,
         compensation=CompensationConfig(method=method, eta_lambda=eta_lambda),
-        ocl=ocl or OCLConfig(),
-        max_workers=max_workers,
-        max_stages=max_stages,
+        max_workers=max_workers, max_stages=max_stages,
     )
-    tr = FerretTrainer(cfg, fc, batch=BATCH, seq=SEQ)
-    res = tr.run_stream(params, stream)
-    return tr, res
+
+
+def run_ferret(cfg, params, stream, **kwargs) -> tuple:
+    """Pipelined Ferret run; returns ``(session, StreamResult)``."""
+    ocl = kwargs.get("ocl")
+    kwargs.setdefault("algorithm", ocl.method if ocl is not None else "vanilla")
+    session = bench_session(cfg, params, stream, **kwargs)
+    return session, session.run("pipelined")
 
 
 def run_admission_baseline(
-    cfg: ModelConfig,
+    cfg,
     params,
     stream,
     policy: AdmissionPolicy,
     slowdown: float = 3.0,
     lr: float = 5e-3,
-):
+) -> StreamResult:
     """Skip-style baseline: t_train = slowdown · t_d ⇒ items get dropped.
 
     Memory = one model copy (+ buffer items for buffered policies)."""
-    R = next(iter(stream.values())).shape[0]
-    trace = make_admission_mask(policy, R, t_d=1.0, t_train=slowdown)
-    out = sequential_oracle_run(cfg, params, stream, lr=lr, trained_mask=trace.admitted)
-    mem = model_bytes(cfg) * 1.0
-    if policy.method in ("random_n", "last_n", "camel"):
-        mem += policy.buffer * BATCH * SEQ * 8  # buffered raw items
-    return {
-        "oacc": float(out["acc"].mean()),
-        "acc": out["acc"],
-        "memory": mem,
-        "admitted": float(trace.admitted.mean()),
-        "delays": trace.delays,
-    }
+    session = bench_session(cfg, params, stream, lr=lr)
+    return session.run("baseline", policy=policy, slowdown=slowdown)
 
 
 def model_bytes(cfg: ModelConfig) -> float:

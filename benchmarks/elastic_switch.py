@@ -1,14 +1,17 @@
 """Elastic budget switching: replan+remap latency and accuracy retention.
 
 Runs one drifting stream through a 3-budget schedule (∞ → 40% → 25% of the
-unconstrained footprint) with the budget-elastic trainer, and compares the
-stitched online accuracy against (a) the unconstrained single-plan run and
-(b) a cold-restart baseline that re-initializes optimizer/compensation
-state at every switch (what you'd get without the live state remap).
+unconstrained footprint) with the elastic runner of
+``repro.api.FerretSession``, and compares the stitched online accuracy
+against (a) the unconstrained single-plan run and (b) a cold-restart
+baseline that re-initializes optimizer/compensation state at every switch
+(what you'd get without the live state remap).
 
 Reports per-switch replan and remap wall time — the paper's Alg. 2+3 are a
 host-side search, so a budget change costs milliseconds of planning plus
-one merge/re-split of the live state, not a training restart.
+one merge/re-split of the live state, not a training restart — and writes
+the machine-readable ``BENCH_elastic.json`` at the repo root so the perf
+trajectory is tracked across PRs (CI uploads it as an artifact).
 
     PYTHONPATH=src python -m benchmarks.elastic_switch
 """
@@ -16,55 +19,65 @@ one merge/re-split of the live state, not a training restart.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
+import time
 
 from benchmarks import common as C
+from repro.api import FerretSession
 from repro.core.compensation import CompensationConfig
 from repro.core.ferret import FerretConfig
 from repro.core.profiler import ModelProfile, analytic_profile
-from repro.ocl.algorithms import OCLConfig
-from repro.runtime import BudgetEvent, ElasticStreamTrainer
+from repro.runtime import BudgetEvent
 
 STREAM_LEN = 240
 SWITCHES = (80, 160)
 FRACTIONS = (1.0, 0.4, 0.25)
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_elastic.json")
 
 
 def _hetero_profile(cfg) -> ModelProfile:
     base = analytic_profile(cfg, C.BATCH, C.SEQ)
     layers = [
-        dataclasses.replace(l, t_fwd=l.t_fwd * (1 + i), t_bwd=l.t_bwd * (1 + i))
-        for i, l in enumerate(base.layers)
+        dataclasses.replace(layer, t_fwd=layer.t_fwd * (1 + i), t_bwd=layer.t_bwd * (1 + i))
+        for i, layer in enumerate(base.layers)
     ]
     return ModelProfile(
         layers=layers, embed_bytes=base.embed_bytes, batch=C.BATCH, seq=C.SEQ
     )
 
 
-def _ferret_cfg() -> FerretConfig:
+def _ferret_cfg(budget: float = math.inf) -> FerretConfig:
     return FerretConfig(
-        budget_bytes=math.inf, lr=5e-3,
+        budget_bytes=budget, lr=5e-3,
         compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
-        ocl=OCLConfig(), max_workers=3, max_stages=4,
+        max_workers=3, max_stages=4,
     )
 
 
-def main() -> None:
+def run(write_json: bool = True) -> dict:
     cfg = C.bench_model()
     params = C.init_params(cfg)
     stream = C.bench_stream(length=STREAM_LEN)
     profile = _hetero_profile(cfg)
 
-    et = ElasticStreamTrainer(cfg, _ferret_cfg(), batch=C.BATCH, seq=C.SEQ, profile=profile)
-    full = et.plan_for(math.inf)
+    session = FerretSession(
+        cfg, math.inf, "vanilla", stream, ferret=_ferret_cfg(),
+        batch=C.BATCH, seq=C.SEQ, profile=profile, params=params,
+    )
+    full = session.plan
     budgets = [math.inf] + [full.memory * f for f in FRACTIONS[1:]]
     schedule = [BudgetEvent(r, b) for r, b in zip(SWITCHES, budgets[1:])]
 
     # --- elastic run: live replan + state remap ---
-    res = et.run_stream(params, stream, schedule)
+    t0 = time.time()
+    res = session.run("elastic", schedule=schedule)
+    elastic_s = time.time() - t0
 
     # --- baseline 1: unconstrained single plan, same stream ---
-    base = et.run_stream(params, stream, schedule=[])
+    base = session.run("elastic")
 
     # --- baseline 2: restart at each switch — weights survive (as a
     # checkpoint reload would) but optimizer/compensation state is lost,
@@ -73,10 +86,12 @@ def main() -> None:
     cuts = [0, *SWITCHES, STREAM_LEN]
     params_k = params
     for k in range(len(cuts) - 1):
-        fc_k = dataclasses.replace(_ferret_cfg(), budget_bytes=budgets[k])
-        et_k = ElasticStreamTrainer(cfg, fc_k, batch=C.BATCH, seq=C.SEQ, profile=profile)
         seg_stream = {kk: v[cuts[k]:cuts[k + 1]] for kk, v in stream.items()}
-        r_k = et_k.run_stream(params_k, seg_stream, schedule=[])
+        sess_k = FerretSession(
+            cfg, budgets[k], "vanilla", seg_stream, ferret=_ferret_cfg(budgets[k]),
+            batch=C.BATCH, seq=C.SEQ, profile=profile, params=params_k,
+        )
+        r_k = sess_k.run("elastic")
         params_k = r_k.final_params
         cold_acc.append((r_k.online_acc, cuts[k + 1] - cuts[k]))
     cold_oacc = sum(a * n for a, n in cold_acc) / STREAM_LEN
@@ -85,6 +100,7 @@ def main() -> None:
           f"budgets ∞ / {FRACTIONS[1]:.0%} / {FRACTIONS[2]:.0%} of M_F(∞)\n")
     print(f"{'rounds':>12} {'budget':>10} {'P':>3} {'N':>3} {'M_F MiB':>8} "
           f"{'replan ms':>10} {'remap ms':>9} {'seg oacc':>9}")
+    seg_rows = []
     for s in res.segments:
         budget = "inf" if not math.isfinite(s.budget_bytes) else f"{s.budget_bytes/2**20:.2f}"
         p = s.result.plan
@@ -92,6 +108,15 @@ def main() -> None:
               f"{len(p.config.active_workers()):>3} {p.memory/2**20:>8.2f} "
               f"{1e3*s.replan_s:>10.1f} {1e3*s.remap_s:>9.1f} "
               f"{100*s.result.online_acc:>8.2f}%")
+        seg_rows.append({
+            "start": s.start, "end": s.end,
+            "budget_bytes": budget if budget == "inf" else s.budget_bytes,
+            "num_stages": p.partition.num_stages,
+            "memory_bytes": p.memory,
+            "replan_ms": 1e3 * s.replan_s,
+            "remap_ms": 1e3 * s.remap_s,
+            "online_acc": s.result.online_acc,
+        })
 
     switch_cost = sum(s.replan_s + s.remap_s for s in res.segments if s.replanned)
     print(f"\ntotal switch overhead: {1e3*switch_cost:.1f} ms "
@@ -103,6 +128,39 @@ def main() -> None:
     retention = res.online_acc / max(base.online_acc, 1e-12)
     print(f"accuracy retention vs unconstrained: {100*retention:.1f}%  "
           f"(elastic − cold-restart: {100*(res.online_acc - cold_oacc):+.2f} pts)")
+
+    payload = {
+        "bench": "elastic_switch",
+        "stream_len": STREAM_LEN,
+        "switches": list(SWITCHES),
+        "budget_fractions": list(FRACTIONS),
+        "num_replans": res.num_replans,
+        "replan_ms_total": sum(r["replan_ms"] for r in seg_rows),
+        "remap_ms_total": sum(r["remap_ms"] for r in seg_rows),
+        "switch_overhead_ms": 1e3 * switch_cost,
+        "elastic_wall_s": elastic_s,
+        "online_acc": {
+            "elastic": res.online_acc,
+            "unconstrained": base.online_acc,
+            "cold_restart": cold_oacc,
+        },
+        "retention_vs_unconstrained": retention,
+        "elastic_minus_cold_restart": res.online_acc - cold_oacc,
+        "segments": seg_rows,
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {BENCH_JSON}")
+    return payload
+
+
+def main() -> None:
+    t0 = time.time()
+    payload = run()
+    dt = (time.time() - t0) * 1e6 / STREAM_LEN
+    print(f"elastic_switch,{dt:.0f},"
+          f"switch_overhead_ms={payload['switch_overhead_ms']:.1f}")
 
 
 if __name__ == "__main__":

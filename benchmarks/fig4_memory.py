@@ -13,7 +13,6 @@ from typing import Dict
 from benchmarks import common as C
 from repro.core.planner import default_data_interval, plan
 from repro.core.profiler import analytic_profile
-from repro.ocl.baselines import AdmissionPolicy
 
 
 def run(verbose: bool = True) -> Dict[str, float]:

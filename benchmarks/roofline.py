@@ -48,7 +48,7 @@ def _fallback_memory_model(rec) -> float:
     if shape.kind != "train":
         cache_s = jax.eval_shape(lambda: T.init_cache(cfg, shape.batch, shape.seq))
         cache_bytes = sum(
-            int(math.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(cache_s)
+            int(math.prod(leaf.shape)) * leaf.dtype.itemsize for leaf in jax.tree.leaves(cache_s)
         )
     return analytic_memory_bytes(
         cfg, shape, chips, model_shard, rec.get("microbatch", 1), cache_bytes
@@ -86,7 +86,8 @@ def run(path: str = DEFAULT, verbose: bool = True):
         )
     if verbose:
         hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'tC(s)':>9s} {'tM(s)':>9s} "
-               f"{'tMhlo':>9s} {'tX(s)':>9s} {'bound':>10s} {'useful':>7s} {'frac':>6s} {'HBM':>7s}")
+               f"{'tMhlo':>9s} {'tX(s)':>9s} {'bound':>10s} "
+               f"{'useful':>7s} {'frac':>6s} {'HBM':>7s}")
         print(hdr)
         print("-" * len(hdr))
         for w in rows:
@@ -109,7 +110,9 @@ def main():
         return
     dt = (time.time() - t0) * 1e6 / max(len(rows), 1)
     worst = min(rows, key=lambda w: w["roofline_frac"]) if rows else None
-    print(f"roofline,{dt:.0f},worst_frac={worst['roofline_frac']:.3f}" if worst else "roofline,0,empty")
+    line = (f"roofline,{dt:.0f},worst_frac={worst['roofline_frac']:.3f}"
+            if worst else "roofline,0,empty")
+    print(line)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ BENCHES = {
     "fig4": "benchmarks.fig4_memory",
     "fig6": "benchmarks.fig6_scaling",
     "roofline": "benchmarks.roofline",
+    "elastic": "benchmarks.elastic_switch",
 }
 
 

@@ -33,7 +33,7 @@ def run(stream_kind: str = "drift", verbose: bool = True) -> Dict[str, Dict]:
         ("Camel", AdmissionPolicy("camel", buffer=16, select=4)),
     ]:
         r = C.run_admission_baseline(cfg, params, stream, pol)
-        results[name] = {"oacc": r["oacc"], "memory": r["memory"]}
+        results[name] = {"oacc": r.online_acc, "memory": r.memory_bytes}
 
     # ---- Ferret at three budgets
     _, res_plus = C.run_ferret(cfg, params, stream, budget=math.inf)

@@ -1,6 +1,10 @@
 """Paper Table 2: OCL algorithms (Vanilla/ER/MIR/LwF/MAS) integrated into
 Ferret vs the skip baselines — agm + tagm on a split (class-incremental)
 stream, test accuracy measured on a held-out mix of all tasks.
+
+Runs through ``repro.api.FerretSession``: the registered algorithm owns its
+stream preparation (replay mixing, teacher logits), so no per-algorithm
+wiring lives here anymore.
 """
 
 from __future__ import annotations
@@ -9,17 +13,18 @@ import math
 import time
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
+from repro.api import available_algorithms
 from repro.models import transformer as T
-from repro.ocl.algorithms import OCLConfig, mix_replay_into_stream
+from repro.ocl.algorithms import OCLConfig
 from repro.ocl.baselines import AdmissionPolicy
 from repro.ocl.metrics import agm, tagm
 
 ALGOS = ["vanilla", "er", "mir", "lwf", "mas"]
+assert set(ALGOS) <= set(available_algorithms())
 
 
 def _test_accuracy(cfg, params, test_stream) -> float:
@@ -38,18 +43,20 @@ def run(verbose: bool = True) -> Dict[str, Dict]:
     test_stream = C.bench_stream("iid", length=24, seed=99)
 
     results: Dict[str, Dict] = {}
+    ocl = OCLConfig(replay_batch=2, replay_size=64)
     for algo in ALGOS:
-        ocl = OCLConfig(method=algo, replay_batch=2, replay_size=64)
-        train_stream = mix_replay_into_stream(stream, ocl) if algo in ("er", "mir") else stream
-        tr, res = C.run_ferret(cfg, params, train_stream, budget=math.inf, ocl=ocl)
-        tacc = _test_accuracy(cfg, tr.final_params, test_stream)
+        session = C.bench_session(
+            cfg, params, stream, budget=math.inf, algorithm=algo, ocl=ocl
+        )
+        res = session.run("pipelined")
+        tacc = _test_accuracy(cfg, res.final_params, test_stream)
         results[f"Ferret_M+/{algo}"] = {
             "oacc": res.online_acc, "tacc": tacc, "memory": res.memory_bytes,
         }
 
     # 1-Skip baseline (vanilla)
     r = C.run_admission_baseline(cfg, params, stream, AdmissionPolicy("one_skip"))
-    results["1-Skip/vanilla"] = {"oacc": r["oacc"], "tacc": None, "memory": r["memory"]}
+    results["1-Skip/vanilla"] = {"oacc": r.online_acc, "tacc": None, "memory": r.memory_bytes}
 
     base = results["1-Skip/vanilla"]
     t_base = results["Ferret_M+/vanilla"]["tacc"]

@@ -13,7 +13,6 @@ equivalent configuration — the same accounting for everyone.
 
 from __future__ import annotations
 
-import math
 import time
 from typing import Dict
 

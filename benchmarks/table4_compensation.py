@@ -51,7 +51,8 @@ def main():
     t0 = time.time()
     mean = run()
     dt = (time.time() - t0) * 1e6 / (C.STREAM_LEN * len(METHODS) * 2)
-    print(f"table4_compensation,{dt:.0f},iterfisher_minus_none={mean['iter_fisher']-mean['none']:+.4f}")
+    gain = mean['iter_fisher'] - mean['none']
+    print(f"table4_compensation,{dt:.0f},iterfisher_minus_none={gain:+.4f}")
 
 
 if __name__ == "__main__":

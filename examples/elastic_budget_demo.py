@@ -14,16 +14,14 @@ switches and every stream item is consumed exactly once.
 import dataclasses
 import math
 
-import jax
 import numpy as np
 
+from repro.api import FerretSession
 from repro.core.compensation import CompensationConfig
-from repro.core.ferret import FerretConfig
 from repro.core.profiler import ModelProfile, analytic_profile
-from repro.models import transformer as T
 from repro.models.registry import get_config
 from repro.ocl.streams import StreamConfig, make_stream
-from repro.runtime import BudgetEvent, ElasticStreamTrainer
+from repro.runtime import BudgetEvent
 
 STREAM_LEN = 180
 BATCH, SEQ = 2, 16
@@ -34,8 +32,8 @@ def hetero_profile(cfg, batch, seq) -> ModelProfile:
     (a uniform smoke model would keep the same bounds at every budget)."""
     base = analytic_profile(cfg, batch, seq)
     layers = [
-        dataclasses.replace(l, t_fwd=l.t_fwd * (1 + i), t_bwd=l.t_bwd * (1 + i))
-        for i, l in enumerate(base.layers)
+        dataclasses.replace(layer, t_fwd=layer.t_fwd * (1 + i), t_bwd=layer.t_bwd * (1 + i))
+        for i, layer in enumerate(base.layers)
     ]
     return ModelProfile(layers=layers, embed_bytes=base.embed_bytes, batch=batch, seq=seq)
 
@@ -45,20 +43,18 @@ def main():
         get_config("h2o-danube-1.8b", smoke=True),
         compute_dtype="float32", num_layers=4, vocab_size=32,
     )
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
     stream = make_stream(StreamConfig(
         kind="drift", modality="tokens", length=STREAM_LEN,
         batch=BATCH, vocab=32, seq=SEQ,
     ))
 
-    fc = FerretConfig(
-        budget_bytes=math.inf, lr=5e-3,
+    session = FerretSession(
+        cfg, math.inf, "vanilla", stream, lr=5e-3,
         compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
-        max_workers=3, max_stages=4,
+        max_workers=3, max_stages=4, profile=hetero_profile(cfg, BATCH, SEQ),
+        batch=BATCH, seq=SEQ,
     )
-    et = ElasticStreamTrainer(cfg, fc, batch=BATCH, seq=SEQ,
-                              profile=hetero_profile(cfg, BATCH, SEQ))
-    full = et.plan_for(math.inf)
+    full = session.plan
     schedule = [
         BudgetEvent(round=60, budget_bytes=full.memory * 0.4),
         BudgetEvent(round=120, budget_bytes=full.memory * 0.3),
@@ -66,7 +62,7 @@ def main():
     print(f"budget schedule: ∞ → {full.memory*0.4/2**20:.2f} MiB @60 "
           f"→ {full.memory*0.3/2**20:.2f} MiB @120  ({STREAM_LEN} stream items)\n")
 
-    res = et.run_stream(params, stream, schedule)
+    res = session.run("elastic", schedule=schedule)
 
     for s in res.segments:
         p = s.result.plan

@@ -1,7 +1,8 @@
-"""Quickstart: Ferret end-to-end in ~40 lines.
+"""Quickstart: the `repro.api` session layer in ~40 lines.
 
-Plan a pipeline under a memory budget, stream data through the fine-grained
-async engine with Iter-Fisher compensation, report online accuracy.
+One `FerretSession` runs the same stream through the planned async
+pipeline, a tighter memory budget, and the exact sequential Oracle — one
+call signature, one result shape.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,12 +10,9 @@ async engine with Iter-Fisher compensation, report online accuracy.
 import dataclasses
 import math
 
-import jax
-
+from repro.api import FerretSession
 from repro.core.compensation import CompensationConfig
-from repro.core.ferret import FerretConfig, FerretTrainer
 from repro.models.registry import get_config
-from repro.models import transformer as T
 from repro.ocl.streams import StreamConfig, make_stream
 
 
@@ -24,43 +22,50 @@ def main():
         get_config("h2o-danube-1.8b", smoke=True),
         compute_dtype="float32", num_layers=4, vocab_size=32,
     )
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
 
     # a drifting token stream: 200 items arriving one microbatch at a time
     stream = make_stream(StreamConfig(
         kind="drift", modality="tokens", length=200, batch=2, vocab=32, seq=16,
     ))
 
-    # Ferret_M+: plan with unconstrained memory, then a 30% budget variant
-    fc = FerretConfig(
-        budget_bytes=math.inf, lr=5e-3,
+    # Ferret_M+: plan with unconstrained memory
+    session = FerretSession(
+        cfg, math.inf, "er", stream, lr=5e-3,
         compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
         max_workers=3, max_stages=4,
     )
-    trainer = FerretTrainer(cfg, fc, batch=2, seq=16)
-    plan = trainer.plan
+    plan = session.plan
     print(f"planned pipeline: P={plan.partition.num_stages} stages, "
           f"N={len(plan.config.active_workers())} workers, "
           f"M_F={plan.memory/2**20:.1f} MiB, R_F={plan.rate:.3f}")
 
-    res = trainer.run_stream(params, stream)
+    res = session.run()  # default runner: the pipelined engine
+    lam = res.extras["lam_curve"]
     print(f"online accuracy: {100*res.online_acc:.2f}%  "
           f"(loss {res.losses[0]:.3f} → {res.losses[-1]:.3f}, "
-          f"admitted {100*res.admitted_frac:.0f}%, λ→{res.lam_curve[-1]:.3f})")
+          f"admitted {100*res.admitted_frac:.0f}%, λ→{lam[-1]:.3f})")
 
     # same model under a 3× tighter budget: the planner deploys T1–T4
-    fc2 = dataclasses.replace(fc, budget_bytes=plan.memory * 0.3)
-    t2 = FerretTrainer(cfg, fc2, batch=2, seq=16)
-    p2 = t2.plan
+    s2 = FerretSession(
+        cfg, plan.memory * 0.3, "er", stream, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4, params=session.params,
+    )
+    p2 = s2.plan
     knobs = p2.config.active_workers()[0]
     print(f"\nconstrained plan (30% budget): P={p2.partition.num_stages}, "
           f"N={len(p2.config.active_workers())}, M_F={p2.memory/2**20:.1f} MiB")
     print(f"  T1 recompute={knobs.recompute}  "
           f"T2 accum={[s.accum for s in knobs.stages]}  "
           f"T3 omit={[s.omit for s in knobs.stages]}")
-    res2 = t2.run_stream(params, stream)
+    res2 = s2.run()
     print(f"  online accuracy: {100*res2.online_acc:.2f}% at "
           f"{100*p2.memory/plan.memory:.0f}% of the memory")
+
+    # the exact sequential Oracle on the same stream, same call signature
+    res3 = session.run("sequential")
+    print(f"\nsequential Oracle: {100*res3.online_acc:.2f}% "
+          f"(Ferret_M+ tracks it within a few points)")
 
 
 if __name__ == "__main__":

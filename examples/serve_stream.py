@@ -1,5 +1,9 @@
 """Serving example: batched prefill + decode over any assigned architecture.
 
+Prompts arrive through the same ``repro.api.StreamSource`` abstraction the
+trainers consume — here a drifting Markov token stream taken one round at a
+time, as a live feed would be.
+
     PYTHONPATH=src python examples/serve_stream.py --arch mamba2-780m
     PYTHONPATH=src python examples/serve_stream.py --arch gemma3-12b --gen 32
 """
@@ -11,9 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import as_stream_source
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as T
 from repro.models.registry import ARCHITECTURES, get_config
+from repro.ocl.streams import StreamConfig
 
 
 def main():
@@ -22,6 +28,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=1, help="prompt batches to serve")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)  # reduced config: CPU-friendly
@@ -31,38 +38,45 @@ def main():
     prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
     decode = jax.jit(make_decode_step(cfg))
 
-    if cfg.embed_inputs:
-        batch = {"tokens": jax.random.randint(rng, (args.batch, args.prompt_len),
-                                              0, cfg.vocab_size)}
-    else:  # stubbed modality frontend provides embeddings
-        batch = {"embeds": jax.random.normal(
-            rng, (args.batch, args.prompt_len, cfg.d_model),
-            dtype=jnp.dtype(cfg.compute_dtype))}
+    # prompt feed: any StreamSource works; a generated drifting stream here
+    source = as_stream_source(StreamConfig(
+        kind="drift", modality="tokens", length=args.rounds, batch=args.batch,
+        vocab=min(cfg.vocab_size, 256), seq=args.prompt_len,
+    ))
 
-    t0 = time.time()
-    logits, cache = jax.block_until_ready(prefill(params, batch))
-    t_pre = time.time() - t0
-
-    outs = []
-    t0 = time.time()
-    tok = jnp.argmax(logits, axis=-1)
-    for i in range(args.gen):
-        outs.append(np.asarray(tok))
+    for round_idx, row in enumerate(source):
+        round_rng = jax.random.fold_in(rng, round_idx)
         if cfg.embed_inputs:
-            step = {"tokens": tok[:, None]}
-        else:
-            step = {"embeds": jax.random.normal(
-                jax.random.fold_in(rng, i), (args.batch, 1, cfg.d_model),
+            batch = {"tokens": jnp.asarray(row["tokens"]) % cfg.vocab_size}
+        else:  # stubbed modality frontend provides embeddings
+            batch = {"embeds": jax.random.normal(
+                round_rng, (args.batch, args.prompt_len, cfg.d_model),
                 dtype=jnp.dtype(cfg.compute_dtype))}
-        logits, cache = decode(params, cache, step)
-        tok = jnp.argmax(logits, axis=-1)
-    jax.block_until_ready(logits)
-    t_dec = time.time() - t0
 
-    print(f"{cfg.name}: prefill {t_pre*1e3:.1f} ms, "
-          f"decode {t_dec/args.gen*1e3:.2f} ms/tok "
-          f"({args.batch*args.gen/t_dec:.0f} tok/s)")
-    print("sample:", [int(t[0]) for t in outs][:12])
+        t0 = time.time()
+        logits, cache = jax.block_until_ready(prefill(params, batch))
+        t_pre = time.time() - t0
+
+        outs = []
+        t0 = time.time()
+        tok = jnp.argmax(logits, axis=-1)
+        for i in range(args.gen):
+            outs.append(np.asarray(tok))
+            if cfg.embed_inputs:
+                step = {"tokens": tok[:, None]}
+            else:
+                step = {"embeds": jax.random.normal(
+                    jax.random.fold_in(round_rng, i), (args.batch, 1, cfg.d_model),
+                    dtype=jnp.dtype(cfg.compute_dtype))}
+            logits, cache = decode(params, cache, step)
+            tok = jnp.argmax(logits, axis=-1)
+        jax.block_until_ready(logits)
+        t_dec = time.time() - t0
+
+        print(f"{cfg.name} round {round_idx}: prefill {t_pre*1e3:.1f} ms, "
+              f"decode {t_dec/args.gen*1e3:.2f} ms/tok "
+              f"({args.batch*args.gen/t_dec:.0f} tok/s)")
+        print("sample:", [int(t[0]) for t in outs][:12])
 
 
 if __name__ == "__main__":

@@ -9,7 +9,6 @@ one TPU host.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax

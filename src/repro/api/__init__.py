@@ -1,0 +1,108 @@
+"""``repro.api`` — the one session layer over the Ferret reproduction.
+
+The paper pitches a *framework*: five integrated OCL algorithms behind one
+planner/pipeline engine. This package is that framework's stable surface —
+three small protocols and one front door — so adding an algorithm, an
+execution mode, or a stream type is additive (register a class) instead of
+invasive (edit every trainer and benchmark in lockstep).
+
+Front door::
+
+    from repro.api import FerretSession
+
+    session = FerretSession(model_cfg, budget, "er", stream)
+    result = session.run()              # -> unified StreamResult
+    result = session.run("elastic", schedule=[BudgetEvent(120, 2**30)])
+
+The three protocols
+===================
+
+``Runner`` (repro.api.runners)
+    Turns ``(session, params, stream_arrays)`` into a ``StreamResult``.
+    Registered by name with ``@register_runner``; resolved by
+    ``session.run(name)``. Built-ins: ``pipelined`` (single-plan async
+    pipeline engine), ``elastic`` (segmented varying-budget run, live
+    replan + state remap, crash-resume), ``sequential`` (exact
+    predict-then-train Oracle; alias ``oracle``), ``baseline``
+    (admission-policy-gated sequential loop). A runner declares
+    ``prepare_stream = True`` to receive the algorithm's pipeline-path
+    stream preparation (replay mixing, teacher logits).
+
+``OCLAlgorithm`` (repro.ocl.registry, re-exported here)
+    One class per algorithm, registered with ``@register_algorithm`` and
+    selected by ``OCLConfig.method`` or by name. An instance owns both
+    execution paths: the pipeline path (``prepare_stream`` /
+    ``wrap_staged`` / ``segment_refresh``) consumed by the pipelined and
+    elastic runners, and the exact sequential path
+    (``sequential_loss_extra`` / ``host_extras`` / ``observe`` /
+    ``sequential_refresh``) consumed by the sequential and baseline
+    runners. Built-ins: ``vanilla``, ``er``, ``mir``, ``lwf``, ``mas``.
+
+``StreamSource`` (repro.api.streams)
+    An exactly-once producer of dict-of-array stream rounds:
+    ``take(n)`` pops up to n stacked rounds, ``materialize(max_rounds)``
+    drains to the array form the engines scan over. ``ArrayStreamSource``
+    wraps finite arrays (what ``make_stream`` returns),
+    ``IterableStreamSource`` wraps generators and live/unbounded feeds,
+    and ``as_stream_source`` coerces dicts / ``StreamConfig`` / iterables.
+
+Everything returns one ``StreamResult`` (repro.api.results) — runner name,
+algorithm name, online accuracy (+curve), per-round losses, admitted
+fraction, planned memory, empirical adaptation rate, final params, and
+per-segment reports for elastic runs.
+
+The pre-session entrypoints (``FerretTrainer``, ``ElasticStreamTrainer``,
+``sequential_oracle_run``, ``wrap_staged_model``, ``make_ocl_step``,
+``mix_replay_into_stream``) remain importable as thin shims over the same
+machinery.
+"""
+
+from repro.api.results import StreamResult
+from repro.api.runners import (
+    BaselineRunner,
+    ElasticRunner,
+    PipelinedRunner,
+    Runner,
+    SequentialRunner,
+    available_runners,
+    get_runner,
+    register_runner,
+)
+from repro.api.session import FerretSession
+from repro.api.streams import (
+    ArrayStreamSource,
+    IterableStreamSource,
+    StreamSource,
+    as_stream_source,
+)
+from repro.ocl.algorithms import OCLConfig
+from repro.ocl.registry import (
+    OCLAlgorithm,
+    PrepareContext,
+    available_algorithms,
+    get_algorithm,
+    register_algorithm,
+)
+
+__all__ = [
+    "ArrayStreamSource",
+    "BaselineRunner",
+    "ElasticRunner",
+    "FerretSession",
+    "IterableStreamSource",
+    "OCLAlgorithm",
+    "OCLConfig",
+    "PipelinedRunner",
+    "PrepareContext",
+    "Runner",
+    "SequentialRunner",
+    "StreamResult",
+    "StreamSource",
+    "as_stream_source",
+    "available_algorithms",
+    "available_runners",
+    "get_algorithm",
+    "get_runner",
+    "register_algorithm",
+    "register_runner",
+]

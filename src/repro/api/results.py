@@ -1,0 +1,48 @@
+"""The one result shape every runner returns.
+
+Before the session layer, each entrypoint returned its own shape
+(``core.ferret.StreamResult``, ``runtime.ElasticStreamResult``, ad-hoc
+dicts from ``sequential_oracle_run`` / the admission baselines). Every
+``repro.api`` runner now returns this ``StreamResult``; the runner-specific
+raw object rides in ``extras["raw"]`` when callers need it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Unified outcome of running one stream through one runner."""
+
+    runner: str  # registered runner name
+    algorithm: str  # registered OCL algorithm name
+    online_acc: float  # mean pre-update accuracy over the stream
+    online_acc_curve: np.ndarray  # cumulative curve, one entry per consumed round
+    losses: np.ndarray  # per-round training loss
+    rounds: int  # stream rounds consumed (exactly once)
+    admitted_frac: float  # fraction of items that received an update
+    memory_bytes: float  # planned/estimated peak memory footprint
+    empirical_rate: float  # Def. 4.1 empirical adaptation rate
+    final_params: Pytree
+    plan: Optional[Any] = None  # planner Plan (pipelined/elastic)
+    segments: List[Any] = dataclasses.field(default_factory=list)  # SegmentReports
+    num_replans: int = 0
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> str:
+        mem = (
+            "inf" if not np.isfinite(self.memory_bytes)
+            else f"{self.memory_bytes / 2**20:.1f}MiB"
+        )
+        return (
+            f"[{self.runner}/{self.algorithm}] oacc={100 * self.online_acc:.2f}% "
+            f"admitted={100 * self.admitted_frac:.0f}% rounds={self.rounds} "
+            f"mem={mem} rate={self.empirical_rate:.3f}"
+        )

@@ -1,0 +1,246 @@
+"""FerretSession: the front door of the reproduction.
+
+    from repro.api import FerretSession
+
+    session = FerretSession(model_cfg, budget=2 * 2**30, algorithm="er",
+                            stream=make_stream(StreamConfig(...)))
+    result = session.run()                 # pipelined engine (default)
+    result = session.run("elastic", schedule=[BudgetEvent(120, 2**30)])
+    result = session.run("sequential")     # exact Oracle loop
+    result = session.run("baseline", policy="one_skip")
+
+One call signature across every execution mode and every registered OCL
+algorithm; every run returns the unified ``repro.api.StreamResult``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.api.results import StreamResult
+from repro.api.runners import Runner, get_runner
+from repro.api.streams import StreamLike, StreamSource, as_stream_source
+from repro.core import planner as planner_lib
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import FerretConfig
+from repro.core.profiler import ModelProfile, analytic_profile
+from repro.models.config import ModelConfig
+from repro.ocl.algorithms import OCLConfig
+from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
+from repro.optim.optimizers import Optimizer, adamw
+
+Pytree = Any
+
+
+class FerretSession:
+    """One OCL session: a model, a memory budget, an algorithm, a stream.
+
+    ``model`` is a ``ModelConfig`` or a registered architecture name
+    (resolved with ``smoke=True`` reductions by default). ``algorithm`` is
+    a registered name, an ``OCLConfig`` (its ``method`` selects), or an
+    ``OCLAlgorithm`` instance; when omitted it resolves from ``ocl=`` /
+    ``ferret.ocl`` (default ``"vanilla"``). ``stream`` is anything
+    ``repro.api.as_stream_source`` accepts; it may also be given per-run.
+
+    ``batch``/``seq`` are inferred from the stream's token arrays when not
+    given. The *session* stream is materialized exactly once and cached,
+    so successive ``run(...)`` calls compare runners on identical data: a
+    bounded stream caches in full (``max_rounds`` slices a prefix), an
+    unbounded stream caches the first run's ``max_rounds`` window (asking
+    for more later raises). To feed fresh rounds (e.g. successive windows
+    of a live source), pass ``stream=`` to ``run`` — explicit streams are
+    materialized per call and never cached.
+    """
+
+    def __init__(
+        self,
+        model: Union[ModelConfig, str],
+        budget: Optional[float] = None,
+        algorithm: Optional[Union[str, OCLConfig, OCLAlgorithm]] = None,
+        stream: Optional[StreamLike] = None,
+        *,
+        runner: Union[str, Runner] = "pipelined",
+        batch: Optional[int] = None,
+        seq: Optional[int] = None,
+        lr: float = 5e-3,
+        seed: int = 0,
+        compensation: Optional[CompensationConfig] = None,
+        ocl: Optional[OCLConfig] = None,
+        ferret: Optional[FerretConfig] = None,
+        max_workers: Optional[int] = 8,
+        max_stages: Optional[int] = None,
+        optimizer: Optional[Optimizer] = None,
+        profile: Optional[ModelProfile] = None,
+        params: Optional[Pytree] = None,
+        smoke: bool = True,
+    ):
+        if isinstance(model, str):
+            from repro.models.registry import get_config
+
+            model = get_config(model, smoke=smoke)
+        self.model_cfg = model
+
+        if isinstance(algorithm, OCLAlgorithm):
+            self.algorithm = algorithm
+        elif algorithm is None:
+            # no explicit algorithm: honor the method carried by ocl= /
+            # ferret.ocl instead of silently defaulting to vanilla
+            spec = ocl if ocl is not None else (
+                ferret.ocl if ferret is not None else "vanilla"
+            )
+            self.algorithm = get_algorithm(spec)
+        else:
+            self.algorithm = get_algorithm(algorithm, ocl)
+        if ferret is None:
+            ferret = FerretConfig(
+                budget_bytes=math.inf if budget is None else budget,
+                lr=lr,
+                compensation=compensation or CompensationConfig(),
+                ocl=self.algorithm.cfg,
+                max_workers=max_workers,
+                max_stages=max_stages,
+            )
+        else:
+            # explicit FerretConfig wins, but an explicit budget argument
+            # overrides its budget_bytes (never silently ignored), and its
+            # ocl is kept in sync with the resolved algorithm so both
+            # execution paths see one config
+            over = {"ocl": self.algorithm.cfg}
+            if budget is not None:
+                over["budget_bytes"] = budget
+            ferret = dataclasses.replace(ferret, **over)
+        self.ferret_cfg = ferret
+
+        self.stream: Optional[StreamSource] = (
+            as_stream_source(stream) if stream is not None else None
+        )
+        self.batch = batch
+        self.seq = seq
+        self.default_runner = runner
+        self.seed = seed
+        self.optimizer = optimizer or adamw(lr=ferret.lr)
+        self.profile = profile
+        self._params = params
+        self._cached_stream: Optional[Dict[str, np.ndarray]] = None
+        self._cache_is_full = False
+
+    # -- lazy pieces -------------------------------------------------------
+    @property
+    def params(self) -> Pytree:
+        if self._params is None:
+            from repro.models import transformer as T
+
+            self._params = T.init_params(self.model_cfg, jax.random.PRNGKey(self.seed))
+        return self._params
+
+    @params.setter
+    def params(self, value: Pytree) -> None:
+        self._params = value
+
+    @property
+    def plan(self) -> planner_lib.Plan:
+        """The pipelined plan for this session's budget (Alg. 3 ∘ Alg. 2)."""
+        if (self.batch is None or self.seq is None) and self.stream is not None:
+            self._infer_shapes(self._resolve_stream(None, None))
+        if self.batch is None or self.seq is None:
+            raise ValueError(
+                "plan needs batch/seq — pass them to FerretSession or give "
+                "the session a stream they can be inferred from"
+            )
+        profile = self.profile or analytic_profile(self.model_cfg, self.batch, self.seq)
+        t_d = self.ferret_cfg.t_d or planner_lib.default_data_interval(profile)
+        return planner_lib.plan(
+            profile,
+            t_d,
+            self.ferret_cfg.budget_bytes,
+            c=self.ferret_cfg.decay_c,
+            V_D=self.ferret_cfg.data_value,
+            max_workers=self.ferret_cfg.max_workers,
+            max_stages=self.ferret_cfg.max_stages,
+        )
+
+    # -- the one entrypoint ------------------------------------------------
+    def run(
+        self,
+        runner: Optional[Union[str, Runner]] = None,
+        *,
+        stream: Optional[StreamLike] = None,
+        params: Optional[Pytree] = None,
+        max_rounds: Optional[int] = None,
+        **runner_opts,
+    ) -> StreamResult:
+        """Run the stream through a registered runner. One signature for
+        every (runner × algorithm) pair; returns the unified StreamResult."""
+        r = get_runner(runner if runner is not None else self.default_runner)
+        arrays = self._resolve_stream(stream, max_rounds)
+        self._infer_shapes(arrays)
+        run_params = params if params is not None else self.params
+        self.algorithm.reset()
+        if r.prepare_stream:
+            from repro.models import transformer as T
+
+            ctx = PrepareContext(
+                params=run_params,
+                forward_fn=lambda p, b: T.forward(self.model_cfg, p, b)[0],
+            )
+            arrays = self.algorithm.prepare_stream(arrays, ctx)
+        return r.run(self, run_params, arrays, **runner_opts)
+
+    # -- internals ---------------------------------------------------------
+    def _resolve_stream(
+        self, stream: Optional[StreamLike], max_rounds: Optional[int]
+    ) -> Dict[str, np.ndarray]:
+        if stream is not None:  # explicit per-run stream: never cached
+            return as_stream_source(stream).materialize(max_rounds)
+        if self.stream is None:
+            raise ValueError(
+                "no stream: pass stream= to FerretSession(...) or run(...)"
+            )
+        # the session stream is materialized exactly once and cached so
+        # every run compares runners on identical data: bounded streams
+        # cache in full (max_rounds always slices a prefix); unbounded
+        # streams cache the first run's window, and asking for more than
+        # that window later is an error, never a silent truncation
+        if self._cached_stream is None:
+            self._cache_is_full = self.stream.length is not None
+            self._cached_stream = self.stream.materialize(
+                None if self._cache_is_full else max_rounds
+            )
+        arrays = self._cached_stream
+        cached = next(iter(arrays.values())).shape[0]
+        if max_rounds is not None and max_rounds > cached and not self._cache_is_full:
+            # an unbounded source's cache is only the first run's window;
+            # never silently truncate a larger request
+            raise ValueError(
+                f"the session stream cache holds {cached} rounds but "
+                f"max_rounds={max_rounds} was requested — pass stream= to "
+                "run(...) to feed fresh rounds from a live source"
+            )
+        if max_rounds is not None and max_rounds < cached:
+            arrays = {k: v[:max_rounds] for k, v in arrays.items()}
+        return arrays
+
+    def _infer_shapes(self, arrays: Dict[str, np.ndarray]) -> None:
+        if self.batch is not None and self.seq is not None:
+            return
+        if "tokens" in arrays:
+            _, b, s = arrays["tokens"].shape[:3]
+            self.batch = self.batch or int(b)
+            self.seq = self.seq or int(s)
+        elif "x" in arrays:
+            self.batch = self.batch or int(arrays["x"].shape[1])
+            if self.seq is None:
+                raise ValueError(
+                    "cannot infer seq from a vector stream — pass seq= to "
+                    "FerretSession"
+                )
+        else:
+            raise ValueError(
+                "cannot infer batch/seq from stream fields "
+                f"{sorted(arrays)} — pass batch=/seq= to FerretSession"
+            )

@@ -1,0 +1,168 @@
+"""StreamSource: one iterator abstraction over every stream shape.
+
+The trainers consume dict-of-arrays stacked over rounds (``lax.scan`` xs):
+``{"tokens": (R, b, s), "labels": (R, b, s)}``. A ``StreamSource`` produces
+exactly that, but decouples *where rounds come from* — a finite in-memory
+array, a Python generator, or a live/unbounded feed — from the runners:
+
+- ``ArrayStreamSource``    — finite dict-of-arrays (what ``make_stream``
+  returns), with an exactly-once cursor and ``seek`` for resume.
+- ``IterableStreamSource`` — any iterator/generator of per-round batch
+  dicts ``{k: (b, ...)}``; may be unbounded (``length=None``).
+- ``as_stream_source``     — coercion: sources pass through, dicts wrap,
+  ``StreamConfig`` synthesizes, iterables/generators wrap.
+
+``take(n)`` pops up to ``n`` rounds (stacked); ``materialize(max_rounds)``
+drains to one stacked dict — unbounded sources require ``max_rounds``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Iterator, Optional, Union
+
+import numpy as np
+
+from repro.ocl.streams import StreamConfig, make_stream
+
+Batch = Dict[str, np.ndarray]
+
+
+class StreamSource:
+    """Base protocol; subclasses implement ``take`` and ``length``."""
+
+    @property
+    def length(self) -> Optional[int]:
+        """Total rounds, or ``None`` when unbounded/unknown."""
+        raise NotImplementedError
+
+    @property
+    def remaining(self) -> Optional[int]:
+        """Rounds not yet consumed, or ``None`` when unbounded/unknown."""
+        raise NotImplementedError
+
+    def take(self, n: int) -> Optional[Batch]:
+        """Pop up to ``n`` rounds stacked as ``{k: (m, b, ...)}``, m ≤ n.
+
+        Returns ``None`` once the source is exhausted. Consumption is
+        exactly-once: rounds returned here are never returned again.
+        """
+        raise NotImplementedError
+
+    def materialize(self, max_rounds: Optional[int] = None) -> Batch:
+        """Drain (up to ``max_rounds``) into one stacked dict-of-arrays."""
+        if max_rounds is None and self.length is None:
+            raise ValueError(
+                "unbounded StreamSource: pass max_rounds (e.g. "
+                "session.run(max_rounds=...)) to bound the run"
+            )
+        chunks = []
+        left = max_rounds if max_rounds is not None else self.remaining
+        while left is None or left > 0:
+            got = self.take(min(left or 256, 256))
+            if got is None:
+                break
+            chunks.append(got)
+            if left is not None:
+                left -= next(iter(got.values())).shape[0]
+        if not chunks:
+            raise ValueError("StreamSource is exhausted — nothing to run")
+        keys = chunks[0].keys()
+        return {k: np.concatenate([c[k] for c in chunks], axis=0) for k in keys}
+
+    def __iter__(self) -> Iterator[Batch]:
+        while True:
+            got = self.take(1)
+            if got is None:
+                return
+            yield {k: v[0] for k, v in got.items()}
+
+
+class ArrayStreamSource(StreamSource):
+    """Finite stream backed by stacked arrays, with a consumption cursor."""
+
+    def __init__(self, arrays: Batch):
+        if not arrays:
+            raise ValueError("empty stream dict")
+        lens = {k: v.shape[0] for k, v in arrays.items()}
+        if len(set(lens.values())) != 1:
+            raise ValueError(f"inconsistent round counts across fields: {lens}")
+        self.arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        self._length = next(iter(lens.values()))
+        self.cursor = 0
+
+    @property
+    def length(self) -> Optional[int]:
+        return self._length
+
+    @property
+    def remaining(self) -> Optional[int]:
+        return self._length - self.cursor
+
+    def seek(self, round_idx: int) -> None:
+        """Move the cursor (checkpoint resume: skip already-consumed rounds)."""
+        if not 0 <= round_idx <= self._length:
+            raise ValueError(f"seek({round_idx}) outside [0, {self._length}]")
+        self.cursor = round_idx
+
+    def take(self, n: int) -> Optional[Batch]:
+        if self.cursor >= self._length:
+            return None
+        end = min(self.cursor + n, self._length)
+        out = {k: v[self.cursor:end] for k, v in self.arrays.items()}
+        self.cursor = end
+        return out
+
+
+class IterableStreamSource(StreamSource):
+    """Wraps an iterator of per-round batch dicts; may be unbounded."""
+
+    def __init__(self, rounds: Iterable[Batch], length: Optional[int] = None):
+        self._it = iter(rounds)
+        self._declared = length
+        self._consumed = 0
+        self._done = False
+
+    @property
+    def length(self) -> Optional[int]:
+        return self._declared
+
+    @property
+    def remaining(self) -> Optional[int]:
+        if self._done:
+            return 0
+        if self._declared is None:
+            return None
+        return self._declared - self._consumed
+
+    def take(self, n: int) -> Optional[Batch]:
+        rows = []
+        for _ in range(n):
+            try:
+                rows.append(next(self._it))
+            except StopIteration:
+                self._done = True
+                break
+        if not rows:
+            return None
+        self._consumed += len(rows)
+        return {k: np.stack([np.asarray(r[k]) for r in rows]) for k in rows[0]}
+
+
+StreamLike = Union[StreamSource, Batch, StreamConfig, Iterable[Batch]]
+
+
+def as_stream_source(obj: StreamLike, length: Optional[int] = None) -> StreamSource:
+    """Coerce anything stream-shaped into a ``StreamSource``."""
+    if isinstance(obj, StreamSource):
+        return obj
+    if isinstance(obj, StreamConfig):
+        return ArrayStreamSource(make_stream(obj))
+    if isinstance(obj, dict):
+        return ArrayStreamSource(obj)
+    if hasattr(obj, "__iter__") or hasattr(obj, "__next__"):
+        return IterableStreamSource(obj, length=length)
+    raise TypeError(
+        f"cannot interpret {type(obj).__name__} as a stream: pass a "
+        "StreamSource, a dict of (R, b, ...) arrays, a StreamConfig, or an "
+        "iterable of per-round batch dicts"
+    )

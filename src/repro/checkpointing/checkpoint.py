@@ -122,7 +122,9 @@ def restore_checkpoint(
     return state, int(manifest["step"]), manifest.get("extras", {})
 
 
-def plan_manifest(plan, cursor: Optional[int] = None, budget_bytes: Optional[float] = None) -> Dict[str, Any]:
+def plan_manifest(
+    plan, cursor: Optional[int] = None, budget_bytes: Optional[float] = None
+) -> Dict[str, Any]:
     """JSON-safe checkpoint extras describing a live pipeline plan.
 
     Rides in the manifest so an elastic restart (runtime/elastic_trainer.py)

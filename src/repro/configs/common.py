@@ -4,7 +4,8 @@ The assigned benchmark cells are (arch × shape) with:
 
     train_4k     seq=4096    global_batch=256   -> lowers train_step
     prefill_32k  seq=32768   global_batch=32    -> lowers serve prefill
-    decode_32k   seq=32768   global_batch=128   -> lowers serve decode (1 new token, KV cache of seq)
+    decode_32k   seq=32768   global_batch=128   -> lowers serve decode (1 new token,
+                                                    KV cache of seq)
     long_500k    seq=524288  global_batch=1     -> decode; sub-quadratic archs only
 
 ``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation) for every

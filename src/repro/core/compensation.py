@@ -17,7 +17,6 @@ Pallas kernels on TPU (``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Optional, Tuple
 
 import jax

@@ -93,13 +93,13 @@ def stage_stats(profile: ModelProfile, part: Partition) -> StageStats:
     tf_list, tb_list = [], []
     for j in range(part.num_stages):
         layers = [profile.layers[i] for i in part.stage_layers(j)]
-        w.append(sum(l.w_bytes for l in layers))
-        a.append(sum(l.a_bytes + l.a_internal_bytes for l in layers))
+        w.append(sum(ly.w_bytes for ly in layers))
+        a.append(sum(ly.a_bytes + ly.a_internal_bytes for ly in layers))
         # Eq. 4: T1 drops Σ_{l=L_i+1}^{L_{i+1}-1} |â_l| — everything except the
         # first layer's activations (the stage input survives for recompute).
-        a_rec.append(sum(l.a_bytes + l.a_internal_bytes for l in layers[1:]))
-        tf_list.append(sum(l.t_fwd for l in layers))
-        tb_list.append(sum(l.t_bwd for l in layers))
+        a_rec.append(sum(ly.a_bytes + ly.a_internal_bytes for ly in layers[1:]))
+        tf_list.append(sum(ly.t_fwd for ly in layers))
+        tb_list.append(sum(ly.t_bwd for ly in layers))
     return StageStats(w=w, a=a, a_recomputable=a_rec, t_f=max(tf_list), t_b=max(tb_list))
 
 

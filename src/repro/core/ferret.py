@@ -9,15 +9,18 @@ This is the user-facing composition of the paper's three contributions:
 ``FerretTrainer.run_stream`` executes a stream and reports online accuracy,
 the empirical adaptation rate (Def. 4.1), and the planned memory footprint
 (for agm/tagm comparisons).
+
+Note: ``FerretTrainer`` / ``sequential_oracle_run`` are the internal
+engines behind ``repro.api.FerretSession`` — prefer the session layer for
+new code; these entrypoints stay importable for compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,7 +30,8 @@ from repro.core import schedule as sched_lib
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, analytic_profile
 from repro.models.config import ModelConfig
-from repro.ocl.algorithms import OCLConfig, wrap_staged_model
+from repro.ocl.algorithms import OCLConfig
+from repro.ocl.registry import OCLAlgorithm, get_algorithm
 from repro.optim.optimizers import Optimizer, adamw
 
 Pytree = Any
@@ -84,11 +88,17 @@ class FerretTrainer:
         seq: int,
         optimizer: Optional[Optimizer] = None,
         profile: Optional[ModelProfile] = None,
+        algorithm: Optional[Union[str, OCLAlgorithm]] = None,
     ):
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
         self.batch = batch
         self.seq = seq
+        self.algorithm = (
+            get_algorithm(algorithm, ferret_cfg.ocl)
+            if algorithm is not None
+            else get_algorithm(ferret_cfg.ocl)
+        )
         self.profile = profile or analytic_profile(model_cfg, batch, seq)
         t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
         self.t_d = t_d
@@ -103,7 +113,7 @@ class FerretTrainer:
         )
         self.boundaries = list(self.plan.partition.bounds)
         staged = staged_from_transformer(model_cfg, self.boundaries)
-        self.staged = wrap_staged_model(staged, ferret_cfg.ocl)
+        self.staged = self.algorithm.wrap_staged(staged)
         self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
 
     # ------------------------------------------------------------------
@@ -156,6 +166,7 @@ class FerretTrainer:
         et = ElasticStreamTrainer(
             self.model_cfg, self.cfg, batch=self.batch, seq=self.seq,
             optimizer=self.optimizer, profile=self.profile,
+            algorithm=self.algorithm,
         )
         result = et.run_stream(params, stream, schedule, **kwargs)
         self.final_params = result.final_params

@@ -21,12 +21,10 @@ engine with ``sync_period=P`` schedules (fresh gradients, delayed updates).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import compensation as comp_lib
 from repro.core.schedule import EngineSchedule

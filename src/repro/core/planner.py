@@ -132,7 +132,7 @@ def search(
 
 def _candidate_caps(profile: ModelProfile) -> List[float]:
     """All contiguous-range sums of (t^f_i + t^b_i) — candidate t^c values."""
-    times = [l.t_fwd + l.t_bwd for l in profile.layers]
+    times = [ly.t_fwd + ly.t_bwd for ly in profile.layers]
     caps = set()
     for i in range(len(times)):
         acc = 0.0
@@ -146,8 +146,8 @@ def _partition_for_cap(profile: ModelProfile, t_c: float) -> Optional[cm.Partiti
     """Greedy consecutive grouping (Alg. 3 lines 11–16)."""
     bounds = [0]
     acc = 0.0
-    for i, l in enumerate(profile.layers):
-        t = l.t_fwd + l.t_bwd
+    for i, ly in enumerate(profile.layers):
+        t = ly.t_fwd + ly.t_bwd
         if t > t_c + 1e-18:
             return None  # single layer exceeds the cap
         if acc + t > t_c + 1e-18:
@@ -201,4 +201,4 @@ def plan(
 
 def default_data_interval(profile: ModelProfile) -> float:
     """Paper §12: t^d = max_i t̂_i^f (one layer-forward per arrival)."""
-    return max(l.t_fwd for l in profile.layers)
+    return max(ly.t_fwd for ly in profile.layers)

@@ -13,9 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
-
-import numpy as np
+from typing import List
 
 from repro.models.config import ModelConfig
 
@@ -49,7 +47,7 @@ class ModelProfile:
         return len(self.layers)
 
     def total_w(self) -> int:
-        return sum(l.w_bytes for l in self.layers)
+        return sum(ly.w_bytes for ly in self.layers)
 
 
 def _block_flops_per_token(cfg: ModelConfig, seq: int) -> float:
@@ -165,7 +163,9 @@ def measured_profile(
     from repro.models.transformer import _block_train
 
     fwd = jax.jit(lambda p, x: _block_train(cfg, p, x, jnp.int32(0), pos)[0])
-    bwd = jax.jit(jax.grad(lambda p, x: jnp.sum(_block_train(cfg, p, x, jnp.int32(0), pos)[0] ** 2)))
+    bwd = jax.jit(jax.grad(
+        lambda p, x: jnp.sum(_block_train(cfg, p, x, jnp.int32(0), pos)[0] ** 2)
+    ))
 
     fwd(block, x).block_until_ready()
     jax.block_until_ready(bwd(block, x))

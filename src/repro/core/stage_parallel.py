@@ -20,7 +20,7 @@ serving driver for stage-sharded scoring at pod scale.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +121,7 @@ def spatial_pipeline_loss(
     from repro.models.layers import cross_entropy_loss
 
     logits = spatial_pipeline_logits(cfg, params, batch, mesh, num_stages, axis)
-    M = logits.shape[0]
     return cross_entropy_loss(
-        logits.reshape(-1, *logits.shape[2:]), batch["labels"].reshape(-1, batch["labels"].shape[-1])
+        logits.reshape(-1, *logits.shape[2:]),
+        batch["labels"].reshape(-1, batch["labels"].shape[-1]),
     )

@@ -13,7 +13,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -96,7 +96,9 @@ def iter_fisher_leaf_stats_pallas(
     shape = grad.shape
     n = grad.size
     pad = (-n) % BLOCK
-    flat = lambda a: jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
+    def flat(a):
+        return jnp.pad(a.reshape(-1).astype(jnp.float32), (0, pad))
+
     gf, df, vrf, vaf = flat(grad), flat(delta), flat(v_r), flat(v_a)
     nb = gf.shape[0] // BLOCK
 

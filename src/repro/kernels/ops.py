@@ -54,8 +54,8 @@ def ssd_scan(
     chunk: int,
     initial_state: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    l = x.shape[1]
-    pad = (-l) % chunk
+    slen = x.shape[1]
+    pad = (-slen) % chunk
     if pad:
         # dt=0 padding is a no-op on the state (decay exp(0)=1, increment 0).
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -70,7 +70,7 @@ def ssd_scan(
         )
     else:
         y, state = _ref.ssd_scan_ref(x, dt, A, B, C, chunk, initial_state)
-    return (y[:, :l] if pad else y), state
+    return (y[:, :slen] if pad else y), state
 
 
 @jax.jit

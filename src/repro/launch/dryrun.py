@@ -34,7 +34,11 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import cost_analysis_dict
 from repro.configs.common import SHAPES, InputShape, input_specs, shape_applicable
 from repro.launch import shardings as sh
-from repro.launch.hlo_analysis import RooflineTerms, analytic_memory_bytes, parse_collectives, roofline_from_compiled
+from repro.launch.hlo_analysis import (
+    RooflineTerms,
+    analytic_memory_bytes,
+    parse_collectives,
+)
 from repro.launch.mesh import axis_sizes, data_axes, make_production_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
 from repro.models import shard_hints
@@ -254,7 +258,7 @@ def dryrun_cell(
         if shape.kind != "train":
             cache_s = jax.eval_shape(lambda: T.init_cache(cfg, shape.batch, shape.seq))
             cache_bytes = sum(
-                int(np_prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(cache_s)
+                int(np_prod(leaf.shape)) * leaf.dtype.itemsize for leaf in jax.tree.leaves(cache_s)
             )
         mem_model = analytic_memory_bytes(
             cfg, shape, mesh.devices.size, model_shard, microbatch, cache_bytes

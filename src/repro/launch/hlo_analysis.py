@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 from repro.compat import cost_analysis_dict
 from repro.core.profiler import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -55,7 +55,8 @@ def _group_size(line: str, default: int) -> int:
     m = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
     if m:
         return len(m.group(1).split(","))
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota v2 format [num_groups, group_size]
+    # iota v2 format [num_groups, group_size]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
     if m:
         return int(m.group(2))
     return default

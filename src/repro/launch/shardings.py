@@ -15,7 +15,7 @@ Weights use 2-D sharding — FSDP over the batch axes ⊗ TP over "model"
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 from jax.sharding import NamedSharding
@@ -59,7 +59,6 @@ def batch_pspecs(
             dp_spec = cand
             break
     specs: Dict[str, P] = {}
-    seq = shape.seq if shape.kind != "decode" else 1
     if cfg.embed_inputs:
         specs["tokens"] = P(dp_spec, None)
     else:
@@ -84,13 +83,16 @@ def cache_pspecs(
         if name == "pos":
             return P()
         if name in ("k", "v"):  # (L, b, S, kv, hd)
-            return P(None, _maybe(shp[1], dp_ax, mesh_axes), _maybe(shp[2], model, mesh_axes), None, None)
+            return P(None, _maybe(shp[1], dp_ax, mesh_axes),
+                     _maybe(shp[2], model, mesh_axes), None, None)
         if name in ("k_scale", "v_scale"):  # (L, b, S, kv)
             return P(None, _maybe(shp[1], dp_ax, mesh_axes), _maybe(shp[2], model, mesh_axes), None)
         if name in ("k_local", "v_local"):  # (G, r, b, W, kv, hd)
-            return P(None, None, _maybe(shp[2], dp_ax, mesh_axes), _maybe(shp[3], model, mesh_axes), None, None)
+            return P(None, None, _maybe(shp[2], dp_ax, mesh_axes),
+                     _maybe(shp[3], model, mesh_axes), None, None)
         if name in ("k_global", "v_global"):  # (G, b, S, kv, hd)
-            return P(None, _maybe(shp[1], dp_ax, mesh_axes), _maybe(shp[2], model, mesh_axes), None, None)
+            return P(None, _maybe(shp[1], dp_ax, mesh_axes),
+                     _maybe(shp[2], model, mesh_axes), None, None)
         if name in ("conv_x", "conv_B", "conv_C"):  # (L, b, K, ch)
             return P(None, _maybe(shp[1], dp_ax, mesh_axes), None, _maybe(shp[3], model, mesh_axes))
         if name == "state":  # (L, b, nh, ph, n)
@@ -100,7 +102,7 @@ def cache_pspecs(
         return P()
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
-    return jax.tree_util.tree_unflatten(treedef, [rule(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, leaf) for p, leaf in flat])
 
 
 def opt_pspecs(param_specs: Pytree, opt_state_shapes) -> Pytree:
@@ -119,7 +121,7 @@ def opt_pspecs(param_specs: Pytree, opt_state_shapes) -> Pytree:
         return spec_leaf
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_shapes)
-    return jax.tree_util.tree_unflatten(treedef, [rule(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, leaf) for p, leaf in flat])
 
 
 def named(mesh, spec_tree: Pytree) -> Pytree:

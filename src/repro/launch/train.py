@@ -25,13 +25,12 @@ import time
 import jax
 import numpy as np
 
+from repro.api import FerretSession
 from repro.core.compensation import CompensationConfig
-from repro.core.ferret import FerretConfig, FerretTrainer
 from repro.data.pipeline import DataPipeline, PipelineCfg, TokenStreamSource
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
 from repro.models.registry import get_config
-from repro.ocl.algorithms import OCLConfig
 from repro.ocl.streams import StreamConfig, make_stream
 from repro.optim.optimizers import adamw
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
@@ -55,7 +54,7 @@ def parse_budget_schedule(spec: str):
         except ValueError:
             raise SystemExit(
                 f"--budget-schedule: bad entry {item!r} — expected "
-                f"'round:GiB' items like '0:inf,120:2,180:0.5'"
+                "'round:GiB' items like '0:inf,120:2,180:0.5'"
             ) from None
     return events
 
@@ -74,28 +73,28 @@ def run_ferret(args) -> None:
         stream[k] = stream[k] % cfg.vocab_size
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     budget = math.inf if args.budget_gb <= 0 else args.budget_gb * 2**30
-    fc = FerretConfig(
-        budget_bytes=budget,
-        lr=args.lr,
+    session = FerretSession(
+        cfg, budget, args.ocl, stream,
+        batch=args.batch, seq=args.seq, lr=args.lr,
         compensation=CompensationConfig(method=args.compensation),
-        ocl=OCLConfig(method=args.ocl),
-        max_workers=4,
-        max_stages=8,
+        max_workers=4, max_stages=8, params=params,
     )
-    tr = FerretTrainer(cfg, fc, batch=args.batch, seq=args.seq)
-    plan = tr.plan
+    plan = session.plan
     print(
         f"plan: P={plan.partition.num_stages} N={len(plan.config.active_workers())} "
         f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible}"
     )
     t0 = time.time()
     if args.budget_schedule:
-        res = tr.run_stream_elastic(params, stream, parse_budget_schedule(args.budget_schedule))
+        res = session.run(
+            "elastic", schedule=parse_budget_schedule(args.budget_schedule)
+        )
         dt = time.time() - t0
         for s in res.segments:
             p = s.result.plan
             b = "inf" if math.isinf(s.budget_bytes) else f"{s.budget_bytes/2**30:.2f}GiB"
-            tag = f" replan={1e3*s.replan_s:.0f}ms remap={1e3*s.remap_s:.0f}ms" if s.replanned else ""
+            tag = (f" replan={1e3*s.replan_s:.0f}ms remap={1e3*s.remap_s:.0f}ms"
+                   if s.replanned else "")
             print(f"  seg [{s.start},{s.end}) budget={b} P={p.partition.num_stages} "
                   f"N={len(p.config.active_workers())} M={p.memory/2**20:.1f}MiB "
                   f"oacc={s.result.online_acc:.4f}{tag}")
@@ -105,11 +104,12 @@ def run_ferret(args) -> None:
             f"({res.rounds} items, exactly once, in {dt:.1f}s)"
         )
         return
-    res = tr.run_stream(params, stream)
+    res = session.run("pipelined")
     dt = time.time() - t0
+    lam = res.extras["lam_curve"]
     print(
         f"oacc={res.online_acc:.4f} admitted={res.admitted_frac:.2f} "
-        f"loss {res.losses[0]:.3f}→{res.losses[-1]:.3f} λ={res.lam_curve[-1]:.4f} "
+        f"loss {res.losses[0]:.3f}→{res.losses[-1]:.3f} λ={lam[-1]:.4f} "
         f"({args.steps} items in {dt:.1f}s)"
     )
 

@@ -4,9 +4,9 @@ Without this, differentiating the blocked-attention scan saves the
 (b, h, s, KB) probability tiles for every KV block — O(s²) residuals per
 layer, which is exactly the blow-up blocking the 16 GB/chip budget (see
 EXPERIMENTS.md §Perf iteration 2). Here the forward saves only
-(q, k, v, out, m, l) — O(s·d) — and the backward recomputes each tile once:
+(q, k, v, out, m, lse) — O(s·d) — and the backward recomputes each tile once:
 
-  fwd:  online-softmax scan over KV blocks  →  out, m (row max), l (row sum)
+  fwd:  online-softmax scan over KV blocks  →  out, m (row max), lse (row sum)
   bwd:  one more scan over KV blocks; per block recompute p, then
         dv += pᵀ·do,  ds = p∘(dp − D),  dq += ds·k,  dk += dsᵀ·q
         with D = rowsum(do ∘ out).
@@ -18,7 +18,6 @@ local:global pattern selects the window per layer inside one scan).
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,11 +44,11 @@ def _fwd_scan(qg, k, v, window_eff, KB):
     nb = kb.shape[0]
 
     m0 = jnp.full((b, kvh, g, s), _NEG, jnp.float32)
-    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    lse0 = jnp.zeros((b, kvh, g, s), jnp.float32)
     a0 = jnp.zeros((b, s, kvh, g, d), jnp.float32)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lse, acc = carry
         kblk, vblk, idx = inp
         scores = (
             jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk, preferred_element_type=jnp.float32)
@@ -63,14 +62,14 @@ def _fwd_scan(qg, k, v, window_eff, KB):
         m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
         p = jnp.exp(scores - m_new[..., None]) * allowed[None, None, None]
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        lse_new = lse * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
         acc_new = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
-        return (m_new, l_new, acc_new), None
+        return (m_new, lse_new, acc_new), None
 
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
-    out = acc / jnp.maximum(jnp.moveaxis(l, 3, 1), 1e-30)[..., None]  # (b,s,kv,g,d)
-    return out, m, l
+    (m, lse, acc), _ = jax.lax.scan(body, (m0, lse0, a0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(jnp.moveaxis(lse, 3, 1), 1e-30)[..., None]  # (b,s,kv,g,d)
+    return out, m, lse
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4,))
@@ -96,17 +95,17 @@ def _flash_fwd(q, k, v, window_eff, kv_block):
     b, s, h, d = q.shape
     kvh = k.shape[2]
     qg = q.reshape(b, s, kvh, h // kvh, d)
-    out, m, l = _fwd_scan(qg, k, v, window_eff, min(kv_block, s))
+    out, m, lse = _fwd_scan(qg, k, v, window_eff, min(kv_block, s))
     # residual `out` in model dtype (bf16): halves the per-layer residual
     # footprint; D = rowsum(do∘out) tolerates the rounding (flash standard)
-    res = (q, k, v, window_eff, out.astype(q.dtype), m, l)
+    res = (q, k, v, window_eff, out.astype(q.dtype), m, lse)
     return out.reshape(b, s, h, d).astype(q.dtype), res
 
 
 def _flash_bwd(kv_block, res, dout):
     if kv_block <= 0:
         kv_block = DEFAULT_KV_BLOCK
-    q, k, v, window_eff, out, m, l = res
+    q, k, v, window_eff, out, m, lse = res
     b, s, h, d = q.shape
     kvh = k.shape[2]
     g = h // kvh
@@ -118,7 +117,7 @@ def _flash_bwd(kv_block, res, dout):
     dog = dout.reshape(b, s, kvh, g, d).astype(jnp.float32)
     # D = rowsum(dout ∘ out): (b, kv, g, s)
     Drow = jnp.moveaxis(jnp.sum(dog * out.astype(jnp.float32), axis=-1), 1, 3)
-    l_safe = jnp.maximum(l, 1e-30)
+    lse_safe = jnp.maximum(lse, 1e-30)
 
     kb, vb = _blocks(k, KB), _blocks(v, KB)
     nb = kb.shape[0]
@@ -134,7 +133,7 @@ def _flash_bwd(kv_block, res, dout):
             kpos[None, :] > qpos[:, None] - window_eff
         )
         p = jnp.exp(scores - m[..., None]) * allowed[None, None, None]
-        pn = p / l_safe[..., None]  # normalized probabilities (b,kv,g,s,KB)
+        pn = p / lse_safe[..., None]  # normalized probabilities (b,kv,g,s,KB)
         dv_b = jnp.einsum("bkgqs,bqkgd->bskd", pn, dog)
         dp = jnp.einsum("bqkgd,bskd->bkgqs", dog, vf, preferred_element_type=jnp.float32)
         ds = pn * (dp - Drow[..., None]) * scale

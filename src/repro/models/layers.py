@@ -301,9 +301,11 @@ def attention_decode(
         k = apply_rope(k, position, cfg.rope_theta)
 
     slot = jnp.where(ring, cache_len % S, jnp.minimum(cache_len, S - 1))
-    dus = lambda buf, new: jax.lax.dynamic_update_slice_in_dim(
-        buf, new.astype(buf.dtype), slot, axis=1
-    )
+    def dus(buf, new):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), slot, axis=1
+        )
+
     newc = dict(cache)
     if "k_scale" in cache:  # int8 path
         kq, ks = quantize_kv(k)

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import rms_norm
 
 
 def rms_norm_gated(y: jax.Array, z: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
@@ -61,9 +60,15 @@ def ssm_mixer_train(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
     cd = x.dtype
 
     z, xs, B, C, dt_raw = _project(cfg, p, x)
-    xs = jax.nn.silu(causal_depthwise_conv(xs, p["conv_x"], p["conv_bx"]).astype(jnp.float32)).astype(cd)
-    B = jax.nn.silu(causal_depthwise_conv(B, p["conv_B"], p["conv_bB"]).astype(jnp.float32)).astype(cd)
-    C = jax.nn.silu(causal_depthwise_conv(C, p["conv_C"], p["conv_bC"]).astype(jnp.float32)).astype(cd)
+    xs = jax.nn.silu(
+        causal_depthwise_conv(xs, p["conv_x"], p["conv_bx"]).astype(jnp.float32)
+    ).astype(cd)
+    B = jax.nn.silu(
+        causal_depthwise_conv(B, p["conv_B"], p["conv_bB"]).astype(jnp.float32)
+    ).astype(cd)
+    C = jax.nn.silu(
+        causal_depthwise_conv(C, p["conv_C"], p["conv_bC"]).astype(jnp.float32)
+    ).astype(cd)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
@@ -89,9 +94,15 @@ def ssm_mixer_prefill(
     cd = x.dtype
 
     z, xs_raw, B_raw, C_raw, dt_raw = _project(cfg, p, x)
-    xs = jax.nn.silu(causal_depthwise_conv(xs_raw, p["conv_x"], p["conv_bx"]).astype(jnp.float32)).astype(cd)
-    B = jax.nn.silu(causal_depthwise_conv(B_raw, p["conv_B"], p["conv_bB"]).astype(jnp.float32)).astype(cd)
-    C = jax.nn.silu(causal_depthwise_conv(C_raw, p["conv_C"], p["conv_bC"]).astype(jnp.float32)).astype(cd)
+    xs = jax.nn.silu(
+        causal_depthwise_conv(xs_raw, p["conv_x"], p["conv_bx"]).astype(jnp.float32)
+    ).astype(cd)
+    B = jax.nn.silu(
+        causal_depthwise_conv(B_raw, p["conv_B"], p["conv_bB"]).astype(jnp.float32)
+    ).astype(cd)
+    C = jax.nn.silu(
+        causal_depthwise_conv(C_raw, p["conv_C"], p["conv_bC"]).astype(jnp.float32)
+    ).astype(cd)
 
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
     A = -jnp.exp(p["A_log"].astype(jnp.float32))

@@ -12,7 +12,7 @@ cache geometries (ring-window vs. full) stay separately allocated.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -443,7 +443,6 @@ def _attn_train_with_kv(cfg, p, x, kind, positions):
         _window_eff,
         apply_mrope,
         apply_rope,
-        blocked_gqa_attention,
         causal_mask_bias,
         gqa_scores_softmax_value,
     )
@@ -607,7 +606,9 @@ def stage_forward(
     later stages receive activations. The last stage returns logits."""
     lo, hi = boundaries[stage_idx], boundaries[stage_idx + 1]
     if stage_idx == 0:
-        x = _embed_input(cfg, {"embed": stage_params.get("embed")} if cfg.embed_inputs else {}, batch)
+        x = _embed_input(
+            cfg, {"embed": stage_params.get("embed")} if cfg.embed_inputs else {}, batch
+        )
     else:
         x = x_or_batch
     b, s = x.shape[0], x.shape[1]

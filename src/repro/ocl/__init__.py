@@ -1,19 +1,33 @@
-"""Online Continual Learning substrate: streams, metrics, algorithms, baselines."""
+"""Online Continual Learning substrate: streams, metrics, algorithms, baselines.
 
-from repro.ocl.metrics import online_accuracy, agm, tagm, adaptation_rate_empirical
-from repro.ocl.streams import StreamConfig, make_stream
+The algorithms live in the plugin registry (``repro.ocl.registry``); the
+user-facing session layer is ``repro.api``.
+"""
+
 from repro.ocl.algorithms import OCLConfig, make_ocl_step
 from repro.ocl.baselines import AdmissionPolicy, make_admission_mask
+from repro.ocl.metrics import adaptation_rate_empirical, agm, online_accuracy, tagm
+from repro.ocl.registry import (
+    OCLAlgorithm,
+    available_algorithms,
+    get_algorithm,
+    register_algorithm,
+)
+from repro.ocl.streams import StreamConfig, make_stream
 
 __all__ = [
-    "online_accuracy",
-    "agm",
-    "tagm",
-    "adaptation_rate_empirical",
-    "StreamConfig",
-    "make_stream",
-    "OCLConfig",
-    "make_ocl_step",
     "AdmissionPolicy",
+    "OCLAlgorithm",
+    "OCLConfig",
+    "StreamConfig",
+    "adaptation_rate_empirical",
+    "agm",
+    "available_algorithms",
+    "get_algorithm",
     "make_admission_mask",
+    "make_ocl_step",
+    "make_stream",
+    "online_accuracy",
+    "register_algorithm",
+    "tagm",
 ]

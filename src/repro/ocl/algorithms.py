@@ -1,19 +1,16 @@
-"""OCL algorithms (paper Table 2): Vanilla, ER, MIR, LwF, MAS.
+"""OCL algorithm building blocks (paper Table 2): Vanilla, ER, MIR, LwF, MAS.
 
-Two integration paths:
+The algorithms themselves are first-class plugin classes in
+``repro.ocl.registry`` (resolved by name through ``@register_algorithm`` /
+``get_algorithm``); the session layer ``repro.api`` is the front door.
+This module keeps:
 
-1. ``make_ocl_step`` — exact algorithms for the sequential (non-pipelined)
-   trainer used by the skip baselines and Oracle: true MIR (virtual-update
-   interference scoring), LwF distillation against a task-boundary teacher,
-   MAS importance-weighted regularization.
-
-2. ``wrap_staged_model`` — the same algorithms as loss wrappers for the
-   Ferret pipeline engine. Replay items ride inside the per-round batch
-   (host-side reservoir); the teacher and MAS state are segment constants
-   (the engine re-jits per stream segment, refreshing them at task
-   boundaries — the paper snapshots at the same granularity). MIR inside
-   the one-scan engine uses max-current-loss candidate selection as the
-   interference proxy (documented deviation; the exact variant is in path 1).
+- ``OCLConfig`` — the shared hyper-parameter record (``method`` selects the
+  registered algorithm),
+- the shared math (``ReplayBuffer``, KD loss, MAS importance/penalty),
+- deprecated shims (``make_ocl_step``, ``wrap_staged_model``,
+  ``mix_replay_into_stream``) that delegate to the registry so pre-registry
+  call sites keep working.
 """
 
 from __future__ import annotations
@@ -25,21 +22,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import StagedModel
-from repro.optim.optimizers import Optimizer
-
 Pytree = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class OCLConfig:
-    method: str = "vanilla"  # vanilla | er | mir | lwf | mas
+    method: str = "vanilla"  # any name in repro.ocl.registry (vanilla | er | ...)
     replay_size: int = 5000  # paper §12: buffer 5e3
     replay_batch: int = 8
     mir_candidates: int = 32
     lwf_weight: float = 1.0
     lwf_temp: float = 2.0
     mas_weight: float = 0.1
+    refresh_every: int = 0  # sequential path: teacher/Ω refresh period (0 = entry only)
     seed: int = 0
 
 
@@ -117,7 +112,7 @@ def mas_penalty(params: Pytree, ref: Pytree, omega: Pytree) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Path 1: exact sequential OCL step (used by baselines/Oracle)
+# Deprecated shims → repro.ocl.registry
 # ---------------------------------------------------------------------------
 
 
@@ -125,91 +120,33 @@ def make_ocl_step(
     ocl: OCLConfig,
     loss_fn: Callable,  # (params, batch) -> (loss, metrics)
     forward_fn: Callable,  # (params, batch) -> logits (for LwF/MIR/MAS)
-    optimizer: Optimizer,
+    optimizer,
 ):
-    """Returns jitted ``step(params, opt_state, batch, extras)``.
+    """Deprecated: use ``repro.ocl.registry.make_sequential_step``.
 
-    ``extras`` is a dict that may hold: 'replay' (stacked replay batch),
-    'candidates' (MIR candidate pool), 'teacher' (LwF teacher params),
-    'mas_ref'/'mas_omega'. Missing pieces degrade to Vanilla gracefully.
+    Returns the registry-built jitted ``step(params, opt_state, batch,
+    extras)`` and ``mir_select`` for ``ocl.method``, preserving the original
+    return signature. ``extras`` may hold 'replay', 'teacher',
+    'mas_ref'/'mas_omega'; missing pieces degrade to Vanilla gracefully.
     """
+    from repro.ocl.registry import get_algorithm, make_sequential_step
 
-    def total_loss(params, batch, extras):
-        loss, metrics = loss_fn(params, batch)
-        if ocl.method in ("er", "mir") and extras.get("replay") is not None:
-            r_loss, _ = loss_fn(params, extras["replay"])
-            loss = loss + r_loss
-        if ocl.method == "lwf" and extras.get("teacher") is not None:
-            student = forward_fn(params, batch)
-            teacher = forward_fn(extras["teacher"], batch)
-            loss = loss + ocl.lwf_weight * _kd_loss(student, teacher, ocl.lwf_temp)
-        if ocl.method == "mas" and extras.get("mas_omega") is not None:
-            loss = loss + ocl.mas_weight * mas_penalty(
-                params, extras["mas_ref"], extras["mas_omega"]
-            )
-        return loss, metrics
+    step, _eval_fn, helpers = make_sequential_step(
+        get_algorithm(ocl), loss_fn, forward_fn, optimizer
+    )
+    return step, helpers.mir_select
 
-    @jax.jit
-    def step(params, opt_state, batch, extras):
-        (loss, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
-            params, batch, extras
+
+def wrap_staged_model(staged, ocl: OCLConfig, teacher_logits_key: str = "teacher_logits"):
+    """Deprecated: use ``get_algorithm(ocl).wrap_staged(staged)``."""
+    from repro.ocl.registry import get_algorithm
+
+    if teacher_logits_key != "teacher_logits":
+        raise ValueError(
+            "the registry LwF wrapper reads the fixed stream field "
+            f"'teacher_logits'; got teacher_logits_key={teacher_logits_key!r}"
         )
-        new_params, new_opt = optimizer.update(params, grads, opt_state)
-        return new_params, new_opt, loss, metrics
-
-    @jax.jit
-    def mir_select(params, opt_state, batch, candidates):
-        """True MIR: virtual step on the new batch, keep the replay candidates
-
-        whose loss increases the most."""
-        (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        virt_params, _ = optimizer.update(params, grads, opt_state)
-
-        def per_item_loss(p, cand):
-            def one(i):
-                item = jax.tree.map(lambda a: a[i : i + 1], cand)
-                return loss_fn(p, item)[0]
-
-            n = jax.tree.leaves(cand)[0].shape[0]
-            return jnp.stack([one(i) for i in range(n)])
-
-        before = per_item_loss(params, candidates)
-        after = per_item_loss(virt_params, candidates)
-        interference = after - before
-        _, top = jax.lax.top_k(interference, ocl.replay_batch)
-        return jax.tree.map(lambda a: a[top], candidates)
-
-    return step, mir_select
-
-
-# ---------------------------------------------------------------------------
-# Path 2: loss wrappers for the pipeline engine
-# ---------------------------------------------------------------------------
-
-
-def wrap_staged_model(
-    staged: StagedModel,
-    ocl: OCLConfig,
-    teacher_logits_key: str = "teacher_logits",
-) -> StagedModel:
-    """Augment the staged loss with replay / LwF terms carried in the batch.
-
-    Expected optional batch fields (host-prepared, stacked over rounds):
-    - 'replay_mask' (b,)           : 1.0 where the row is a replay item
-    - 'teacher_logits' (b, s, V)   : LwF teacher outputs for these tokens
-    MAS rides through ``param_penalty`` (see FerretTrainer), not the batch.
-    """
-    base_loss = staged.loss
-
-    def loss(logits, batch):
-        ce, metrics = base_loss(logits, batch)
-        if ocl.method == "lwf" and teacher_logits_key in batch:
-            ce = ce + ocl.lwf_weight * _kd_loss(
-                logits, batch[teacher_logits_key], ocl.lwf_temp
-            )
-        return ce, metrics
-
-    return StagedModel(staged.num_stages, staged.forward_stage, loss)
+    return get_algorithm(ocl).wrap_staged(staged)
 
 
 def mix_replay_into_stream(
@@ -217,31 +154,9 @@ def mix_replay_into_stream(
     ocl: OCLConfig,
     fields: Tuple[str, ...] = ("tokens", "labels"),
 ) -> Dict[str, np.ndarray]:
-    """Host-side ER: extend each round's batch with reservoir samples.
+    """Deprecated: use ``get_algorithm(ocl).prepare_stream(stream)``."""
+    from repro.ocl.registry import _mix_replay
 
-    Online accuracy stays computed on the *new* rows via 'new_mask'."""
     if ocl.method not in ("er", "mir"):
         return stream
-    R = next(iter(stream.values())).shape[0]
-    buf = ReplayBuffer(ocl.replay_size, seed=ocl.seed)
-    out = {k: [] for k in fields}
-    new_mask = []
-    rb = ocl.replay_batch
-    for m in range(R):
-        row = {k: stream[k][m] for k in fields}
-        samp = buf.sample(rb)
-        if samp is None:
-            samp = {k: np.repeat(row[k][:1], rb, axis=0) for k in fields}
-        for k in fields:
-            out[k].append(np.concatenate([row[k], samp[k]], axis=0))
-        b_new = row[fields[0]].shape[0]
-        new_mask.append(
-            np.concatenate([np.ones(b_new, np.float32), np.zeros(rb, np.float32)])
-        )
-        buf.add_batch(row)
-    mixed = {k: np.stack(v) for k, v in out.items()}
-    mixed["new_mask"] = np.stack(new_mask)
-    for k in stream:
-        if k not in mixed:
-            mixed[k] = stream[k]
-    return mixed
+    return _mix_replay(stream, ocl, fields)

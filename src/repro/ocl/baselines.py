@@ -19,7 +19,7 @@ empirical adaptation-rate metric (Def. 4.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

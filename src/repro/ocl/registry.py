@@ -1,0 +1,459 @@
+"""Pluggable OCL algorithm registry: the ``method: str`` switch as classes.
+
+Every OCL algorithm is one ``OCLAlgorithm`` subclass registered under a
+name. An instance owns *everything* the algorithm needs on both execution
+paths, so the pipelined trainers (``FerretTrainer``, the elastic trainer's
+per-segment re-jit) and the exact sequential runner consume the same
+object instead of each re-implementing a string dispatch:
+
+pipeline path (one jit'd scan over the stream):
+    ``prepare_stream``   host-side stream augmentation before the run
+                         (ER/MIR replay mixing, LwF teacher logits)
+    ``wrap_staged``      loss wrapper over a ``StagedModel``
+    ``segment_refresh``  hook at elastic segment boundaries — refresh
+                         segment-constant state (e.g. the LwF teacher) for
+                         the remaining stream
+
+sequential path (exact per-item predict-then-train loop):
+    ``sequential_loss_extra``  extra loss terms (jit-traceable; state rides
+                               in the ``extras`` pytree)
+    ``host_extras``            build ``extras`` for the next step (replay
+                               sample, MIR selection, teacher params, Ω)
+    ``observe``                post-step host update (reservoir add)
+    ``sequential_refresh``     snapshot teacher / recompute MAS Ω
+
+Register your own from anywhere:
+
+    from repro.api import OCLAlgorithm, register_algorithm
+
+    @register_algorithm
+    class MyMethod(OCLAlgorithm):
+        name = "my-method"
+        def wrap_staged(self, staged): ...
+
+    FerretSession(model, algorithm="my-method", stream=stream).run()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Type, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import StagedModel
+from repro.ocl.algorithms import (
+    OCLConfig,
+    ReplayBuffer,
+    _kd_loss,
+    mas_importance,
+    mas_penalty,
+)
+
+Pytree = Any
+
+_REGISTRY: Dict[str, Type["OCLAlgorithm"]] = {}
+
+
+def register_algorithm(cls: Type["OCLAlgorithm"]) -> Type["OCLAlgorithm"]:
+    """Class decorator: register ``cls`` under ``cls.name``."""
+    name = getattr(cls, "name", None)
+    if not name or not isinstance(name, str):
+        raise ValueError(f"{cls!r} needs a string class attribute `name`")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def available_algorithms() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_algorithm(
+    spec: Union[str, OCLConfig, "OCLAlgorithm"],
+    cfg: Optional[OCLConfig] = None,
+) -> "OCLAlgorithm":
+    """Resolve an algorithm name / config / instance to an instance.
+
+    - ``OCLAlgorithm`` instance → returned as-is.
+    - ``OCLConfig``            → looked up by its ``method`` field.
+    - ``str``                  → looked up by name; ``cfg`` (or a default
+      ``OCLConfig`` with that method) parameterizes it.
+    """
+    if isinstance(spec, OCLAlgorithm):
+        return spec
+    if isinstance(spec, OCLConfig):
+        name, cfg = spec.method, spec
+    else:
+        name = spec
+        if cfg is None:
+            cfg = OCLConfig(method=name)
+        elif cfg.method != name:
+            cfg = dataclasses.replace(cfg, method=name)
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown OCL algorithm {name!r}; registered algorithms: "
+            f"{', '.join(available_algorithms())}. Add your own with "
+            "@repro.api.register_algorithm."
+        )
+    return _REGISTRY[name](cfg)
+
+
+@dataclasses.dataclass
+class PrepareContext:
+    """What ``prepare_stream`` may use beyond the raw stream.
+
+    ``forward_fn(params, batch) -> logits`` runs the live model; ``params``
+    are the weights entering the stream (the LwF teacher snapshot).
+    """
+
+    params: Pytree
+    forward_fn: Callable[[Pytree, Dict[str, jnp.ndarray]], jax.Array]
+
+
+class OCLAlgorithm:
+    """Base algorithm: Vanilla behaviour; subclasses override the hooks."""
+
+    name: ClassVar[str] = "vanilla"
+
+    def __init__(self, cfg: Optional[OCLConfig] = None):
+        self.cfg = cfg or OCLConfig(method=self.name)
+        self.reset()
+
+    # -- lifecycle ---------------------------------------------------------
+    def reset(self) -> None:
+        """Clear host-side state (replay buffer, teacher, Ω)."""
+
+    # -- pipeline path -----------------------------------------------------
+    def prepare_stream(
+        self, stream: Dict[str, np.ndarray], ctx: Optional[PrepareContext] = None
+    ) -> Dict[str, np.ndarray]:
+        return stream
+
+    def wrap_staged(self, staged: StagedModel) -> StagedModel:
+        return staged
+
+    def segment_refresh(
+        self,
+        params: Pytree,
+        stream_tail: Dict[str, np.ndarray],
+        ctx: Optional[PrepareContext] = None,
+    ) -> Optional[Dict[str, np.ndarray]]:
+        """Refresh segment-constant state at an elastic re-plan boundary.
+
+        ``params`` are the live (merged) weights; ``stream_tail`` is the
+        not-yet-consumed remainder of the prepared stream. May return
+        updated arrays for existing stream fields (same tail shapes);
+        ``None`` means nothing to refresh.
+        """
+        return None
+
+    # -- sequential path ---------------------------------------------------
+    def sequential_loss_extra(
+        self,
+        params: Pytree,
+        batch: Dict[str, jnp.ndarray],
+        extras: Dict[str, Any],
+        loss_fn: Callable,
+        forward_fn: Callable,
+    ) -> jax.Array:
+        """Extra loss terms; jit-traceable, state arrives via ``extras``."""
+        return jnp.zeros((), jnp.float32)
+
+    def host_extras(
+        self, params: Pytree, opt_state: Any, batch: Dict[str, jnp.ndarray], helpers
+    ) -> Dict[str, Any]:
+        """Host-side step preparation → the ``extras`` pytree for this step."""
+        return {}
+
+    def observe(self, batch: Dict[str, jnp.ndarray]) -> None:
+        """Post-step host update (e.g. reservoir add)."""
+
+    def sequential_refresh(self, params: Pytree, recent: List[Dict]) -> None:
+        """Periodic boundary hook: snapshot teacher / recompute Ω."""
+
+    def bind_forward(self, forward_fn: Callable) -> None:
+        """Sequential runner wires the model's forward (MAS Ω needs it)."""
+        self._forward_fn = forward_fn
+
+
+# ---------------------------------------------------------------------------
+# Replay mixing (shared by ER and MIR on the pipeline path)
+# ---------------------------------------------------------------------------
+
+
+def _mix_replay(
+    stream: Dict[str, np.ndarray], cfg: OCLConfig, fields=("tokens", "labels")
+) -> Dict[str, np.ndarray]:
+    """Host-side ER: extend each round's batch with reservoir samples.
+
+    Online accuracy stays computed on the *new* rows via 'new_mask'."""
+    R = next(iter(stream.values())).shape[0]
+    buf = ReplayBuffer(cfg.replay_size, seed=cfg.seed)
+    out: Dict[str, list] = {k: [] for k in fields}
+    new_mask = []
+    rb = cfg.replay_batch
+    for m in range(R):
+        row = {k: stream[k][m] for k in fields}
+        samp = buf.sample(rb)
+        if samp is None:
+            samp = {k: np.repeat(row[k][:1], rb, axis=0) for k in fields}
+        for k in fields:
+            out[k].append(np.concatenate([row[k], samp[k]], axis=0))
+        b_new = row[fields[0]].shape[0]
+        new_mask.append(
+            np.concatenate([np.ones(b_new, np.float32), np.zeros(rb, np.float32)])
+        )
+        buf.add_batch(row)
+    mixed = {k: np.stack(v) for k, v in out.items()}
+    mixed["new_mask"] = np.stack(new_mask)
+    for k in stream:
+        if k not in mixed:
+            mixed[k] = stream[k]
+    return mixed
+
+
+# ---------------------------------------------------------------------------
+# The five integrated algorithms (paper Table 2)
+# ---------------------------------------------------------------------------
+
+
+@register_algorithm
+class Vanilla(OCLAlgorithm):
+    """Plain online SGD on the arriving items."""
+
+    name = "vanilla"
+
+
+@register_algorithm
+class ER(OCLAlgorithm):
+    """Experience Replay: reservoir buffer, replayed alongside new items."""
+
+    name = "er"
+
+    def reset(self) -> None:
+        self.buffer = ReplayBuffer(self.cfg.replay_size, seed=self.cfg.seed)
+
+    # pipeline: replay rows ride inside the per-round batch
+    def prepare_stream(self, stream, ctx=None):
+        return _mix_replay(stream, self.cfg)
+
+    # sequential: exact — sample the buffer each step
+    def sequential_loss_extra(self, params, batch, extras, loss_fn, forward_fn):
+        if extras.get("replay") is None:
+            return jnp.zeros((), jnp.float32)
+        r_loss, _ = loss_fn(params, extras["replay"])
+        return r_loss
+
+    def host_extras(self, params, opt_state, batch, helpers):
+        return {"replay": self._sample_replay()}
+
+    def _sample_replay(self):
+        samp = self.buffer.sample(self.cfg.replay_batch)
+        return None if samp is None else {k: jnp.asarray(v) for k, v in samp.items()}
+
+    def observe(self, batch) -> None:
+        self.buffer.add_batch({k: np.asarray(v) for k, v in batch.items()})
+
+
+@register_algorithm
+class MIR(ER):
+    """Maximally Interfered Retrieval.
+
+    Sequential path is exact (virtual update, top-k interference over a
+    candidate pool). Inside the one-scan pipeline engine the replay rows
+    are reservoir-sampled like ER — the documented deviation; interference
+    scoring needs the virtual update, which is a sequential construct.
+    """
+
+    name = "mir"
+
+    def host_extras(self, params, opt_state, batch, helpers):
+        n_cand = self.cfg.mir_candidates
+        if len(self.buffer) >= max(self.cfg.replay_batch * 2, 4):
+            cand = self.buffer.sample(n_cand)
+            cand_j = {k: jnp.asarray(v) for k, v in cand.items()}
+            sel = helpers.mir_select(params, opt_state, batch, cand_j)
+            return {"replay": sel}
+        return {"replay": self._sample_replay()}
+
+
+@register_algorithm
+class LwF(OCLAlgorithm):
+    """Learning without Forgetting: distill against a teacher snapshot."""
+
+    name = "lwf"
+
+    def reset(self) -> None:
+        self.teacher: Optional[Pytree] = None
+
+    # pipeline: teacher logits are a host-prepared stream field; the staged
+    # loss adds the KD term wherever the field is present.
+    def prepare_stream(self, stream, ctx=None):
+        if ctx is None:
+            return stream
+        self.teacher = ctx.params
+        out = dict(stream)
+        out["teacher_logits"] = self._teacher_logits(stream, ctx)
+        return out
+
+    def wrap_staged(self, staged: StagedModel) -> StagedModel:
+        cfg = self.cfg
+        base_loss = staged.loss
+
+        def loss(logits, batch):
+            ce, metrics = base_loss(logits, batch)
+            if "teacher_logits" in batch:
+                ce = ce + cfg.lwf_weight * _kd_loss(
+                    logits, batch["teacher_logits"], cfg.lwf_temp
+                )
+            return ce, metrics
+
+        return StagedModel(staged.num_stages, staged.forward_stage, loss)
+
+    def segment_refresh(self, params, stream_tail, ctx=None):
+        """Re-snapshot the teacher at the segment boundary (the paper
+        refreshes at the same granularity the engine re-jits)."""
+        if ctx is None or "teacher_logits" not in stream_tail:
+            return None
+        self.teacher = params
+        refreshed = PrepareContext(params=params, forward_fn=ctx.forward_fn)
+        return {"teacher_logits": self._teacher_logits(stream_tail, refreshed)}
+
+    def _teacher_logits(self, stream, ctx: PrepareContext) -> np.ndarray:
+        fwd = jax.jit(ctx.forward_fn)
+        rounds = []
+        R = next(iter(stream.values())).shape[0]
+        for m in range(R):
+            batch = {
+                k: jnp.asarray(v[m])
+                for k, v in stream.items()
+                if k in ("tokens", "labels", "x")
+            }
+            rounds.append(np.asarray(fwd(ctx.params, batch)))
+        return np.stack(rounds)
+
+    # sequential: exact — KD against the teacher params
+    def sequential_loss_extra(self, params, batch, extras, loss_fn, forward_fn):
+        if extras.get("teacher") is None:
+            return jnp.zeros((), jnp.float32)
+        student = forward_fn(params, batch)
+        teacher = forward_fn(extras["teacher"], batch)
+        return self.cfg.lwf_weight * _kd_loss(student, teacher, self.cfg.lwf_temp)
+
+    def host_extras(self, params, opt_state, batch, helpers):
+        if self.teacher is None:
+            self.teacher = params  # anchor at stream entry
+        return {"teacher": self.teacher}
+
+    def sequential_refresh(self, params, recent) -> None:
+        self.teacher = params
+
+
+@register_algorithm
+class MAS(OCLAlgorithm):
+    """Memory Aware Synapses: Ω-weighted quadratic pull to a reference.
+
+    Exact on the sequential path. The staged pipeline loss sees only
+    (logits, batch) — a parameter-space penalty cannot ride there — so the
+    pipeline path runs as Vanilla (documented; Table 2's exact MAS numbers
+    come from the sequential runner).
+    """
+
+    name = "mas"
+
+    def reset(self) -> None:
+        self.omega: Optional[Pytree] = None
+        self.ref: Optional[Pytree] = None
+
+    def sequential_loss_extra(self, params, batch, extras, loss_fn, forward_fn):
+        if extras.get("mas_omega") is None:
+            return jnp.zeros((), jnp.float32)
+        return self.cfg.mas_weight * mas_penalty(
+            params, extras["mas_ref"], extras["mas_omega"]
+        )
+
+    def host_extras(self, params, opt_state, batch, helpers):
+        if self.omega is None:
+            # anchor at stream entry: importance from the first batch
+            self.sequential_refresh(params, [batch])
+        return {"mas_omega": self.omega, "mas_ref": self.ref}
+
+    def sequential_refresh(self, params, recent) -> None:
+        if not recent:
+            return
+        fwd = getattr(self, "_forward_fn", None)
+        if fwd is None:
+            return
+        self.omega = mas_importance(fwd, params, list(recent))
+        self.ref = params
+
+
+# ---------------------------------------------------------------------------
+# Sequential step builder (exact path, shared by sequential/baseline runners)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SequentialHelpers:
+    """Jitted helpers handed to ``host_extras`` (MIR's selection step)."""
+
+    mir_select: Callable
+
+
+def make_sequential_step(
+    algo: OCLAlgorithm,
+    loss_fn: Callable,  # (params, batch) -> (loss, metrics)
+    forward_fn: Callable,  # (params, batch) -> logits
+    optimizer,
+):
+    """Jitted ``step(params, opt_state, batch, extras)`` for ``algo``.
+
+    The plugin replacement for ``repro.ocl.algorithms.make_ocl_step``: the
+    extra loss terms come from ``algo.sequential_loss_extra`` instead of a
+    method-string switch. Also returns ``(eval_fn, helpers)`` — a jitted
+    predict-only pass and the MIR selection helper.
+    """
+
+    def total_loss(params, batch, extras):
+        loss, metrics = loss_fn(params, batch)
+        loss = loss + algo.sequential_loss_extra(
+            params, batch, extras, loss_fn, forward_fn
+        )
+        return loss, metrics
+
+    @jax.jit
+    def step(params, opt_state, batch, extras):
+        (loss, metrics), grads = jax.value_and_grad(total_loss, has_aux=True)(
+            params, batch, extras
+        )
+        new_params, new_opt = optimizer.update(params, grads, opt_state)
+        return new_params, new_opt, loss, metrics
+
+    @jax.jit
+    def eval_fn(params, batch):
+        return loss_fn(params, batch)
+
+    @jax.jit
+    def mir_select(params, opt_state, batch, candidates):
+        """True MIR: virtual step on the new batch, keep the replay
+        candidates whose loss increases the most."""
+        (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        virt_params, _ = optimizer.update(params, grads, opt_state)
+
+        def per_item_loss(p, cand):
+            def one(i):
+                item = jax.tree.map(lambda a: a[i : i + 1], cand)
+                return loss_fn(p, item)[0]
+
+            n = jax.tree.leaves(cand)[0].shape[0]
+            return jnp.stack([one(i) for i in range(n)])
+
+        before = per_item_loss(params, candidates)
+        after = per_item_loss(virt_params, candidates)
+        interference = after - before
+        _, top = jax.lax.top_k(interference, algo.cfg.replay_batch)
+        return jax.tree.map(lambda a: a[top], candidates)
+
+    return step, eval_fn, SequentialHelpers(mir_select=mir_select)

@@ -20,7 +20,7 @@ Two modalities:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

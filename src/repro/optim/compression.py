@@ -72,7 +72,9 @@ def compress_gradients(
         out = jax.tree.map(lambda g, r: _int8_leaf(g, r, cfg.min_leaf_size), grads, residual)
     else:
         raise ValueError(f"unknown compression {cfg.method!r}")
-    is_pair = lambda t: isinstance(t, tuple)
+    def is_pair(t):
+        return isinstance(t, tuple)
+
     comp = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
     new_resid = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
     return comp, new_resid

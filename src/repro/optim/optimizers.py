@@ -38,7 +38,11 @@ def adamw(
     grad_clip: float = 0.0,
 ) -> Optimizer:
     def init(params: Pytree) -> AdamWState:
-        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        def zeros():
+            return jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            )
+
         return AdamWState(mu=zeros(), nu=zeros(), count=jnp.zeros((), jnp.int32))
 
     def update(params: Pytree, grads: Pytree, state: AdamWState):

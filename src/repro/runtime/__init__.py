@@ -3,6 +3,7 @@ from repro.runtime.elastic_trainer import (
     BudgetEvent,
     ElasticStreamResult,
     ElasticStreamTrainer,
+    ResumeState,
     SegmentReport,
 )
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
@@ -14,6 +15,7 @@ __all__ = [
     "ElasticPlanner",
     "ElasticStreamResult",
     "ElasticStreamTrainer",
+    "ResumeState",
     "SegmentReport",
     "Supervisor",
     "SupervisorCfg",

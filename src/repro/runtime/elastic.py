@@ -13,7 +13,6 @@ paper's memory-adaptivity claim operationalized as fault tolerance.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 from repro.core import planner as planner_lib

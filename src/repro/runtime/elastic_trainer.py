@@ -20,19 +20,34 @@ loss escalated through ``Supervisor.on_fatal`` — it
 The stream cursor advances only when a segment completes, so a failed or
 re-planned segment is re-run from its first round with unchanged state:
 no item is lost and none is consumed twice.
+
+A crashed run resumes the same way: ``load_resume_state`` reads the newest
+per-segment checkpoint (state + the partition it was split on + the stream
+cursor from the manifest extras), remaps it onto whatever partition the
+*restart's* budget plans, and ``run_stream(..., resume=...)`` continues
+from the saved cursor — every stream item is still consumed exactly once.
+
+Note: this trainer is the internal engine behind the ``"elastic"`` runner
+of ``repro.api.FerretSession`` — prefer the session layer for new code.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpointing.checkpoint import plan_manifest
+from repro.checkpointing.checkpoint import (
+    latest_checkpoint,
+    plan_manifest,
+    restore_checkpoint,
+)
 from repro.core import compensation as comp_lib
 from repro.core import planner as planner_lib
 from repro.core import schedule as sched_lib
@@ -40,7 +55,7 @@ from repro.core.ferret import FerretConfig, StreamResult, empirical_adaptation_r
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, analytic_profile
 from repro.models.config import ModelConfig
-from repro.ocl.algorithms import wrap_staged_model
+from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
 from repro.optim.optimizers import AdamWState, Optimizer, SGDState, adamw
 from repro.runtime.elastic import DeviceLossError
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
@@ -92,7 +107,9 @@ class ElasticStreamResult:
 # ---------------------------------------------------------------------------
 
 
-def _merge_resplit(model_cfg: ModelConfig, stage_trees: Sequence[Pytree], new_bounds) -> List[Pytree]:
+def _merge_resplit(
+    model_cfg: ModelConfig, stage_trees: Sequence[Pytree], new_bounds
+) -> List[Pytree]:
     """Merge stage-params-shaped trees and re-split on ``new_bounds``.
 
     Works for anything that mirrors the stage-param structure: the params
@@ -206,6 +223,28 @@ def remap_engine_state(
 
 
 # ---------------------------------------------------------------------------
+# Crash-restore: checkpointed state → a new partition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResumeState:
+    """Live state recovered from a checkpoint, plus where it came from.
+
+    ``bounds`` is the partition the per-stage trees are split on (from the
+    checkpoint manifest); ``cursor`` is the first not-yet-consumed stream
+    round. ``run_stream(..., resume=...)`` remaps onto the restart's plan.
+    """
+
+    stage_params: List[Pytree]
+    opt_states: Tuple
+    comp_states: Tuple
+    bounds: List[int]
+    cursor: int
+    budget_bytes: float
+
+
+# ---------------------------------------------------------------------------
 # The elastic trainer
 # ---------------------------------------------------------------------------
 
@@ -222,6 +261,7 @@ class ElasticStreamTrainer:
         seq: int,
         optimizer: Optional[Optimizer] = None,
         profile: Optional[ModelProfile] = None,
+        algorithm: Optional[Union[str, OCLAlgorithm]] = None,
     ):
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
@@ -230,6 +270,11 @@ class ElasticStreamTrainer:
         self.profile = profile or analytic_profile(model_cfg, batch, seq)
         self.t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
         self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
+        self.algorithm = (
+            get_algorithm(algorithm, ferret_cfg.ocl)
+            if algorithm is not None
+            else get_algorithm(ferret_cfg.ocl)
+        )
         self._pending_budget: Optional[float] = None
 
     # -- budget control ---------------------------------------------------
@@ -283,6 +328,7 @@ class ElasticStreamTrainer:
         supervisor_cfg: Optional[SupervisorCfg] = None,
         fault_rounds: Sequence[int] = (),
         fault_budget_scale: float = 0.5,
+        resume: Optional[ResumeState] = None,
     ) -> ElasticStreamResult:
         """Run ``stream`` across the budget ``schedule``.
 
@@ -298,6 +344,10 @@ class ElasticStreamTrainer:
         fault_rounds: stream rounds at which a device loss is simulated
         (each fires once); the escalation path shrinks the budget by
         ``fault_budget_scale`` and re-plans.
+        resume: state recovered by ``load_resume_state`` — the run starts
+        at ``resume.cursor`` with the checkpointed state remapped from
+        ``resume.bounds`` onto this run's planned partition, so a restart
+        under a *different* budget consumes only the unconsumed rounds.
         """
         from repro.models import transformer as T
 
@@ -320,9 +370,26 @@ class ElasticStreamTrainer:
         plan = self.plan_for(budget)
         self._current_plan = plan
         bounds = list(plan.partition.bounds)
-        stage_params = T.split_stage_params(self.model_cfg, params, bounds)
         opt_states: Optional[Tuple] = None  # None → engine initializes fresh
         comp_states: Optional[Tuple] = None
+        cursor = 0
+        if resume is not None:
+            cursor = int(resume.cursor)
+            old_bounds = list(resume.bounds)
+            if old_bounds != bounds:
+                state_tuple = (
+                    list(resume.stage_params), None, None,
+                    tuple(resume.opt_states), tuple(resume.comp_states),
+                )
+                stage_params, opt_states, comp_states = remap_engine_state(
+                    self.model_cfg, state_tuple, old_bounds, bounds, self.optimizer
+                )
+            else:
+                stage_params = list(resume.stage_params)
+                opt_states = tuple(resume.opt_states)
+                comp_states = tuple(resume.comp_states)
+        else:
+            stage_params = T.split_stage_params(self.model_cfg, params, bounds)
 
         segments: List[SegmentReport] = []
         acc_all: List[np.ndarray] = []
@@ -330,7 +397,6 @@ class ElasticStreamTrainer:
         admitted_all: List[np.ndarray] = []
         num_faults = 0
         faults_at_cursor = 0
-        cursor = 0
 
         while cursor < R:
             # ---- budget for this segment: fault request beats the schedule.
@@ -368,6 +434,10 @@ class ElasticStreamTrainer:
                 budget, plan, bounds, replanned = target, new_plan, new_bounds, True
                 self._current_budget = budget
                 self._current_plan = plan
+                # segment-boundary hook: the algorithm may refresh
+                # segment-constant state (e.g. the LwF teacher) for the
+                # not-yet-consumed remainder of the stream.
+                stream_j = self._refresh_stream_tail(stream_j, stage_params, cursor)
 
             seg_end = self._segment_end(cursor, R, events, segment_rounds)
             seg_len = seg_end - cursor
@@ -377,8 +447,8 @@ class ElasticStreamTrainer:
 
             t0 = time.perf_counter()
             P = plan.partition.num_stages
-            staged = wrap_staged_model(
-                staged_from_transformer(self.model_cfg, bounds), self.cfg.ocl
+            staged = self.algorithm.wrap_staged(
+                staged_from_transformer(self.model_cfg, bounds)
             )
             engine_sched = sched_lib.build_schedule(plan.config, P, seg_len, phase=cursor)
             engine = FerretEngine(
@@ -458,7 +528,93 @@ class ElasticStreamTrainer:
             num_faults=num_faults,
         )
 
+    # -- crash restore ----------------------------------------------------
+    def load_resume_state(self, params_template: Pytree, checkpoint_dir: str) -> ResumeState:
+        """Recover the newest per-segment checkpoint under ``checkpoint_dir``.
+
+        The manifest extras (written by supervised segments via
+        ``plan_manifest``) say which partition the per-stage state was
+        split on and where the stream cursor was; the state itself is
+        restored into a template rebuilt from the *saved* budget's plan.
+        ``params_template`` only provides shapes/dtypes (e.g. freshly
+        initialized params) — its values are overwritten by the restore.
+        """
+        seg_dirs = sorted(
+            d for d in os.listdir(checkpoint_dir) if d.startswith("seg_")
+        )
+        path = None
+        for seg in reversed(seg_dirs):
+            path = latest_checkpoint(os.path.join(checkpoint_dir, seg))
+            if path is not None:
+                break
+        if path is None:
+            raise FileNotFoundError(
+                f"no segment checkpoint under {checkpoint_dir!r}"
+            )
+        with open(os.path.join(path, "manifest.json")) as f:
+            extras = json.load(f)["extras"]
+        bounds = [int(b) for b in extras["bounds"]]
+        cursor = int(extras["cursor"])
+        raw_budget = extras.get("budget_bytes", "inf")
+        budget = math.inf if raw_budget == "inf" else float(raw_budget)
+        plan = self.plan_for(budget)
+        if list(plan.partition.bounds) != bounds:
+            raise ValueError(
+                "cannot rebuild the saved plan: planning for budget "
+                f"{raw_budget} gives bounds {list(plan.partition.bounds)} "
+                f"but the checkpoint was split on {bounds} — the profile "
+                "or planner limits changed since the checkpoint was taken"
+            )
+        from repro.models import transformer as T
+
+        staged = self.algorithm.wrap_staged(
+            staged_from_transformer(self.model_cfg, bounds)
+        )
+        # ring shapes depend only on plan.config, not the segment length
+        sched = sched_lib.build_schedule(plan.config, len(bounds) - 1, 1)
+        engine = FerretEngine(
+            staged, sched, self.optimizer, self.cfg.compensation, lr=self.cfg.lr
+        )
+        template = engine.init_state(
+            T.split_stage_params(self.model_cfg, params_template, bounds)
+        )
+        state, _step, _extras = restore_checkpoint(path, template)
+        return ResumeState(
+            stage_params=list(state[0]),
+            opt_states=tuple(state[3]),
+            comp_states=tuple(state[4]),
+            bounds=bounds,
+            cursor=cursor,
+            budget_bytes=budget,
+        )
+
     # -- internals --------------------------------------------------------
+    def _refresh_stream_tail(
+        self, stream_j: Dict[str, jnp.ndarray], stage_params, cursor: int
+    ) -> Dict[str, jnp.ndarray]:
+        """Give the algorithm its segment-boundary refresh hook."""
+        from repro.models import transformer as T
+
+        # most algorithms inherit the no-op hook: skip the O(model-size)
+        # merge + tail copy entirely for them
+        if type(self.algorithm).segment_refresh is OCLAlgorithm.segment_refresh:
+            return stream_j
+
+        merged = T.merge_stage_params(self.model_cfg, list(stage_params))
+        tail = {k: np.asarray(v[cursor:]) for k, v in stream_j.items()}
+        ctx = PrepareContext(
+            params=merged,
+            forward_fn=lambda p, b: T.forward(self.model_cfg, p, b)[0],
+        )
+        updated = self.algorithm.segment_refresh(merged, tail, ctx)
+        if not updated:
+            return stream_j
+        out = dict(stream_j)
+        for k, arr in updated.items():
+            if k in out:
+                out[k] = out[k].at[cursor:].set(jnp.asarray(arr))
+        return out
+
     def _execute_segment(
         self,
         engine: FerretEngine,

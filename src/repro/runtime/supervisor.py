@@ -27,7 +27,6 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpointing.checkpoint import CheckpointManager

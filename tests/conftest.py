@@ -5,16 +5,18 @@ import dataclasses
 import importlib.util
 import sys
 
+import jax
+import pytest
+
 # The container has no network access: if the real hypothesis isn't
 # installed, register the deterministic fallback before test collection so
 # the property-based modules still collect and run (see _hypothesis_fallback).
+# conftest executes fully before any test module imports hypothesis, so
+# registering after the imports above is safe.
 if importlib.util.find_spec("hypothesis") is None:
     import _hypothesis_fallback as _hyp_stub
 
     sys.modules["hypothesis"] = _hyp_stub
-
-import jax
-import pytest
 
 
 @pytest.fixture(scope="session")

@@ -8,7 +8,6 @@ auto-tuning to reduce the error further.
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,7 +51,9 @@ def test_fisher_compensation_beats_stale_on_quadratic():
 
 def test_lambda_autotuning_reduces_residual():
     """λ descent step follows the closed-form gradient of Eq. 10."""
-    cfg = comp.CompensationConfig(method="iter_fisher", eta_lambda=1e-2, alpha=0.5, nu=0.0, lam0=0.0)
+    cfg = comp.CompensationConfig(
+        method="iter_fisher", eta_lambda=1e-2, alpha=0.5, nu=0.0, lam0=0.0
+    )
     rng = np.random.default_rng(2)
     g = jnp.asarray(rng.normal(size=32), jnp.float32)
     d = jnp.asarray(rng.normal(size=32) * 0.1, jnp.float32)

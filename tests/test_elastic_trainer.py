@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import planner as planner_lib
 from repro.core.compensation import CompensationConfig, CompensationState, init_state
 from repro.core.ferret import FerretConfig, FerretTrainer
 from repro.core.profiler import ModelProfile, analytic_profile
@@ -68,8 +67,8 @@ def _hetero_profile(cfg) -> ModelProfile:
     """Per-layer times scaled 1×..4× so budget changes move the partition."""
     base = analytic_profile(cfg, 2, 16)
     layers = [
-        dataclasses.replace(l, t_fwd=l.t_fwd * (1 + i), t_bwd=l.t_bwd * (1 + i))
-        for i, l in enumerate(base.layers)
+        dataclasses.replace(ly, t_fwd=ly.t_fwd * (1 + i), t_bwd=ly.t_bwd * (1 + i))
+        for i, ly in enumerate(base.layers)
     ]
     return ModelProfile(layers=layers, embed_bytes=base.embed_bytes, batch=2, seq=16)
 
@@ -262,3 +261,67 @@ def test_device_loss_escalates_to_shrink_replan(rng, tmp_path):
     extras = json.loads(ckpts[-1].read_text())["extras"]
     assert extras["cursor"] == R_STREAM  # end-of-segment state → end cursor
     assert "bounds" in extras and math.isfinite(float(extras["budget_bytes"]))
+
+
+# ---------------------------------------------------------------------------
+# (e) crash → restore → remap: resume from a checkpoint taken under a
+# *different* partition, every stream item consumed exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_crash_restore_remap_consumes_stream_exactly_once(rng, tmp_path):
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    profile = _hetero_profile(cfg)
+    params = T.init_params(cfg, rng)
+    stream = _stream()  # R_STREAM = 40 rounds
+    crash_at = 20
+
+    # --- run 1: budget ∞ (partition A), checkpointing every segment; the
+    # process "crashes" after consuming [0, crash_at) ---
+    et1 = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    part = {k: v[:crash_at] for k, v in stream.items()}
+    res1 = et1.run_stream(
+        params, part, segment_rounds=10,
+        supervisor_cfg=SupervisorCfg(
+            checkpoint_dir=str(tmp_path), checkpoint_every=1, step_timeout_s=600.0,
+        ),
+    )
+    assert res1.rounds == crash_at
+    bounds_a = tuple(res1.segments[-1].result.plan.partition.bounds)
+
+    # --- restart under a 0.3× budget: the restart plans a *different*
+    # partition, so the restored state must be remapped ---
+    full = et1.plan_for(math.inf)
+    fc2 = dataclasses.replace(fc, budget_bytes=full.memory * 0.3)
+    et2 = ElasticStreamTrainer(cfg, fc2, batch=2, seq=16, profile=profile)
+    template = T.init_params(cfg, jax.random.split(rng)[0])  # shapes only
+    resume = et2.load_resume_state(template, str(tmp_path))
+    assert resume.cursor == crash_at
+    assert tuple(resume.bounds) == bounds_a
+    bounds_b = tuple(et2.plan_for(fc2.budget_bytes).partition.bounds)
+    assert bounds_b != bounds_a, "restart budget must move the partition"
+
+    res2 = et2.run_stream(params, stream, resume=resume)
+    assert tuple(res2.segments[0].result.plan.partition.bounds) == bounds_b
+
+    # exactly-once: run 1 consumed [0, crash_at), the resumed run consumed
+    # [crash_at, R) — disjoint, complete, nothing twice
+    spans = [(s.start, s.end) for s in res1.segments] + [
+        (s.start, s.end) for s in res2.segments
+    ]
+    assert spans == sorted(spans)
+    covered = []
+    for start, end in spans:
+        covered.extend(range(start, end))
+    assert covered == list(range(R_STREAM)), "items lost or double-consumed"
+    assert res1.rounds + res2.rounds == R_STREAM
+    assert len(res1.losses) + len(res2.losses) == R_STREAM
+    assert np.isfinite(res2.losses).all()
+
+    # the restored weights actually carried over: resuming from the
+    # checkpoint differs from cold-starting the tail at init params
+    cold = ElasticStreamTrainer(cfg, fc2, batch=2, seq=16, profile=profile)
+    tail = {k: v[crash_at:] for k, v in stream.items()}
+    res_cold = cold.run_stream(params, tail, schedule=[])
+    assert not np.allclose(res2.losses, res_cold.losses)

@@ -6,7 +6,6 @@ Kernels execute under interpret=True on CPU (the TPU path is the same body).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
@@ -49,7 +48,9 @@ def test_iter_fisher_compensate_matches_ref(n, tau, dtype, seed):
 )
 def test_iter_fisher_stats_matches_ref(shape, alpha, seed):
     rng = np.random.default_rng(seed)
-    mk = lambda: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    def mk():
+        return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
     g, d, vr, va = mk(), mk(), mk(), mk()
     want = ref.iter_fisher_leaf_stats_ref(g, d, vr, va, alpha)
     got = iter_fisher_leaf_stats_pallas(g, d, vr, va, alpha, interpret=True)
@@ -80,13 +81,13 @@ def test_iter_fisher_zero_delta_is_identity():
     seed=st.integers(0, 2**16),
 )
 def test_ssd_kernel_matches_ref(b, nc, h, p, n, Q, seed):
-    l = nc * Q
+    slen = nc * Q
     rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
-    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, l, h)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, slen, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, slen, h)), jnp.float32)
     A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(h,)), jnp.float32)
-    B = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
-    C = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, slen, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, slen, n)), jnp.float32)
     s0 = jnp.asarray(rng.normal(size=(b, h, p, n)) * 0.1, jnp.float32)
     y_ref, s_ref = ref.ssd_scan_ref(x, dt, A, B, C, Q, s0)
     y_k, s_k = ssd_scan_pallas(x, dt, A, B, C, Q, s0, interpret=True)
@@ -96,19 +97,19 @@ def test_ssd_kernel_matches_ref(b, nc, h, p, n, Q, seed):
 
 def test_ssd_matches_sequential_recurrence():
     """Chunked kernel == exact token-by-token recurrence (ground truth)."""
-    b, l, h, p, n, Q = 2, 32, 3, 8, 16, 8
+    b, slen, h, p, n, Q = 2, 32, 3, 8, 16, 8
     rng = np.random.default_rng(1)
-    x = rng.normal(size=(b, l, h, p))
-    dt = rng.uniform(0.001, 0.2, size=(b, l, h))
+    x = rng.normal(size=(b, slen, h, p))
+    dt = rng.uniform(0.001, 0.2, size=(b, slen, h))
     A = -rng.uniform(0.5, 2.0, size=(h,))
-    B = rng.normal(size=(b, l, n))
-    C = rng.normal(size=(b, l, n))
+    B = rng.normal(size=(b, slen, n))
+    C = rng.normal(size=(b, slen, n))
     y_k, s_k = ssd_scan_pallas(
         *(jnp.asarray(a, jnp.float32) for a in (x, dt, A, B, C)), Q, None, interpret=True
     )
     s = np.zeros((b, h, p, n))
-    ys = np.zeros((b, l, h, p))
-    for t in range(l):
+    ys = np.zeros((b, slen, h, p))
+    for t in range(slen):
         dA = np.exp(dt[:, t] * A)
         s = s * dA[:, :, None, None] + np.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
         ys[:, t] = np.einsum("bhpn,bn->bhp", s, C[:, t])
@@ -118,18 +119,20 @@ def test_ssd_matches_sequential_recurrence():
 
 def test_ssd_decode_step_continues_scan():
     """Prefill final state + decode step == scan over s+1 tokens."""
-    b, l, h, p, n, Q = 1, 16, 2, 8, 8, 8
+    b, slen, h, p, n, Q = 1, 16, 2, 8, 8, 8
     rng = np.random.default_rng(2)
-    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
-    x, B, C = mk(b, l + 1, h, p), mk(b, l + 1, n), mk(b, l + 1, n)
-    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(b, l + 1, h)), jnp.float32)
+    def mk(*s):
+        return jnp.asarray(rng.normal(size=s), jnp.float32)
+
+    x, B, C = mk(b, slen + 1, h, p), mk(b, slen + 1, n), mk(b, slen + 1, n)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(b, slen + 1, h)), jnp.float32)
     A = jnp.asarray(-rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
-    y_all, s_all = ref.ssd_scan_ref(x, dt, A, B, C, chunk=l + 1)
-    _, s_pre = ref.ssd_scan_ref(x[:, :l], dt[:, :l], A, B[:, :l], C[:, :l], chunk=Q)
+    y_all, s_all = ref.ssd_scan_ref(x, dt, A, B, C, chunk=slen + 1)
+    _, s_pre = ref.ssd_scan_ref(x[:, :slen], dt[:, :slen], A, B[:, :slen], C[:, :slen], chunk=Q)
     y_dec, s_dec = ref.ssd_decode_step_ref(
-        x[:, l], dt[:, l], A, B[:, l], C[:, l], s_pre
+        x[:, slen], dt[:, slen], A, B[:, slen], C[:, slen], s_pre
     )
-    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_all[:, l]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_all[:, slen]), rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(s_dec), np.asarray(s_all), rtol=1e-4, atol=1e-4)
 
 

@@ -1,7 +1,5 @@
 """Per-architecture smoke tests + decode/prefill consistency (deliverable f)."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,7 +88,6 @@ def test_param_specs_match_shapes(arch):
     mesh_axes = {"pod": 2, "data": 16, "model": 16}
     specs = T.param_pspecs(cfg, mesh_axes, data_axes=("pod", "data"))
     flat_shapes = tree_flatten_with_path(shapes, is_leaf=lambda s: isinstance(s, tuple))[0]
-    flat_specs = jax.tree.leaves(specs, is_leaf=lambda s: hasattr(s, "_normalized_spec") or True)
     sh_map = {tuple(p): v for p, v in flat_shapes}
     sp_flat = tree_flatten_with_path(
         specs, is_leaf=lambda s: s.__class__.__name__ == "PartitionSpec"
@@ -113,7 +110,7 @@ def test_param_count_matches_init():
     for arch in ALL_ARCHS:
         cfg = smoke_cfg(arch)
         params = T.init_params(cfg, jax.random.PRNGKey(0))
-        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        n = sum(int(np.prod(leaf.shape)) for leaf in jax.tree.leaves(params))
         assert n == cfg.param_count(), arch
 
 
@@ -156,4 +153,6 @@ def test_long_500k_applicability_flags():
     from repro.configs.common import SHAPES, shape_applicable
 
     runnable = {a for a in ALL_ARCHS if shape_applicable(get_config(a), SHAPES["long_500k"])}
-    assert runnable == {"mamba2-780m", "h2o-danube-1.8b", "gemma3-12b", "hymba-1.5b", "mixtral-8x22b"}
+    assert runnable == {
+        "mamba2-780m", "h2o-danube-1.8b", "gemma3-12b", "hymba-1.5b", "mixtral-8x22b"
+    }

@@ -1,7 +1,5 @@
 """Pipeline engine: schedule correctness + learning-dynamics equivalences."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
