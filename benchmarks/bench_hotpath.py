@@ -1,0 +1,208 @@
+"""Hot-path microbenchmark: packed compensation + engine-cache replans.
+
+Two recurring costs dominate Ferret's real-time budget (Ghunaim et al.:
+an OCL method that can't keep up loses accuracy to the delay itself):
+
+1. **Per-stage-update compensation.** The per-leaf path dispatches one
+   op/kernel per pytree leaf per step; the flat-packed path
+   (``repro.kernels.packing``) is one pass over one contiguous buffer —
+   exactly 1 kernel launch on the Pallas path regardless of leaf count.
+   Measured here: jit'd ``comp.compensate`` latency, packed vs per-leaf,
+   on the benchmark model's parameter tree. NOTE the packed win is a
+   *launch-count* win: on the CPU jnp backend (this container / CI) the
+   per-leaf loop is fully XLA-fused, so packed shows its pack/unpack copy
+   cost and ``speedup_call`` < 1 is expected there — which is exactly why
+   the default dispatch packs only when the Pallas kernels are in use
+   (``REPRO_PACK`` forces either way).
+
+2. **Per-switch engine compiles.** ``ElasticStreamTrainer`` pads segment
+   lengths to a geometric bucket set and caches compiled engines on
+   (partition, ring geometry, bucket), so an A→B→A budget schedule
+   compiles 2 engines instead of 3 and every later same-shape segment is
+   a cache hit. Measured here: the same A→B→A run with the cache enabled
+   vs disabled.
+
+Writes the machine-readable ``BENCH_hotpath.json`` at the repo root (CI
+uploads it as an artifact) so both numbers are tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.bench_hotpath
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core import compensation as comp
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import EngineCache, FerretConfig
+from repro.kernels import packing
+from repro.models import transformer as T
+from repro.runtime import BudgetEvent, ElasticStreamTrainer
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_hotpath.json"
+)
+
+TAU = 4
+TIMED_ITERS = 30
+STREAM_LEN = 120
+SWITCHES = (40, 80)
+
+
+def _time_call(fn, *args, iters: int = TIMED_ITERS):
+    """(compile_s, per-call ms) for a jit'd fn."""
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return compile_s, (time.perf_counter() - t0) * 1e3 / iters
+
+
+def bench_compensation() -> dict:
+    cfg = C.bench_model()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(params)
+    odd = sum(1 for leaf in leaves if leaf.size % 128 != 0)
+    deltas = jax.tree.map(
+        lambda p: jnp.ones((TAU, *p.shape), jnp.float32) * 1e-3, params
+    )
+    ccfg = CompensationConfig(method="iter_fisher", eta_lambda=1e-3)
+    state = comp.init_state(params, ccfg)
+
+    timings = {}
+    for label, env in (("packed", "1"), ("per_leaf", "0")):
+        os.environ["REPRO_PACK"] = env
+        try:
+            fn = jax.jit(lambda s, g, d: comp.compensate(ccfg, s, g, d))
+            compile_s, call_ms = _time_call(fn, state, params, deltas)
+            timings[label] = {"compile_s": compile_s, "call_ms": call_ms}
+        finally:
+            os.environ.pop("REPRO_PACK", None)
+
+    # Pallas launch counts (interpret mode): packed is 1+1 per step by
+    # construction; the per-leaf path is one launch per leaf per kernel.
+    n0 = packing.KERNEL_LAUNCHES
+    packing.compensate_tree(
+        params, deltas, jnp.asarray(0.2, jnp.float32), use_pallas=True, interpret=True
+    )
+    packed_launches = packing.KERNEL_LAUNCHES - n0
+
+    out = {
+        "leaves": len(leaves),
+        "odd_sized_leaves": odd,  # previously excluded from the Pallas path
+        "tau": TAU,
+        "param_count": sum(leaf.size for leaf in leaves),
+        "packed": timings["packed"],
+        "per_leaf": timings["per_leaf"],
+        "speedup_call": timings["per_leaf"]["call_ms"] / timings["packed"]["call_ms"],
+        "speedup_compile": (
+            timings["per_leaf"]["compile_s"] / timings["packed"]["compile_s"]
+        ),
+        "pallas_launches_per_compensate": {
+            "packed": packed_launches,
+            "per_leaf": len(leaves),
+        },
+    }
+    print(
+        f"compensation ({len(leaves)} leaves, {odd} odd-sized, tau={TAU}): "
+        f"per-leaf {timings['per_leaf']['call_ms']:.3f} ms → "
+        f"packed {timings['packed']['call_ms']:.3f} ms "
+        f"({out['speedup_call']:.2f}x); compile "
+        f"{timings['per_leaf']['compile_s']:.2f}s → "
+        f"{timings['packed']['compile_s']:.2f}s; "
+        f"launches {len(leaves)} → {packed_launches}"
+    )
+    return out
+
+
+def _elastic_run(cache: EngineCache) -> dict:
+    cfg = C.bench_model()
+    params = C.init_params(cfg)
+    stream = C.bench_stream(length=STREAM_LEN)
+    fc = FerretConfig(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+    et = ElasticStreamTrainer(
+        cfg, fc, batch=C.BATCH, seq=C.SEQ, engine_cache=cache
+    )
+    full = et.plan_for(math.inf)
+    schedule = [
+        BudgetEvent(SWITCHES[0], full.memory * 0.3),  # A → B
+        BudgetEvent(SWITCHES[1], math.inf),  # B → A (back)
+    ]
+    t0 = time.perf_counter()
+    res = et.run_stream(params, stream, schedule)
+    wall_s = time.perf_counter() - t0
+    return {
+        "wall_s": wall_s,
+        "segments": len(res.segments),
+        "num_replans": res.num_replans,
+        "cache_hits": res.engine_cache_hits,
+        "cache_misses": res.engine_cache_misses,
+        "replan_ms_total": 1e3 * sum(s.replan_s for s in res.segments),
+        "remap_ms_total": 1e3 * sum(s.remap_s for s in res.segments),
+        "run_s_per_segment": [round(s.run_s, 4) for s in res.segments],
+        "online_acc": res.online_acc,
+    }
+
+
+def bench_elastic_switch_cache() -> dict:
+    cached = _elastic_run(EngineCache())
+    uncached = _elastic_run(EngineCache(enabled=False))
+    out = {
+        "stream_len": STREAM_LEN,
+        "switches": list(SWITCHES),
+        "schedule": "A->B->A",
+        "cached": cached,
+        "uncached": uncached,
+        "switch_wall_saved_s": uncached["wall_s"] - cached["wall_s"],
+    }
+    print(
+        f"elastic A->B->A ({STREAM_LEN} rounds): cached "
+        f"{cached['wall_s']:.2f}s (misses={cached['cache_misses']}, "
+        f"hits={cached['cache_hits']}) vs uncached {uncached['wall_s']:.2f}s "
+        f"(misses={uncached['cache_misses']})"
+    )
+    return out
+
+
+def run(write_json: bool = True) -> dict:
+    payload = {
+        "bench": "hotpath",
+        "backend": jax.default_backend(),
+        "compensation": bench_compensation(),
+        "elastic_cache": bench_elastic_switch_cache(),
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {BENCH_JSON}")
+    return payload
+
+
+def main() -> None:
+    t0 = time.time()
+    payload = run()
+    comp_ = payload["compensation"]
+    print(
+        f"bench_hotpath,{(time.time() - t0) * 1e3:.0f}ms,"
+        f"packed_speedup={comp_['speedup_call']:.2f}x,"
+        f"cache_hits={payload['elastic_cache']['cached']['cache_hits']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -115,6 +115,9 @@ def run(write_json: bool = True) -> dict:
             "memory_bytes": p.memory,
             "replan_ms": 1e3 * s.replan_s,
             "remap_ms": 1e3 * s.remap_s,
+            "run_s": s.run_s,
+            "cache_hit": s.cache_hit,
+            "rounds_compiled": s.rounds_compiled,
             "online_acc": s.result.online_acc,
         })
 
@@ -122,6 +125,8 @@ def run(write_json: bool = True) -> dict:
     print(f"\ntotal switch overhead: {1e3*switch_cost:.1f} ms "
           f"across {res.num_replans} replans "
           f"(vs full restart: re-init + full recompile + lost curve)")
+    print(f"engine cache: {res.engine_cache_misses} compiled, "
+          f"{res.engine_cache_hits} reused (bucketed segment lengths)")
     print(f"online accuracy — elastic: {100*res.online_acc:.2f}%   "
           f"unconstrained: {100*base.online_acc:.2f}%   "
           f"cold-restart: {100*cold_oacc:.2f}%")
@@ -135,6 +140,10 @@ def run(write_json: bool = True) -> dict:
         "switches": list(SWITCHES),
         "budget_fractions": list(FRACTIONS),
         "num_replans": res.num_replans,
+        "engine_cache": {
+            "hits": res.engine_cache_hits,
+            "misses": res.engine_cache_misses,
+        },
         "replan_ms_total": sum(r["replan_ms"] for r in seg_rows),
         "remap_ms_total": sum(r["remap_ms"] for r in seg_rows),
         "switch_overhead_ms": 1e3 * switch_cost,

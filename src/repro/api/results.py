@@ -34,6 +34,8 @@ class StreamResult:
     plan: Optional[Any] = None  # planner Plan (pipelined/elastic)
     segments: List[Any] = dataclasses.field(default_factory=list)  # SegmentReports
     num_replans: int = 0
+    engine_cache_hits: int = 0  # compiled-scan reuses (elastic runner)
+    engine_cache_misses: int = 0  # fresh engine compiles (elastic runner)
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:

@@ -147,6 +147,7 @@ class ElasticRunner(Runner):
         self, session, params, stream, *,
         schedule=(), segment_rounds=None, supervisor_cfg=None,
         fault_rounds=(), fault_budget_scale=0.5, resume=None,
+        engine_cache=None,
     ):
         from repro.runtime.elastic_trainer import ElasticStreamTrainer
 
@@ -155,6 +156,7 @@ class ElasticRunner(Runner):
             batch=session.batch, seq=session.seq,
             optimizer=session.optimizer, profile=session.profile,
             algorithm=session.algorithm,
+            engine_cache=engine_cache,
         )
         raw = trainer.run_stream(
             params, stream, schedule,
@@ -179,6 +181,8 @@ class ElasticRunner(Runner):
             plan=raw.segments[0].result.plan if raw.segments else None,
             segments=list(raw.segments),
             num_replans=raw.num_replans,
+            engine_cache_hits=raw.engine_cache_hits,
+            engine_cache_misses=raw.engine_cache_misses,
             extras={"raw": raw, "num_faults": raw.num_faults},
         )
 

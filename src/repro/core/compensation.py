@@ -68,28 +68,21 @@ def init_state(params: Pytree, cfg: CompensationConfig) -> CompensationState:
 def _update_lambda(
     state: CompensationState, grad: Pytree, first_delta: Pytree, cfg: CompensationConfig
 ) -> CompensationState:
-    """Alg. 1 lines 3–7: one λ-descent step + EMA updates (global λ)."""
-    leaves_g = jax.tree.leaves(grad)
-    leaves_d = jax.tree.leaves(first_delta)
-    leaves_vr = jax.tree.leaves(state.v_r)
-    leaves_va = jax.tree.leaves(state.v_a)
+    """Alg. 1 lines 3–7: one λ-descent step + EMA updates (global λ).
 
-    new_vr, new_va, s1_total, s2_total = [], [], 0.0, 0.0
-    for g, d, vr, va in zip(leaves_g, leaves_d, leaves_vr, leaves_va):
-        nvr, nva, s1, s2 = ops.iter_fisher_leaf_stats(g, d, vr, va, cfg.alpha)
-        new_vr.append(nvr)
-        new_va.append(nva)
-        s1_total = s1_total + s1
-        s2_total = s2_total + s2
-
+    The whole pytree goes through one packed statistics pass
+    (``repro.kernels.packing``); s1/s2 accumulate as on-device scalars on
+    every path — no per-leaf host round-trips.
+    """
+    new_vr, new_va, s1_total, s2_total = ops.iter_fisher_stats_tree(
+        grad, first_delta, state.v_r, state.v_a, cfg.alpha
+    )
     grad_lam = -2.0 * s1_total + 2.0 * state.lam * s2_total + 2.0 * cfg.nu * state.lam
     new_lam = state.lam - cfg.eta_lambda * grad_lam
-
-    treedef = jax.tree.structure(grad)
     return CompensationState(
         lam=new_lam,
-        v_r=jax.tree.unflatten(treedef, new_vr),
-        v_a=jax.tree.unflatten(treedef, new_va),
+        v_r=new_vr,
+        v_a=new_va,
         steps=state.steps + 1,
     )
 
@@ -145,10 +138,9 @@ def compensate(
             # Alg. 1 lines 3–7 use the most recent version step (θ^t − θ^{t-1}).
             last_delta = jax.tree.map(lambda d: d[-1], deltas)
             state = _update_lambda(state, grad, last_delta, cfg)
-        lam = state.lam
-        comp = jax.tree.map(
-            lambda g, d: ops.iter_fisher_compensate(g, d, lam), grad, deltas
-        )
+        # One flat-packed pass for the whole pytree (1 kernel launch on the
+        # Pallas path regardless of leaf count).
+        comp = ops.iter_fisher_compensate_tree(grad, deltas, state.lam)
         return state, comp
 
     raise ValueError(f"unknown compensation method {method!r}")

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Union
+import os
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,6 +51,108 @@ class FerretConfig:
         default_factory=comp_lib.CompensationConfig
     )
     ocl: OCLConfig = dataclasses.field(default_factory=OCLConfig)
+
+
+# ---------------------------------------------------------------------------
+# Engine compile cache (bucketed segment lengths)
+# ---------------------------------------------------------------------------
+
+# Geometric bucket set for segment lengths: a segment of n rounds runs a
+# compiled scan of the smallest bucket ≥ n (padded with inert schedule
+# rounds, which are the identity on engine state), so repeated and A→B→A
+# budget switches land on identical shapes and reuse compiled engines.
+# Override with REPRO_SEGMENT_BUCKETS="8,16,..." or EngineCache(buckets=...).
+DEFAULT_SEGMENT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def _buckets_from_env() -> Tuple[int, ...]:
+    raw = os.environ.get("REPRO_SEGMENT_BUCKETS", "").strip()
+    if not raw:
+        return DEFAULT_SEGMENT_BUCKETS
+    return tuple(sorted(int(tok) for tok in raw.split(",") if tok.strip()))
+
+
+class IdentityKey:
+    """Hashable identity wrapper for cache keys.
+
+    A bare ``id()`` in a long-lived shared cache can alias two objects if
+    the first is garbage-collected and its address reused; holding the
+    referent pins it for the cache's lifetime, so identity keys stay
+    unambiguous.
+    """
+
+    __slots__ = ("obj",)
+
+    def __init__(self, obj: Any):
+        self.obj = obj
+
+    def __hash__(self) -> int:
+        return id(self.obj)
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, IdentityKey) and other.obj is self.obj
+
+
+class EngineCache:
+    """Compiled-engine cache for segmented/elastic runs.
+
+    One ``FerretEngine`` is kept per structure (``struct_key`` = trainer
+    scope + stage boundaries); segments reuse it with ``set_schedule`` —
+    schedule content is scan *data*, so a same-shape swap reuses the
+    engine's compiled scan outright, and ``jax.jit`` keys further compiles
+    on array shapes only. ``hits``/``misses`` count compiled-scan reuse at
+    the shape level (``compile_key`` = struct_key + ring geometry +
+    bucketed rounds + stream shape): the caller checks ``seen`` before a
+    segment and ``record``s after it *succeeds*, so aborted segments never
+    skew the perf accounting. An A→B→A budget schedule compiles 2 engines
+    and hits once.
+    """
+
+    def __init__(self, buckets: Optional[Tuple[int, ...]] = None, enabled: bool = True):
+        self.buckets = tuple(sorted(buckets)) if buckets else _buckets_from_env()
+        self.enabled = enabled
+        self._engines: Dict[Tuple, Any] = {}
+        self._compiled: set = set()
+        self.hits = 0
+        self.misses = 0
+
+    def bucket_len(self, n: int) -> int:
+        """Smallest bucket ≥ n (multiples of the top bucket beyond it)."""
+        if not self.enabled:
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        top = self.buckets[-1]
+        return ((n + top - 1) // top) * top
+
+    def engine_for(self, struct_key: Tuple, factory: Callable[[], Any]) -> Any:
+        """The cached engine for ``struct_key`` (built by ``factory`` on
+        first use; always fresh when the cache is disabled)."""
+        if not self.enabled:
+            return factory()
+        engine = self._engines.get(struct_key)
+        if engine is None:
+            engine = factory()
+            self._engines[struct_key] = engine
+        return engine
+
+    def seen(self, compile_key: Tuple) -> bool:
+        """Was this shape already compiled (i.e. will the run be a hit)?"""
+        return self.enabled and compile_key in self._compiled
+
+    def record(self, compile_key: Tuple, hit: bool) -> None:
+        """Account one *completed* segment run under ``compile_key``."""
+        if hit:
+            self.hits += 1
+        else:
+            self.misses += 1
+            if self.enabled:
+                self._compiled.add(compile_key)
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}
 
 
 @dataclasses.dataclass

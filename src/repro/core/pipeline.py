@@ -83,7 +83,15 @@ def _dyn_update(tree: Pytree, val: Pytree, idx) -> Pytree:
 
 
 class FerretEngine:
-    """Builds and runs the scan. Construct once per (model, schedule)."""
+    """Builds and runs the scan. Construct once per (model, partition).
+
+    The compiled scan is held by one persistent ``jax.jit`` wrapper, so
+    repeated ``run`` calls — and schedule swaps via ``set_schedule`` that
+    keep the array shapes — reuse the compiled executable instead of
+    re-tracing. The *content* of the schedule is scan data (xs), not a
+    trace constant; only its shapes (rounds, stages, ring depths) key the
+    compile cache.
+    """
 
     def __init__(
         self,
@@ -98,36 +106,62 @@ class FerretEngine:
         self.opt = optimizer
         self.comp_cfg = comp_cfg
         self.lr = lr
+        self._compiled = jax.jit(self._scan)
+
+    def set_schedule(self, schedule: EngineSchedule) -> None:
+        """Swap the schedule. Same (rounds, stages, ring_size, delta_ring)
+        → the already-compiled scan is reused; different shapes retrace."""
+        self.sched = schedule
 
     # -- state ------------------------------------------------------------
-    def init_state(self, stage_params: List[Pytree], opt_states=None, comp_states=None):
+    def init_state(
+        self,
+        stage_params: List[Pytree],
+        opt_states=None,
+        comp_states=None,
+        rings=None,
+        deltas=None,
+    ):
         """Engine state for ``stage_params``.
 
         ``opt_states`` / ``comp_states`` carry per-stage optimizer and
         compensation state across a re-plan (runtime/elastic_trainer.py);
-        when omitted they are freshly initialized. The gradient and Δθ rings
-        are always re-initialized — their shapes are schedule-dependent and
-        in-flight accumulation groups do not survive a partition change.
+        when omitted they are freshly initialized. ``rings`` / ``deltas``
+        carry in-flight gradient-accumulation groups and the Δθ history
+        across a *same-structure* segment boundary (their shapes are
+        schedule-dependent, so they cannot survive a partition change and
+        are re-zeroed when omitted).
         """
         Rsz, K = self.sched.ring_size, self.sched.delta_ring
         f32 = jnp.float32
-        rings = tuple(
-            jax.tree.map(lambda p: jnp.zeros((Rsz, *p.shape), f32), sp) for sp in stage_params
-        )
-        deltas = tuple(
-            jax.tree.map(lambda p: jnp.zeros((K, *p.shape), f32), sp) for sp in stage_params
-        )
+        if rings is None:
+            rings = tuple(
+                jax.tree.map(lambda p: jnp.zeros((Rsz, *p.shape), f32), sp)
+                for sp in stage_params
+            )
+        if deltas is None:
+            deltas = tuple(
+                jax.tree.map(lambda p: jnp.zeros((K, *p.shape), f32), sp)
+                for sp in stage_params
+            )
         if opt_states is None:
             opt_states = tuple(self.opt.init(sp) for sp in stage_params)
         if comp_states is None:
             comp_states = tuple(
                 comp_lib.init_state(sp, self.comp_cfg) for sp in stage_params
             )
-        return (tuple(stage_params), rings, deltas, tuple(opt_states), tuple(comp_states))
+        return (
+            tuple(stage_params), tuple(rings), tuple(deltas),
+            tuple(opt_states), tuple(comp_states),
+        )
 
     # -- schedule arrays as scan xs ----------------------------------------
     def _schedule_xs(self) -> Dict[str, jnp.ndarray]:
         s = self.sched
+        compute = (
+            s.compute if s.compute is not None
+            else jnp.ones(s.num_rounds, bool)
+        )
         return {
             "process": jnp.asarray(s.process),
             "backward": jnp.asarray(s.backward),
@@ -138,10 +172,27 @@ class FerretEngine:
             "delta_mask": jnp.asarray(s.delta_mask),
             "delta_push": jnp.asarray(s.delta_push_slot),
             "tau": jnp.asarray(s.tau),
+            "compute": jnp.asarray(compute),
         }
 
     # -- one round ----------------------------------------------------------
     def _round(self, carry, xs):
+        """One scan step. Bucket-padding rounds (``compute=False``, only
+        ever emitted by ``pad_schedule``) skip the forward/backward through
+        the cond — the carry passes through untouched and the per-round
+        outputs are zeros, which the caller slices off."""
+
+        def skip(carry, _xs):
+            zero = jnp.zeros((), jnp.float32)
+            ys = {
+                "loss": zero, "acc": zero, "admitted": zero,
+                "lam": zero, "tau_mean": zero,
+            }
+            return carry, ys
+
+        return jax.lax.cond(xs["compute"], self._live_round, skip, carry, xs)
+
+    def _live_round(self, carry, xs):
         stages, rings, deltas, opts, comps = carry
         batch = xs["batch"]
         P = self.staged.num_stages
@@ -224,18 +275,16 @@ class FerretEngine:
         return carry, ys
 
     # -- run ------------------------------------------------------------
+    def _scan(self, state, xs):
+        return jax.lax.scan(self._round, state, xs)
+
     def run(self, state, stream: Dict[str, jnp.ndarray]):
         """stream: dict of arrays stacked over rounds, e.g. tokens (R, b, s).
 
         Returns (final_state, ys dict of per-round metrics)."""
         xs = dict(self._schedule_xs())
         xs["batch"] = stream
-
-        @jax.jit
-        def _go(state, xs):
-            return jax.lax.scan(self._round, state, xs)
-
-        return _go(state, xs)
+        return self._compiled(state, xs)
 
 
 # ---------------------------------------------------------------------------

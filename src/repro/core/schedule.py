@@ -43,6 +43,10 @@ class EngineSchedule:
     delta_mask: np.ndarray  # (R, P, K) f32 — which stacked Δθ entries are "live"
     delta_push_slot: np.ndarray  # (R, P) int — Δθ ring slot written on apply (-1: none)
     tau: np.ndarray  # (R, P) int — staleness (stage updates) at apply
+    # (R,) bool — False only for bucket-padding rounds (pad_schedule): the
+    # engine skips the forward/backward entirely, not just the masked
+    # apply. None means all-true (every real schedule).
+    compute: Optional[np.ndarray] = None
 
     def stats(self) -> dict:
         return {
@@ -60,6 +64,7 @@ def build_schedule(
     num_rounds: int,
     sync_period: Optional[int] = None,
     phase: int = 0,
+    warmup: int = 0,
 ) -> EngineSchedule:
     """Builds the engine schedule for a pipeline configuration.
 
@@ -72,7 +77,22 @@ def build_schedule(
     run (runtime/elastic_trainer.py) passes the stream cursor so the worker
     interleave — and hence the T4 admission pattern — continues seamlessly
     across segment boundaries instead of restarting at worker 0.
+
+    warmup: number of rounds to *simulate* before the ``num_rounds``
+    emitted rounds (``phase`` then addresses the first simulated round).
+    The result equals rows ``[warmup:warmup+num_rounds)`` of one big
+    build, so in-flight accumulation groups, ring slots, staleness
+    counters and pending pops continue exactly across a segment boundary —
+    provided the engine's gradient/Δθ rings are carried over too
+    (runtime/elastic_trainer.py does this for same-structure segments).
+    O(warmup) extra host work.
     """
+    if warmup:
+        full = build_schedule(
+            config, num_stages, warmup + num_rounds,
+            sync_period=sync_period, phase=phase,
+        )
+        return slice_schedule(full, warmup)
     P = num_stages
     R = num_rounds
     workers = config.workers
@@ -187,4 +207,73 @@ def build_schedule(
     return EngineSchedule(
         R, P, ring_size, delta_ring, process, backward, push_slot, push_reset,
         pop_slot, pop_scale, delta_mask, delta_push_slot, tau_arr,
+    )
+
+
+def slice_schedule(
+    s: EngineSchedule, start: int, end: Optional[int] = None
+) -> EngineSchedule:
+    """Rows ``[start:end)`` of a schedule (ring geometry unchanged).
+
+    Construction is causal, so slicing one big build is exactly the
+    continuation semantics: pushes before ``start`` whose pops land inside
+    the window fire here (the engine's carried rings hold their partial
+    groups), and pops landing beyond ``end`` fire in a later slice.
+    """
+    end = s.num_rounds if end is None else end
+    return EngineSchedule(
+        num_rounds=end - start,
+        num_stages=s.num_stages,
+        ring_size=s.ring_size,
+        delta_ring=s.delta_ring,
+        process=s.process[start:end],
+        backward=s.backward[start:end],
+        push_slot=s.push_slot[start:end],
+        push_reset=s.push_reset[start:end],
+        pop_slot=s.pop_slot[start:end],
+        pop_scale=s.pop_scale[start:end],
+        delta_mask=s.delta_mask[start:end],
+        delta_push_slot=s.delta_push_slot[start:end],
+        tau=s.tau[start:end],
+        compute=None if s.compute is None else s.compute[start:end],
+    )
+
+
+def pad_schedule(s: EngineSchedule, num_rounds: int) -> EngineSchedule:
+    """Extend to ``num_rounds`` with inert rounds (nothing admitted, no
+    push, no pop), which are the identity on engine state.
+
+    This is what lets the elastic trainer pad segment lengths up to a
+    small bucket set and reuse one compiled scan for many segment lengths:
+    the first ``s.num_rounds`` rows are untouched, the padded tail leaves
+    the carry unchanged, and per-round outputs for padded rounds are
+    sliced off by the caller. Padded rounds carry ``compute=False``, so
+    the engine skips their forward/backward entirely — bucket padding
+    costs one ``lax.cond`` branch per round, not redundant model compute.
+    """
+    pad = num_rounds - s.num_rounds
+    if pad <= 0:
+        return s
+    P, K = s.num_stages, s.delta_ring
+
+    def cat(a, fill):
+        ext = np.full((pad,) + a.shape[1:], fill, dtype=a.dtype)
+        return np.concatenate([np.asarray(a), ext], axis=0)
+
+    compute = s.compute if s.compute is not None else np.ones(s.num_rounds, bool)
+    return EngineSchedule(
+        num_rounds=num_rounds,
+        num_stages=P,
+        ring_size=s.ring_size,
+        delta_ring=K,
+        process=cat(s.process, False),
+        backward=cat(s.backward, False),
+        push_slot=cat(s.push_slot, -1),
+        push_reset=cat(s.push_reset, False),
+        pop_slot=cat(s.pop_slot, -1),
+        pop_scale=cat(s.pop_scale, 0.0),
+        delta_mask=cat(s.delta_mask, 0.0),
+        delta_push_slot=cat(s.delta_push_slot, -1),
+        tau=cat(s.tau, 0),
+        compute=cat(compute, False),
     )

@@ -86,9 +86,27 @@ def ssd_decode_step(
 # ---------------------------------------------------------------------------
 
 
+def _use_packed() -> bool:
+    # Flat-packed single-launch path (repro.kernels.packing). Default
+    # follows the kernel dispatch: packed whenever the Pallas kernels are
+    # in use (kernel-launch count is what packing optimizes); on the CPU
+    # jnp path the per-leaf loop is fully XLA-fused and the pack/unpack
+    # copies would only add latency. REPRO_PACK=1/0 forces either way.
+    env = os.environ.get("REPRO_PACK", "").strip()
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return _use_pallas()
+
+
 def iter_fisher_compensate(grad: jax.Array, deltas: jax.Array, lam: jax.Array) -> jax.Array:
-    """Apply τ iterative Fisher compensations; deltas: (τ, *grad.shape)."""
-    if _use_pallas() and grad.ndim >= 1 and grad.size % 128 == 0:
+    """Apply τ iterative Fisher compensations; deltas: (τ, *grad.shape).
+
+    The kernel pads ragged sizes internally, so every leaf takes the fast
+    path (no ``size % 128`` gate).
+    """
+    if _use_pallas():
         from repro.kernels import iter_fisher as _k
 
         return _k.iter_fisher_compensate_pallas(
@@ -105,10 +123,66 @@ def iter_fisher_leaf_stats(
     alpha: float,
 ):
     """Per-leaf λ-statistics + EMA updates. Returns (v_r', v_a', s1, s2)."""
-    if _use_pallas() and grad.ndim >= 1 and grad.size % 128 == 0:
+    if _use_pallas():
         from repro.kernels import iter_fisher as _k
 
         return _k.iter_fisher_leaf_stats_pallas(
             grad, delta, v_r, v_a, alpha, interpret=_pallas_interpret()
         )
     return _ref.iter_fisher_leaf_stats_ref(grad, delta, v_r, v_a, alpha)
+
+
+def iter_fisher_compensate_tree(
+    grad, deltas, lam: jax.Array, packed: Optional[bool] = None
+):
+    """Whole-pytree compensation: one kernel launch regardless of leaf count.
+
+    ``packed=None`` honors ``REPRO_PACK`` (default on); ``packed=False``
+    dispatches per leaf (the O(leaves) reference path, kept for
+    benchmarking and cross-checks).
+    """
+    if _use_packed() if packed is None else packed:
+        from repro.kernels import packing
+
+        return packing.compensate_tree(
+            grad, deltas, lam,
+            use_pallas=_use_pallas(), interpret=_pallas_interpret(),
+        )
+    return jax.tree.map(lambda g, d: iter_fisher_compensate(g, d, lam), grad, deltas)
+
+
+def iter_fisher_stats_tree(
+    grad, delta, v_r, v_a, alpha: float, packed: Optional[bool] = None
+):
+    """Whole-pytree λ-statistics: (v_r', v_a', Σ s1, Σ s2), one launch.
+
+    Both paths accumulate s1/s2 as on-device fp32 scalars — never as host
+    Python floats.
+    """
+    if _use_packed() if packed is None else packed:
+        from repro.kernels import packing
+
+        return packing.stats_tree(
+            grad, delta, v_r, v_a, alpha,
+            use_pallas=_use_pallas(), interpret=_pallas_interpret(),
+        )
+    new_vr, new_va = [], []
+    s1 = jnp.zeros((), jnp.float32)
+    s2 = jnp.zeros((), jnp.float32)
+    leaves = zip(
+        jax.tree.leaves(grad), jax.tree.leaves(delta),
+        jax.tree.leaves(v_r), jax.tree.leaves(v_a),
+    )
+    for g, d, vr, va in leaves:
+        nvr, nva, l1, l2 = iter_fisher_leaf_stats(g, d, vr, va, alpha)
+        new_vr.append(nvr)
+        new_va.append(nva)
+        s1 = s1 + l1
+        s2 = s2 + l2
+    treedef = jax.tree.structure(grad)
+    return (
+        jax.tree.unflatten(treedef, new_vr),
+        jax.tree.unflatten(treedef, new_va),
+        s1,
+        s2,
+    )

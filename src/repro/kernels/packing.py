@@ -1,0 +1,286 @@
+"""Flat-packed Iter-Fisher megakernels: one launch per compensation step.
+
+The engine calls the compensator once per stage-update on a parameter
+*pytree*.  Dispatching one ``pl.pallas_call`` per leaf (the previous
+``repro.kernels.iter_fisher`` path) costs O(leaves) kernel launches per
+step, and the old ``size % 128 == 0`` gate silently dropped most biases
+and norm scales to the jnp reference.  This module removes both costs:
+
+- ``PackSpec`` lays the whole pytree out in one contiguous fp32 buffer.
+  Each leaf starts at an 8·128-aligned offset; the gaps are zero-padded.
+  Zero is the identity for every Iter-Fisher quantity (Δθ = 0 ⇒ no
+  compensation; g = v_r = v_a = 0 ⇒ no statistics), so padding never
+  leaks into results.  Specs are computed once per partition structure
+  and cached by (treedef, shapes, dtypes).
+- ``compensate_tree`` / ``stats_tree`` run the Eq. 9 inner loop and the
+  Alg. 1 λ-statistics as **one** ``pl.pallas_call`` each over the packed
+  buffer — the λ-statistics s1/s2 block-reduce on-device in the same data
+  pass (per-grid-step partials, race-free on sequential and parallel
+  grids alike, plus a tiny on-device epilogue sum).  When packing is
+  forced without Pallas (``REPRO_PACK=1`` on CPU), the same packed buffer
+  goes through the jnp reference in one fused elementwise op instead of
+  an O(leaves) Python loop.
+
+``KERNEL_LAUNCHES`` counts actual ``pl.pallas_call`` invocations so tests
+and ``benchmarks/bench_hotpath.py`` can assert the launch count is 1
+regardless of leaf count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+from repro.kernels.iter_fisher import BLOCK  # one tile size for all kernels
+
+Pytree = Any
+
+ALIGN = 8 * 128  # fp32 VPU tile: every leaf starts on an (8, 128) boundary
+assert BLOCK % ALIGN == 0, "packed grid tile must cover whole leaf slots"
+
+# pl.pallas_call invocations issued by this module (trace-time counter).
+KERNEL_LAUNCHES = 0
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Packing layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    """Flat layout of one pytree: leaf i occupies ``[offsets[i],
+    offsets[i] + sizes[i])`` of a ``(total,)`` fp32 buffer; the tail of its
+    ALIGN-rounded slot (and of the BLOCK-rounded buffer) is zero padding."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    slots: Tuple[int, ...]  # ALIGN-rounded width of each leaf's slot
+    total: int  # BLOCK-multiple buffer length
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.sizes)
+
+
+_SPEC_CACHE: Dict[Tuple, PackSpec] = {}
+
+
+def pack_spec(tree: Pytree) -> PackSpec:
+    """The (cached) flat layout for ``tree``'s structure and leaf shapes."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    dtypes = tuple(str(jnp.asarray(leaf).dtype) for leaf in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        sizes, slots, offsets = [], [], []
+        cursor = 0
+        for shape in shapes:
+            size = 1
+            for d in shape:
+                size *= d
+            slot = max(_round_up(size, ALIGN), ALIGN)
+            offsets.append(cursor)
+            sizes.append(size)
+            slots.append(slot)
+            cursor += slot
+        spec = PackSpec(
+            treedef=treedef,
+            shapes=shapes,
+            dtypes=dtypes,
+            offsets=tuple(offsets),
+            sizes=tuple(sizes),
+            slots=tuple(slots),
+            total=max(_round_up(cursor, BLOCK), BLOCK),
+        )
+        _SPEC_CACHE[key] = spec
+    return spec
+
+
+def pack(spec: PackSpec, tree: Pytree, lead: int = 0) -> jax.Array:
+    """Pack ``tree`` into a ``(*lead_dims, total)`` fp32 buffer.
+
+    ``lead`` leading axes of every leaf (e.g. the stacked-Δθ axis) are kept;
+    the remaining axes flatten into the leaf's slot. Gaps are zeros.
+    Implemented as dynamic-update-slices into one zero buffer — XLA turns
+    the chain into in-place writes, measurably cheaper than pad+concat.
+    """
+    leaves = jax.tree.leaves(tree)
+    lead_shape = tuple(leaves[0].shape[:lead]) if leaves else ()
+    out = jnp.zeros(lead_shape + (spec.total,), jnp.float32)
+    for leaf, off in zip(leaves, spec.offsets):
+        flat = jnp.asarray(leaf).reshape(lead_shape + (-1,)).astype(jnp.float32)
+        out = jax.lax.dynamic_update_slice(out, flat, (0,) * lead + (off,))
+    return out
+
+
+def unpack(
+    spec: PackSpec, flat: jax.Array, dtypes: Optional[Tuple[str, ...]] = None
+) -> Pytree:
+    """Invert ``pack`` for a ``(total,)`` buffer (casts back per-leaf)."""
+    dtypes = dtypes or spec.dtypes
+    leaves = [
+        flat[off : off + size].reshape(shape).astype(dtype)
+        for off, size, shape, dtype in zip(spec.offsets, spec.sizes, spec.shapes, dtypes)
+    ]
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Packed kernels (inputs are (total,) / (τ, total) fp32, total % BLOCK == 0)
+# ---------------------------------------------------------------------------
+
+
+def _compensate_kernel(lam_ref, g_ref, d_ref, o_ref, *, tau: int):
+    g = g_ref[...]
+    lam = lam_ref[0]
+    for i in range(tau):
+        g = g + lam * g * g * d_ref[i, :]
+    o_ref[...] = g
+
+
+def compensate_packed(
+    gflat: jax.Array, dflat: jax.Array, lam: jax.Array, interpret: bool = False
+) -> jax.Array:
+    """Eq. 9 over the packed buffer: one launch for the whole pytree."""
+    global KERNEL_LAUNCHES
+    tau = dflat.shape[0]
+    if tau == 0:
+        return gflat
+    nb = gflat.shape[0] // BLOCK
+    KERNEL_LAUNCHES += 1
+    return pl.pallas_call(
+        functools.partial(_compensate_kernel, tau=tau),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # λ broadcast to every tile
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((tau, BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(gflat.shape, jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(lam).reshape(1).astype(jnp.float32), gflat, dflat)
+
+
+def _stats_kernel(g_ref, d_ref, vr_ref, va_ref, nvr_ref, nva_ref, s1_ref, s2_ref,
+                  *, alpha: float):
+    # Each grid step writes its own s1/s2 partial (race-free on any
+    # backend, sequential or parallel grid); the BLOCK→1 reduction happens
+    # here in the same data pass, the tiny nb→1 epilogue sum outside.
+    g, d, vr, va = g_ref[...], d_ref[...], vr_ref[...], va_ref[...]
+    dv_r = (1.0 - alpha) * (g - vr)
+    s1_ref[0] = jnp.sum(dv_r * va)
+    s2_ref[0] = jnp.sum(va * va)
+    nvr_ref[...] = alpha * vr + (1.0 - alpha) * g
+    nva_ref[...] = alpha * va + (1.0 - alpha) * (g * g * d)
+
+
+def stats_packed(
+    gflat: jax.Array,
+    dflat: jax.Array,
+    vrflat: jax.Array,
+    vaflat: jax.Array,
+    alpha: float,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Alg. 1 λ-statistics over the packed buffer: one launch, s1/s2
+    block-reduced on-device in the same pass. Returns (v_r', v_a', s1, s2)."""
+    global KERNEL_LAUNCHES
+    nb = gflat.shape[0] // BLOCK
+    KERNEL_LAUNCHES += 1
+    nvr, nva, s1b, s2b = pl.pallas_call(
+        functools.partial(_stats_kernel, alpha=alpha),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in range(4)],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(gflat.shape, jnp.float32),
+            jax.ShapeDtypeStruct(gflat.shape, jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gflat, dflat, vrflat, vaflat)
+    return nvr, nva, jnp.sum(s1b), jnp.sum(s2b)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level entrypoints (pack → one kernel / one fused jnp op → unpack)
+# ---------------------------------------------------------------------------
+
+
+def compensate_tree(
+    grad: Pytree,
+    deltas: Pytree,  # per leaf: (τ, *leaf.shape), oldest first
+    lam: jax.Array,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> Pytree:
+    """Whole-pytree Iter-Fisher compensation in a single pass."""
+    leaves_d = jax.tree.leaves(deltas)
+    tau = leaves_d[0].shape[0] if leaves_d else 0
+    if tau == 0:
+        return grad
+    spec = pack_spec(grad)
+    gflat = pack(spec, grad)
+    dflat = pack(spec, deltas, lead=1)
+    if use_pallas:
+        out = compensate_packed(gflat, dflat, lam, interpret=interpret)
+    else:
+        out = _ref.iter_fisher_compensate_ref(gflat, dflat, lam)
+    return unpack(spec, out)
+
+
+def stats_tree(
+    grad: Pytree,
+    delta: Pytree,
+    v_r: Pytree,
+    v_a: Pytree,
+    alpha: float,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> Tuple[Pytree, Pytree, jax.Array, jax.Array]:
+    """Whole-pytree λ-statistics: (v_r', v_a', Σ s1, Σ s2) in a single pass.
+
+    The returned s1/s2 are on-device fp32 scalars — there is no per-leaf
+    host accumulation anywhere on this path.
+    """
+    spec = pack_spec(grad)
+    gflat = pack(spec, grad)
+    dflat = pack(spec, delta)
+    vrflat = pack(spec, v_r)
+    vaflat = pack(spec, v_a)
+    if use_pallas:
+        nvr, nva, s1, s2 = stats_packed(gflat, dflat, vrflat, vaflat, alpha, interpret)
+    else:
+        nvr, nva, s1, s2 = _ref.iter_fisher_leaf_stats_ref(
+            gflat, dflat, vrflat, vaflat, alpha
+        )
+    vr_dtypes = tuple(str(leaf.dtype) for leaf in jax.tree.leaves(v_r))
+    va_dtypes = tuple(str(leaf.dtype) for leaf in jax.tree.leaves(v_a))
+    return (
+        unpack(spec, nvr, vr_dtypes),
+        unpack(spec, nva, va_dtypes),
+        s1,
+        s2,
+    )

@@ -26,15 +26,17 @@ def iter_fisher_compensate_ref(
     """Iteratively apply  g ← g + λ · g ⊙ g ⊙ Δθ_i  for each staleness step.
 
     This is Eq. 9: A_I(... A_I(∇L(D;θ), θ^{t}, θ^{t-1}) ..., θ^{t+τ-1}, θ^{t+τ-2}).
+    The iteration carries fp32 and casts back once at the end — the same
+    accumulation the Pallas kernels (per-leaf and flat-packed) do, so all
+    three paths agree for low-precision grads too.
     """
 
-    def body(g, delta):
-        g32 = g.astype(jnp.float32)
+    def body(g32, delta):
         g32 = g32 + lam * g32 * g32 * delta.astype(jnp.float32)
-        return g32.astype(grad.dtype), None
+        return g32, None
 
-    out, _ = jax.lax.scan(body, grad, deltas)
-    return out
+    out, _ = jax.lax.scan(body, grad.astype(jnp.float32), deltas)
+    return out.astype(grad.dtype)
 
 
 def iter_fisher_leaf_stats_ref(

@@ -95,12 +95,16 @@ def run_ferret(args) -> None:
             b = "inf" if math.isinf(s.budget_bytes) else f"{s.budget_bytes/2**30:.2f}GiB"
             tag = (f" replan={1e3*s.replan_s:.0f}ms remap={1e3*s.remap_s:.0f}ms"
                    if s.replanned else "")
+            cache = "hit" if s.cache_hit else "compile"
             print(f"  seg [{s.start},{s.end}) budget={b} P={p.partition.num_stages} "
                   f"N={len(p.config.active_workers())} M={p.memory/2**20:.1f}MiB "
+                  f"engine={cache}@{s.rounds_compiled} "
                   f"oacc={s.result.online_acc:.4f}{tag}")
         print(
             f"oacc={res.online_acc:.4f} admitted={res.admitted_frac:.2f} "
             f"replans={res.num_replans} "
+            f"engine-cache misses={res.engine_cache_misses} "
+            f"hits={res.engine_cache_hits} "
             f"({res.rounds} items, exactly once, in {dt:.1f}s)"
         )
         return

@@ -1,3 +1,4 @@
+from repro.core.ferret import EngineCache
 from repro.runtime.elastic import ClusterSpec, DeviceLossError, ElasticPlanner
 from repro.runtime.elastic_trainer import (
     BudgetEvent,
@@ -15,6 +16,7 @@ __all__ = [
     "ElasticPlanner",
     "ElasticStreamResult",
     "ElasticStreamTrainer",
+    "EngineCache",
     "ResumeState",
     "SegmentReport",
     "Supervisor",

@@ -13,9 +13,24 @@ loss escalated through ``Supervisor.on_fatal`` — it
      merged (``T.merge_stage_params``) and re-split on the new
      ``plan.partition.bounds``; per-parameter optimizer moments and
      Iter-Fisher λ statistics travel the same merge/re-split path, so no
-     learned state is thrown away. Only the gradient-accumulation and Δθ
-     rings are re-initialized — their shapes are schedule-dependent and
-     in-flight accumulation groups do not survive a partition change.
+     learned state is thrown away. Across *same-structure* boundaries
+     (partition and pipeline config unchanged — segment caps, callable
+     polls, A→A switches) even the gradient-accumulation and Δθ rings are
+     carried: each segment runs a slice of one per-structure schedule
+     build (``slice_schedule``; construction is causal, so slicing one
+     big build *is* the continuation — ``build_schedule(warmup=...)``
+     computes the same rows when the stream end is unknown), so in-flight
+     accumulation groups survive. Only a *cross-partition*
+     switch re-initializes the rings — their shapes are
+     schedule-dependent and do not survive a partition change
+     (documented drop).
+
+Compile-once hot path: engines are cached in an ``EngineCache`` keyed on
+``(partition bounds, ring geometry, bucketed segment length)``. Segment
+lengths are padded up to a small geometric bucket set with *inert*
+schedule rounds (identity on engine state), so repeated and A→B→A budget
+switches reuse already-compiled scans instead of re-tracing; hit/miss
+counts ride in ``ElasticStreamResult``.
 
 The stream cursor advances only when a segment completes, so a failed or
 re-planned segment is re-run from its first round with unchanged state:
@@ -51,7 +66,13 @@ from repro.checkpointing.checkpoint import (
 from repro.core import compensation as comp_lib
 from repro.core import planner as planner_lib
 from repro.core import schedule as sched_lib
-from repro.core.ferret import FerretConfig, StreamResult, empirical_adaptation_rate
+from repro.core.ferret import (
+    EngineCache,
+    FerretConfig,
+    IdentityKey,
+    StreamResult,
+    empirical_adaptation_rate,
+)
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, analytic_profile
 from repro.models.config import ModelConfig
@@ -86,6 +107,8 @@ class SegmentReport:
     remap_s: float  # merge/re-split remap time (0.0 when not replanned)
     run_s: float  # engine build + compile + scan wall time
     result: StreamResult
+    cache_hit: bool = False  # compiled scan reused from the engine cache
+    rounds_compiled: int = 0  # bucketed scan length this segment ran under
 
 
 @dataclasses.dataclass
@@ -100,6 +123,8 @@ class ElasticStreamResult:
     rounds: int  # stream rounds consumed (== stream length: exactly once)
     num_replans: int
     num_faults: int
+    engine_cache_hits: int = 0  # compiled-scan reuses during this run
+    engine_cache_misses: int = 0  # fresh compiles during this run
 
 
 # ---------------------------------------------------------------------------
@@ -262,6 +287,7 @@ class ElasticStreamTrainer:
         optimizer: Optional[Optimizer] = None,
         profile: Optional[ModelProfile] = None,
         algorithm: Optional[Union[str, OCLAlgorithm]] = None,
+        engine_cache: Optional[EngineCache] = None,
     ):
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
@@ -274,6 +300,22 @@ class ElasticStreamTrainer:
             get_algorithm(algorithm, ferret_cfg.ocl)
             if algorithm is not None
             else get_algorithm(ferret_cfg.ocl)
+        )
+        # Compiled engines survive across run_stream calls on one trainer;
+        # pass a shared EngineCache to also share across trainers, or
+        # EngineCache(enabled=False) to disable bucketing + reuse.
+        self.engine_cache = engine_cache or EngineCache()
+        # Cache-key scope: a compiled engine bakes in the model, the
+        # algorithm's loss wrapper, the optimizer, lr and compensation
+        # config — trainers differing in any of these must never share an
+        # engine through a shared EngineCache, even for equal bounds.
+        # IdentityKey pins the referents so a recycled id can never alias.
+        self._cache_scope = (
+            IdentityKey(self.model_cfg),
+            IdentityKey(self.algorithm),
+            IdentityKey(self.optimizer),
+            ferret_cfg.lr,
+            ferret_cfg.compensation,
         )
         self._pending_budget: Optional[float] = None
 
@@ -397,6 +439,18 @@ class ElasticStreamTrainer:
         admitted_all: List[np.ndarray] = []
         num_faults = 0
         faults_at_cursor = 0
+        # Same-structure continuation state: ``prev_plan`` is the plan the
+        # carried rings are valid under, ``sched_origin`` the round its
+        # schedule structure started at, and ``full_sched`` the one O(R)
+        # build for that structure — each segment is a pure slice of it,
+        # so host-side schedule work stays O(R) per structure instead of
+        # O(R²) over the stream.
+        prev_plan: Optional[planner_lib.Plan] = None
+        sched_origin = cursor
+        full_sched: Optional[sched_lib.EngineSchedule] = None
+        rings = deltas = None
+        cache_hits0 = self.engine_cache.hits
+        cache_misses0 = self.engine_cache.misses
 
         while cursor < R:
             # ---- budget for this segment: fault request beats the schedule.
@@ -447,15 +501,60 @@ class ElasticStreamTrainer:
 
             t0 = time.perf_counter()
             P = plan.partition.num_stages
-            staged = self.algorithm.wrap_staged(
-                staged_from_transformer(self.model_cfg, bounds)
+            same_struct = (
+                prev_plan is not None
+                and list(prev_plan.partition.bounds) == bounds
+                and prev_plan.config == plan.config
             )
-            engine_sched = sched_lib.build_schedule(plan.config, P, seg_len, phase=cursor)
-            engine = FerretEngine(
-                staged, engine_sched, self.optimizer, self.cfg.compensation, lr=self.cfg.lr
+            if not same_struct:
+                # structure changed (or first segment): the schedule
+                # restarts here and ring shapes/contents no longer apply
+                sched_origin = cursor
+                full_sched = None
+                rings = deltas = None
+            if full_sched is None:
+                # one build out to the stream end; segments slice it
+                full_sched = sched_lib.build_schedule(
+                    plan.config, P, R - sched_origin, phase=sched_origin
+                )
+            bucket_rounds = self.engine_cache.bucket_len(seg_len)
+            engine_sched = sched_lib.pad_schedule(
+                sched_lib.slice_schedule(
+                    full_sched, cursor - sched_origin, seg_end - sched_origin
+                ),
+                bucket_rounds,
             )
-            state = engine.init_state(stage_params, opt_states, comp_states)
+            struct_key = (self._cache_scope, tuple(bounds))
+            compile_key = struct_key + (
+                engine_sched.ring_size, engine_sched.delta_ring, bucket_rounds,
+                self.batch, self.seq, tuple(sorted(stream_j)),
+            )
+
+            def _factory(bounds=bounds, engine_sched=engine_sched):
+                staged = self.algorithm.wrap_staged(
+                    staged_from_transformer(self.model_cfg, bounds)
+                )
+                return FerretEngine(
+                    staged, engine_sched, self.optimizer,
+                    self.cfg.compensation, lr=self.cfg.lr,
+                )
+
+            engine = self.engine_cache.engine_for(struct_key, _factory)
+            cache_hit = self.engine_cache.seen(compile_key)
+            engine.set_schedule(engine_sched)
+            state = engine.init_state(
+                stage_params, opt_states, comp_states, rings=rings, deltas=deltas
+            )
             seg_stream = {k: v[cursor:seg_end] for k, v in stream_j.items()}
+            if bucket_rounds > seg_len:
+                # bucket padding: repeat the last item (inert schedule rounds
+                # never admit it, so state and metrics are untouched)
+                seg_stream = {
+                    k: jnp.concatenate(
+                        [v, jnp.repeat(v[-1:], bucket_rounds - seg_len, axis=0)]
+                    )
+                    for k, v in seg_stream.items()
+                }
             try:
                 final_state, ys = self._execute_segment(
                     engine, state, seg_stream, supervisor_cfg,
@@ -478,10 +577,17 @@ class ElasticStreamTrainer:
                     raise
                 continue
             run_s = time.perf_counter() - t0
+            # account the compile/hit only now: a faulted attempt above
+            # never compiled, and must not poison the perf counters
+            self.engine_cache.record(compile_key, cache_hit)
 
+            ys = {k: v[:seg_len] for k, v in ys.items()}  # drop bucket padding
             stage_params = list(final_state[0])
+            rings = tuple(final_state[1])
+            deltas = tuple(final_state[2])
             opt_states = tuple(final_state[3])
             comp_states = tuple(final_state[4])
+            prev_plan = plan
 
             acc = np.asarray(ys["acc"], dtype=np.float64)
             admitted = np.asarray(ys["admitted"], dtype=np.float64)
@@ -501,6 +607,7 @@ class ElasticStreamTrainer:
                     start=cursor, end=seg_end, budget_bytes=budget,
                     replanned=replanned, replan_s=replan_s, remap_s=remap_s,
                     run_s=run_s, result=result,
+                    cache_hit=cache_hit, rounds_compiled=bucket_rounds,
                 )
             )
             acc_all.append(acc)
@@ -526,6 +633,8 @@ class ElasticStreamTrainer:
             rounds=int(sum(s.end - s.start for s in segments)),
             num_replans=sum(1 for s in segments if s.replanned),
             num_faults=num_faults,
+            engine_cache_hits=self.engine_cache.hits - cache_hits0,
+            engine_cache_misses=self.engine_cache.misses - cache_misses0,
         )
 
     # -- crash restore ----------------------------------------------------
@@ -630,6 +739,7 @@ class ElasticStreamTrainer:
     ):
         """One segment, either direct or as a single supervised step."""
         out: Dict[str, Any] = {}
+        seg_len = seg_end - cursor  # engine may run bucket-padded rounds
 
         def step_fn(st, batch):
             if fault_round is not None:
@@ -638,7 +748,9 @@ class ElasticStreamTrainer:
                 )
             new_st, ys = engine.run(st, batch)
             out["ys"] = ys
-            return new_st, {"loss": jnp.mean(ys["loss"])}
+            # monitored loss over the real rounds only — bucket-padding
+            # rows are zeros and must not dilute NaN checks / thresholds
+            return new_st, {"loss": jnp.mean(ys["loss"][:seg_len])}
 
         if supervisor_cfg is None:
             if fault_round is not None:

@@ -325,3 +325,93 @@ def test_crash_restore_remap_consumes_stream_exactly_once(rng, tmp_path):
     tail = {k: v[crash_at:] for k, v in stream.items()}
     res_cold = cold.run_stream(params, tail, schedule=[])
     assert not np.allclose(res2.losses, res_cold.losses)
+
+
+# ---------------------------------------------------------------------------
+# (f) compile-once hot path: engine cache + bucketed segment lengths
+# ---------------------------------------------------------------------------
+
+
+def test_aba_budget_schedule_compiles_exactly_two_engines(rng):
+    """A→B→A compiles 2 engines (A and B); the return to A is a cache hit."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    profile = _hetero_profile(cfg)
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    full = et.plan_for(math.inf)
+    params = T.init_params(cfg, rng)
+    stream = _stream(length=60)  # equal 20-round segments → one bucket
+
+    events = [
+        BudgetEvent(20, full.memory * 0.3),  # A → B
+        BudgetEvent(40, math.inf),  # B → A
+    ]
+    res = et.run_stream(params, stream, schedule=events)
+    assert len(res.segments) == 3 and res.num_replans == 2
+    bounds = [tuple(s.result.plan.partition.bounds) for s in res.segments]
+    assert bounds[0] == bounds[2] != bounds[1], "A→B→A must move and return"
+    assert res.engine_cache_misses == 2
+    assert res.engine_cache_hits == 1
+    assert [s.cache_hit for s in res.segments] == [False, False, True]
+    # bucketing padded all three segments onto one compiled length
+    assert len({s.rounds_compiled for s in res.segments}) <= 2
+    assert np.isfinite(res.losses).all() and res.rounds == 60
+
+
+def test_cache_disabled_compiles_every_segment(rng):
+    from repro.runtime import EngineCache
+
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+    et = ElasticStreamTrainer(
+        cfg, fc, batch=2, seq=16, engine_cache=EngineCache(enabled=False)
+    )
+    res = et.run_stream(params, stream, segment_rounds=10)
+    assert res.engine_cache_hits == 0
+    assert res.engine_cache_misses == len(res.segments) == 4
+    # disabled cache does not bucket: segments ran at their true length
+    assert all(s.rounds_compiled == 10 for s in res.segments)
+
+
+def test_segmented_run_matches_single_run_exactly(rng):
+    """Same-structure segment boundaries carry the in-flight accumulation
+    and Δθ rings (continued schedule via warmup), so a chunked run equals
+    the unchunked run — gradients, λ statistics, losses, weights."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+    ft = FerretTrainer(cfg, fc, batch=2, seq=16)
+    base = ft.run_stream(params, stream)
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=16)
+    res = et.run_stream(params, stream, segment_rounds=7)  # ragged segments
+    assert len(res.segments) == 6
+    assert res.engine_cache_hits >= 1  # equal-length chunks share a bucket
+    np.testing.assert_allclose(
+        np.asarray(res.losses), np.asarray(base.losses), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        res.online_acc_curve, base.online_acc_curve, rtol=1e-6, atol=1e-7
+    )
+    for a, b in zip(jax.tree.leaves(ft.final_params), jax.tree.leaves(res.final_params)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_bucketed_segment_is_exact(rng):
+    """Padding a segment to a bucket length (inert schedule rounds) must
+    not change any per-round output or the final state."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    stream = _stream(length=37)  # prime-ish: buckets to 64
+    base = FerretTrainer(cfg, fc, batch=2, seq=16).run_stream(params, stream)
+    res = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, stream, schedule=[]
+    )
+    assert res.segments[0].rounds_compiled == 64
+    np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
+    assert res.rounds == 37 and res.losses.shape == (37,)

@@ -1,0 +1,222 @@
+"""Flat-packed Iter-Fisher megakernels vs the per-leaf reference.
+
+The packed path must be (a) equivalent to the per-leaf reference within
+1e-5 (fp32) on ragged pytrees — including odd-sized leaves the old
+``size % 128 == 0`` gate excluded from the Pallas path — across dtypes,
+staleness depths, and fixed-λ mode; and (b) exactly **one** kernel launch
+per compensation/statistics step regardless of leaf count.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compensation as comp
+from repro.kernels import ops, packing
+
+# Ragged leaf-shape sets: odd sizes, 128-multiples, scalars, bf16 mixes.
+RAGGED_TREES = [
+    {"w": (33, 17), "b": (5,), "scale": ()},
+    {"w1": (128,), "w2": (64, 2), "b": (127,), "n": (129,)},
+    {"a": (3, 5, 7), "b": (1,), "c": (256,), "d": (4097,)},
+]
+
+
+def _make_tree(shapes, dtype, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return {
+        k: jnp.asarray(rng.normal(size=s) * scale, jnp.dtype(dtype))
+        for k, s in shapes.items()
+    }
+
+
+def _deltas_for(tree, tau, seed):
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=(tau, *p.shape)) * 0.01, p.dtype), tree
+    )
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack layout
+# ---------------------------------------------------------------------------
+
+
+def test_pack_roundtrip_and_alignment():
+    tree = _make_tree(RAGGED_TREES[1], "float32", 0)
+    tree["h"] = jnp.asarray(np.arange(6).reshape(2, 3), jnp.bfloat16)
+    spec = packing.pack_spec(tree)
+    assert spec.total % packing.BLOCK == 0
+    assert all(off % packing.ALIGN == 0 for off in spec.offsets)
+    flat = packing.pack(spec, tree)
+    assert flat.dtype == jnp.float32 and flat.shape == (spec.total,)
+    out = packing.unpack(spec, flat)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(
+            np.asarray(out[k], np.float32), np.asarray(tree[k], np.float32),
+            rtol=0, atol=0,
+        )
+    # gaps between leaves are zero (padding must be inert)
+    mask = np.zeros(spec.total, bool)
+    for off, size in zip(spec.offsets, spec.sizes):
+        mask[off : off + size] = True
+    np.testing.assert_array_equal(np.asarray(flat)[~mask], 0.0)
+
+
+def test_pack_spec_is_cached_per_structure():
+    t1 = _make_tree(RAGGED_TREES[0], "float32", 0)
+    t2 = _make_tree(RAGGED_TREES[0], "float32", 1)  # same structure, new values
+    assert packing.pack_spec(t1) is packing.pack_spec(t2)
+
+
+# ---------------------------------------------------------------------------
+# packed vs per-leaf reference equivalence
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tree_idx=st.integers(0, len(RAGGED_TREES) - 1),
+    tau=st.sampled_from([1, 4]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_packed_compensate_matches_per_leaf(tree_idx, tau, dtype, seed):
+    tree = _make_tree(RAGGED_TREES[tree_idx], dtype, seed)
+    deltas = _deltas_for(tree, tau, seed + 1)
+    lam = jnp.asarray(0.3, jnp.float32)
+    got = ops.iter_fisher_compensate_tree(tree, deltas, lam, packed=True)
+    want = ops.iter_fisher_compensate_tree(tree, deltas, lam, packed=False)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    for k in tree:
+        assert got[k].dtype == tree[k].dtype
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float32), np.asarray(want[k], np.float32),
+            rtol=tol, atol=tol,
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tree_idx=st.integers(0, len(RAGGED_TREES) - 1),
+    alpha=st.floats(0.5, 0.99),
+    seed=st.integers(0, 2**16),
+)
+def test_packed_stats_match_per_leaf(tree_idx, alpha, seed):
+    g = _make_tree(RAGGED_TREES[tree_idx], "float32", seed)
+    d = _make_tree(RAGGED_TREES[tree_idx], "float32", seed + 1, scale=0.01)
+    vr = _make_tree(RAGGED_TREES[tree_idx], "float32", seed + 2)
+    va = _make_tree(RAGGED_TREES[tree_idx], "float32", seed + 3)
+    got = ops.iter_fisher_stats_tree(g, d, vr, va, alpha, packed=True)
+    want = ops.iter_fisher_stats_tree(g, d, vr, va, alpha, packed=False)
+    for t_got, t_want in zip(got[:2], want[:2]):
+        for a, b in zip(jax.tree.leaves(t_got), jax.tree.leaves(t_want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(got[2]), float(want[2]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(got[3]), float(want[3]), rtol=1e-4, atol=1e-5)
+
+
+def test_full_compensate_packed_vs_per_leaf_with_lambda_tuning():
+    """comp.compensate end-to-end: λ update + compensation, packed == per-leaf."""
+    cfg = comp.CompensationConfig(method="iter_fisher", eta_lambda=1e-3, alpha=0.8)
+    tree = _make_tree(RAGGED_TREES[1], "float32", 7)
+    deltas = _deltas_for(tree, 3, 8)
+    state = comp.init_state(tree, cfg)
+    # seed EMAs so the λ gradient is nonzero
+    state = dataclasses.replace(
+        state, v_a=_make_tree(RAGGED_TREES[1], "float32", 9)
+    )
+    results = {}
+    for packed, env in ((True, "1"), (False, "0")):
+        import os
+
+        old = os.environ.get("REPRO_PACK")
+        os.environ["REPRO_PACK"] = env
+        try:
+            results[packed] = comp.compensate(cfg, state, tree, deltas)
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_PACK", None)
+            else:
+                os.environ["REPRO_PACK"] = old
+    s_p, g_p = results[True]
+    s_r, g_r = results[False]
+    np.testing.assert_allclose(float(s_p.lam), float(s_r.lam), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_p), jax.tree.leaves(g_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_p.v_a), jax.tree.leaves(s_r.v_a)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_fixed_lambda_mode_packed():
+    """η_λ = 0: empty EMA placeholders pass through, compensation still packed."""
+    cfg = comp.CompensationConfig(method="iter_fisher", eta_lambda=0.0, lam0=0.4)
+    tree = _make_tree(RAGGED_TREES[0], "float32", 3)
+    deltas = _deltas_for(tree, 4, 4)
+    state = comp.init_state(tree, cfg)
+    new_state, out = comp.compensate(cfg, state, tree, deltas)
+    want = ops.iter_fisher_compensate_tree(
+        tree, deltas, jnp.asarray(0.4, jnp.float32), packed=False
+    )
+    for k in tree:
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(want[k]), rtol=1e-5, atol=1e-5
+        )
+    np.testing.assert_allclose(float(new_state.lam), 0.4, rtol=1e-6)
+
+
+def test_tau_zero_is_identity():
+    tree = _make_tree(RAGGED_TREES[0], "float32", 5)
+    deltas = jax.tree.map(lambda p: jnp.zeros((0, *p.shape), p.dtype), tree)
+    out = ops.iter_fisher_compensate_tree(tree, deltas, jnp.asarray(0.5), packed=True)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+
+
+def test_zero_delta_is_identity_on_odd_leaves():
+    """Zero Δθ (and zero padding) must be exactly the identity."""
+    tree = _make_tree(RAGGED_TREES[2], "float32", 6)
+    deltas = jax.tree.map(lambda p: jnp.zeros((3, *p.shape), p.dtype), tree)
+    out = packing.compensate_tree(tree, deltas, jnp.asarray(0.7), use_pallas=True,
+                                  interpret=True)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+
+
+# ---------------------------------------------------------------------------
+# one launch regardless of leaf count (the whole point)
+# ---------------------------------------------------------------------------
+
+
+def test_single_kernel_launch_per_step():
+    tree = _make_tree(RAGGED_TREES[2], "float32", 11)  # 4 ragged leaves
+    assert len(jax.tree.leaves(tree)) > 1
+    deltas = _deltas_for(tree, 4, 12)
+    d1 = jax.tree.map(lambda d: d[0], deltas)
+    vr = jax.tree.map(jnp.zeros_like, tree)
+    va = _make_tree(RAGGED_TREES[2], "float32", 13)
+    lam = jnp.asarray(0.2, jnp.float32)
+
+    n0 = packing.KERNEL_LAUNCHES
+    packing.compensate_tree(tree, deltas, lam, use_pallas=True, interpret=True)
+    assert packing.KERNEL_LAUNCHES - n0 == 1, "compensation must be 1 launch"
+    packing.stats_tree(tree, d1, vr, va, 0.9, use_pallas=True, interpret=True)
+    assert packing.KERNEL_LAUNCHES - n0 == 2, "λ-statistics must be 1 launch"
+
+
+def test_packed_pallas_matches_reference_on_odd_sizes():
+    """Interpret-mode Pallas over the packed buffer == per-leaf reference,
+    on leaves the old ``% 128`` gate excluded."""
+    tree = _make_tree(RAGGED_TREES[0], "float32", 21)  # 33×17, (5,), scalar
+    deltas = _deltas_for(tree, 2, 22)
+    lam = jnp.asarray(0.25, jnp.float32)
+    got = packing.compensate_tree(tree, deltas, lam, use_pallas=True, interpret=True)
+    want = ops.iter_fisher_compensate_tree(tree, deltas, lam, packed=False)
+    for k in tree:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), rtol=1e-5, atol=1e-5
+        )

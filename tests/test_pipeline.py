@@ -48,6 +48,33 @@ def test_schedule_staleness_matches_pipeline_depth():
             assert taus[2:].min() >= 0
 
 
+def test_schedule_continuation_warmup_slice_pad_agree():
+    """The three continuation primitives are one semantics: warmup ==
+    rows of one big build == slice_schedule of it; pad rounds are inert."""
+    cfgp = PipelineConfig(workers=[
+        WorkerConfig(0, 0, [StageKnobs(accum=2), StageKnobs()]),
+        WorkerConfig(1, 0, [StageKnobs(), StageKnobs(omit=1)]),
+    ])
+    fields = ("process", "backward", "push_slot", "push_reset", "pop_slot",
+              "pop_scale", "delta_mask", "delta_push_slot", "tau")
+    big = sch.build_schedule(cfgp, 2, 30)
+    for cut in (7, 13):
+        warm = sch.build_schedule(cfgp, 2, 30 - cut, warmup=cut)
+        sliced = sch.slice_schedule(big, cut)
+        for f in fields:
+            np.testing.assert_array_equal(getattr(warm, f), getattr(big, f)[cut:])
+            np.testing.assert_array_equal(getattr(sliced, f), getattr(big, f)[cut:])
+    window = sch.slice_schedule(big, 7, 13)
+    assert window.num_rounds == 6
+    np.testing.assert_array_equal(window.tau, big.tau[7:13])
+    padded = sch.pad_schedule(sch.build_schedule(cfgp, 2, 10), 16)
+    assert padded.num_rounds == 16
+    assert not padded.process[10:].any()
+    assert (padded.push_slot[10:] == -1).all() and (padded.pop_slot[10:] == -1).all()
+    assert (padded.delta_push_slot[10:] == -1).all()
+    np.testing.assert_array_equal(padded.delta_mask[10:], 0.0)
+
+
 def test_schedule_accumulation_reduces_updates():
     s1 = sch.build_schedule(_pcfg(2), 2, 40)
     s2 = sch.build_schedule(_pcfg(2, accum=4), 2, 40)
