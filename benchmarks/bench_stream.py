@@ -1,0 +1,186 @@
+"""Incremental streaming benchmark: peak stream residency + take/compute
+overlap.
+
+The materialized elastic path held the whole stream in host *and* device
+memory (one ``jnp.asarray`` over all R rounds) before training a single
+item. The incremental path pulls ``take(segment_rounds)`` per segment
+through a ``BufferedStreamSource`` feeder and prefetches segment k+1 on a
+background thread while segment k runs on device, so:
+
+1. **Peak stream residency** is O(segment_rounds + prefetch window), not
+   O(R). Measured here: the feeder's ``peak_buffered_rounds`` (converted
+   to bytes) against the R·round_bytes the materialized path resided.
+2. **Arrival cost overlaps compute.** With a source that takes real time
+   to produce rounds (here: a generator with a simulated per-round
+   arrival cost), prefetching hides that cost behind the device scan.
+   Measured here: total time blocked on the source, prefetch on vs off.
+3. **Bit-exactness.** The incremental unbounded run must equal the
+   materialized dict run on the same rounds — asserted, and recorded as
+   ``bit_exact`` in the payload.
+
+Writes the machine-readable ``BENCH_stream.json`` at the repo root (CI
+uploads it as an artifact next to ``BENCH_elastic.json``).
+
+    PYTHONPATH=src python -m benchmarks.bench_stream
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.api.streams import IterableStreamSource
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import FerretConfig
+from repro.runtime import ElasticStreamTrainer
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_stream.json"
+)
+
+STREAM_LEN = 192
+SEGMENT_ROUNDS = 16
+ARRIVAL_COST_S = 0.002  # simulated per-round production cost of the feed
+
+
+def _ferret_cfg() -> FerretConfig:
+    return FerretConfig(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+
+
+def _trainer(cfg) -> ElasticStreamTrainer:
+    return ElasticStreamTrainer(cfg, _ferret_cfg(), batch=C.BATCH, seq=C.SEQ)
+
+
+def _live_feed(arrays, arrival_cost_s: float = 0.0) -> IterableStreamSource:
+    """The benchmark stream as an unbounded live feed (length undeclared)."""
+
+    def rounds():
+        R = next(iter(arrays.values())).shape[0]
+        for m in range(R):
+            if arrival_cost_s:
+                time.sleep(arrival_cost_s)
+            yield {k: v[m] for k, v in arrays.items()}
+
+    return IterableStreamSource(rounds())
+
+
+def run(write_json: bool = True) -> dict:
+    cfg = C.bench_model()
+    params = C.init_params(cfg)
+    arrays = C.bench_stream(length=STREAM_LEN)
+    round_bytes = sum(np.asarray(v[0]).nbytes for v in arrays.values())
+
+    # --- materialized reference: dict input, same segmenting ---
+    t0 = time.time()
+    base = _trainer(cfg).run_stream(params, arrays, segment_rounds=SEGMENT_ROUNDS)
+    base_s = time.time() - t0
+
+    # --- incremental unbounded run (instant source): residency + exactness ---
+    t0 = time.time()
+    res = _trainer(cfg).run_stream(
+        params, _live_feed(arrays), segment_rounds=SEGMENT_ROUNDS
+    )
+    incr_s = time.time() - t0
+    bit_exact = bool(
+        np.array_equal(np.asarray(base.losses), np.asarray(res.losses))
+        and np.array_equal(base.online_acc_curve, res.online_acc_curve)
+    )
+    assert bit_exact, "incremental run diverged from the materialized run"
+    assert res.peak_buffered_rounds < STREAM_LEN, "residency must not be O(R)"
+
+    # --- overlap: a slow feed, prefetch on vs off ---
+    slow_on = _trainer(cfg).run_stream(
+        params, _live_feed(arrays, ARRIVAL_COST_S),
+        segment_rounds=SEGMENT_ROUNDS, prefetch=True,
+    )
+    slow_off = _trainer(cfg).run_stream(
+        params, _live_feed(arrays, ARRIVAL_COST_S),
+        segment_rounds=SEGMENT_ROUNDS, prefetch=False,
+    )
+
+    residency_bytes = res.peak_buffered_rounds * round_bytes
+    materialized_bytes = STREAM_LEN * round_bytes
+    arrival_total_s = STREAM_LEN * ARRIVAL_COST_S
+    print(
+        f"stream: {STREAM_LEN} rounds × {round_bytes} B, "
+        f"segment_rounds={SEGMENT_ROUNDS}"
+    )
+    print(
+        f"peak stream residency: {res.peak_buffered_rounds} rounds "
+        f"({residency_bytes} B) vs materialized {STREAM_LEN} rounds "
+        f"({materialized_bytes} B) — {materialized_bytes / residency_bytes:.1f}× less"
+    )
+    print(f"bit-exact with materialized run: {bit_exact}")
+    print(
+        f"slow feed ({1e3 * ARRIVAL_COST_S:.1f} ms/round, "
+        f"{arrival_total_s:.2f}s total arrival): blocked on source "
+        f"{slow_on.stream_wait_s:.2f}s with prefetch vs "
+        f"{slow_off.stream_wait_s:.2f}s without "
+        f"({slow_off.stream_wait_s - slow_on.stream_wait_s:+.2f}s overlapped)"
+    )
+    seg_rows = [
+        {
+            "start": s.start, "end": s.end,
+            "take_s": s.take_s, "run_s": s.run_s,
+            "cache_hit": s.cache_hit,
+        }
+        for s in slow_on.segments
+    ]
+    overlapped = [s for s in slow_on.segments[1:]]  # first take can't overlap
+    if overlapped:
+        mean_take = sum(s.take_s for s in overlapped) / len(overlapped)
+        print(
+            f"per-segment take (prefetch warm): {1e3 * mean_take:.2f} ms "
+            f"vs segment compute "
+            f"{1e3 * sum(s.run_s for s in overlapped) / len(overlapped):.2f} ms"
+        )
+
+    payload = {
+        "bench": "stream",
+        "stream_len": STREAM_LEN,
+        "segment_rounds": SEGMENT_ROUNDS,
+        "round_bytes": round_bytes,
+        "peak_buffered_rounds": res.peak_buffered_rounds,
+        "peak_residency_bytes": residency_bytes,
+        "materialized_bytes": materialized_bytes,
+        "residency_ratio": residency_bytes / materialized_bytes,
+        "bit_exact": bit_exact,
+        "materialized_wall_s": base_s,
+        "incremental_wall_s": incr_s,
+        "arrival_cost_s_per_round": ARRIVAL_COST_S,
+        "arrival_total_s": arrival_total_s,
+        "stream_wait_s": {
+            "prefetch": slow_on.stream_wait_s,
+            "no_prefetch": slow_off.stream_wait_s,
+            "overlapped_s": slow_off.stream_wait_s - slow_on.stream_wait_s,
+        },
+        "segments": seg_rows,
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {BENCH_JSON}")
+    return payload
+
+
+def main() -> None:
+    t0 = time.time()
+    payload = run()
+    dt = (time.time() - t0) * 1e6 / STREAM_LEN
+    print(
+        f"bench_stream,{dt:.0f},"
+        f"residency_ratio={payload['residency_ratio']:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,8 @@ BENCHES = {
     "fig6": "benchmarks.fig6_scaling",
     "roofline": "benchmarks.roofline",
     "elastic": "benchmarks.elastic_switch",
+    "hotpath": "benchmarks.bench_hotpath",
+    "stream": "benchmarks.bench_stream",
 }
 
 

@@ -1,8 +1,12 @@
 """Serving example: batched prefill + decode over any assigned architecture.
 
 Prompts arrive through the same ``repro.api.StreamSource`` abstraction the
-trainers consume — here a drifting Markov token stream taken one round at a
-time, as a live feed would be.
+trainers consume — here a drifting Markov token stream pulled one round at
+a time through a ``BufferedStreamSource``, exactly like the incremental
+elastic trainer consumes a live feed: the next prompt batch is prefetched
+on a background thread while the current one decodes, and each served
+round is ``ack``ed once its generation completes (a crashed round would be
+re-served from the retained buffer — exactly-once serving).
 
     PYTHONPATH=src python examples/serve_stream.py --arch mamba2-780m
     PYTHONPATH=src python examples/serve_stream.py --arch gemma3-12b --gen 32
@@ -15,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import as_stream_source
+from repro.api import BufferedStreamSource, as_stream_source
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as T
 from repro.models.registry import ARCHITECTURES, get_config
@@ -38,13 +42,21 @@ def main():
     prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
     decode = jax.jit(make_decode_step(cfg))
 
-    # prompt feed: any StreamSource works; a generated drifting stream here
-    source = as_stream_source(StreamConfig(
+    # prompt feed: any StreamSource works; a generated drifting stream here,
+    # pulled through the same replay-buffered prefetching feeder the
+    # incremental elastic trainer uses on live feeds
+    feeder = BufferedStreamSource(as_stream_source(StreamConfig(
         kind="drift", modality="tokens", length=args.rounds, batch=args.batch,
         vocab=min(cfg.vocab_size, 256), seq=args.prompt_len,
-    ))
+    )))
 
-    for round_idx, row in enumerate(source):
+    round_idx = 0
+    while True:
+        got = feeder.take(1)
+        if got is None:
+            break
+        feeder.prefetch(1)  # next prompt batch arrives while this one decodes
+        row = {k: v[0] for k, v in got.items()}
         round_rng = jax.random.fold_in(rng, round_idx)
         if cfg.embed_inputs:
             batch = {"tokens": jnp.asarray(row["tokens"]) % cfg.vocab_size}
@@ -77,6 +89,9 @@ def main():
               f"decode {t_dec/args.gen*1e3:.2f} ms/tok "
               f"({args.batch*args.gen/t_dec:.0f} tok/s)")
         print("sample:", [int(t[0]) for t in outs][:12])
+        feeder.ack()  # round served: drop its replay copy
+        round_idx += 1
+    feeder.close()
 
 
 if __name__ == "__main__":

@@ -44,7 +44,12 @@ The three protocols
     drains to the array form the engines scan over. ``ArrayStreamSource``
     wraps finite arrays (what ``make_stream`` returns),
     ``IterableStreamSource`` wraps generators and live/unbounded feeds,
-    and ``as_stream_source`` coerces dicts / ``StreamConfig`` / iterables.
+    ``BufferedStreamSource`` adds replay-buffering + background prefetch
+    (the incremental elastic path's feeder), ``LimitedStreamSource`` caps
+    a feed at ``max_rounds``, and ``as_stream_source`` coerces dicts /
+    ``StreamConfig`` / iterables. The elastic runner consumes a source
+    directly — segment-by-segment ``take()``, no up-front
+    materialization; the other runners materialize.
 
 Everything returns one ``StreamResult`` (repro.api.results) — runner name,
 algorithm name, online accuracy (+curve), per-round losses, admitted
@@ -71,7 +76,9 @@ from repro.api.runners import (
 from repro.api.session import FerretSession
 from repro.api.streams import (
     ArrayStreamSource,
+    BufferedStreamSource,
     IterableStreamSource,
+    LimitedStreamSource,
     StreamSource,
     as_stream_source,
 )
@@ -87,9 +94,11 @@ from repro.ocl.registry import (
 __all__ = [
     "ArrayStreamSource",
     "BaselineRunner",
+    "BufferedStreamSource",
     "ElasticRunner",
     "FerretSession",
     "IterableStreamSource",
+    "LimitedStreamSource",
     "OCLAlgorithm",
     "OCLConfig",
     "PipelinedRunner",

@@ -75,6 +75,11 @@ class Runner:
     teacher logits) before handing the stream over — the sequential paths
     manage replay/teacher state exactly, per step, instead.
 
+    ``consumes_source`` says the runner takes a ``StreamSource`` and pulls
+    rounds incrementally (no up-front materialization; stream preparation
+    happens inside the runner, per pulled chunk) — the session then
+    resolves the stream to a source instead of arrays.
+
     Concrete runners declare their options explicitly — a misspelled
     option to ``session.run`` raises ``TypeError`` instead of being
     silently ignored."""
@@ -82,6 +87,7 @@ class Runner:
     name: str = ""
     aliases: tuple = ()
     prepare_stream: bool = False
+    consumes_source: bool = False
 
     def run(
         self, session, params: Pytree, stream: Dict[str, np.ndarray], **opts
@@ -138,16 +144,22 @@ class PipelinedRunner(Runner):
 @register_runner
 class ElasticRunner(Runner):
     """Segmented run under a (possibly varying) budget: live replan + state
-    remap at every budget change, crash-restore via ``resume=``."""
+    remap at every budget change, crash-restore via ``resume=``.
+
+    Consumes its stream incrementally: the session hands over a
+    ``StreamSource`` (unbounded live feeds included) and the trainer pulls
+    ``take(segment_rounds)`` per segment with prefetch — stream residency
+    stays O(segment), never O(R). Stream preparation (ER mixing, LwF
+    teacher logits) runs inside the trainer, per pulled chunk."""
 
     name = "elastic"
-    prepare_stream = True
+    consumes_source = True
 
     def run(
         self, session, params, stream, *,
         schedule=(), segment_rounds=None, supervisor_cfg=None,
         fault_rounds=(), fault_budget_scale=0.5, resume=None,
-        engine_cache=None,
+        engine_cache=None, prefetch=True,
     ):
         from repro.runtime.elastic_trainer import ElasticStreamTrainer
 
@@ -162,10 +174,13 @@ class ElasticRunner(Runner):
             params, stream, schedule,
             segment_rounds=segment_rounds, supervisor_cfg=supervisor_cfg,
             fault_rounds=fault_rounds, fault_budget_scale=fault_budget_scale,
-            resume=resume,
+            resume=resume, prefetch=prefetch,
         )
+        # a zero-round stream plans nothing: report the resident weights,
+        # not the inf that max(..., default=...) used to produce
         peak_mem = max(
-            (s.result.memory_bytes for s in raw.segments), default=float("inf")
+            (s.result.memory_bytes for s in raw.segments),
+            default=_model_bytes(session.model_cfg),
         )
         return StreamResult(
             runner=self.name,
@@ -183,7 +198,12 @@ class ElasticRunner(Runner):
             num_replans=raw.num_replans,
             engine_cache_hits=raw.engine_cache_hits,
             engine_cache_misses=raw.engine_cache_misses,
-            extras={"raw": raw, "num_faults": raw.num_faults},
+            extras={
+                "raw": raw,
+                "num_faults": raw.num_faults,
+                "peak_buffered_rounds": raw.peak_buffered_rounds,
+                "stream_wait_s": raw.stream_wait_s,
+            },
         )
 
 

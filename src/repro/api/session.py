@@ -24,7 +24,14 @@ import numpy as np
 
 from repro.api.results import StreamResult
 from repro.api.runners import Runner, get_runner
-from repro.api.streams import StreamLike, StreamSource, as_stream_source
+from repro.api.streams import (
+    ArrayStreamSource,
+    BufferedStreamSource,
+    LimitedStreamSource,
+    StreamLike,
+    StreamSource,
+    as_stream_source,
+)
 from repro.core import planner as planner_lib
 from repro.core.compensation import CompensationConfig
 from repro.core.ferret import FerretConfig
@@ -48,13 +55,19 @@ class FerretSession:
     ``repro.api.as_stream_source`` accepts; it may also be given per-run.
 
     ``batch``/``seq`` are inferred from the stream's token arrays when not
-    given. The *session* stream is materialized exactly once and cached,
-    so successive ``run(...)`` calls compare runners on identical data: a
-    bounded stream caches in full (``max_rounds`` slices a prefix), an
-    unbounded stream caches the first run's ``max_rounds`` window (asking
-    for more later raises). To feed fresh rounds (e.g. successive windows
-    of a live source), pass ``stream=`` to ``run`` — explicit streams are
-    materialized per call and never cached.
+    given (for a live source, from its first round). Only *bounded*
+    session streams are cached: they materialize exactly once, so
+    successive ``run(...)`` calls compare runners on identical data
+    (``max_rounds`` slices a prefix). An unbounded session stream is never
+    materialized or cached — each run consumes fresh rounds from the live
+    feed, exactly once across runs; bound a single run with
+    ``max_rounds``. Explicit per-run streams (``run(stream=...)``) are
+    never cached either.
+
+    Runners that declare ``consumes_source = True`` (the elastic runner)
+    receive a ``StreamSource`` and pull rounds segment by segment — no
+    up-front materialization, host/device stream residency stays
+    O(segment); the rest receive materialized arrays.
     """
 
     def __init__(
@@ -127,7 +140,7 @@ class FerretSession:
         self.profile = profile
         self._params = params
         self._cached_stream: Optional[Dict[str, np.ndarray]] = None
-        self._cache_is_full = False
+        self._live_stream: Optional[BufferedStreamSource] = None
 
     # -- lazy pieces -------------------------------------------------------
     @property
@@ -146,7 +159,14 @@ class FerretSession:
     def plan(self) -> planner_lib.Plan:
         """The pipelined plan for this session's budget (Alg. 3 ∘ Alg. 2)."""
         if (self.batch is None or self.seq is None) and self.stream is not None:
-            self._infer_shapes(self._resolve_stream(None, None))
+            if self.stream.length is not None:
+                self._infer_shapes(self._resolve_stream(None, None))
+            else:
+                # live feed: shapes come from a peeked first round — the
+                # buffered view retains it, so no round is lost to planning
+                first = self._session_source.peek(1)
+                if first is not None:
+                    self._infer_shapes(first)
         if self.batch is None or self.seq is None:
             raise ValueError(
                 "plan needs batch/seq — pass them to FerretSession or give "
@@ -177,9 +197,16 @@ class FerretSession:
         """Run the stream through a registered runner. One signature for
         every (runner × algorithm) pair; returns the unified StreamResult."""
         r = get_runner(runner if runner is not None else self.default_runner)
+        run_params = params if params is not None else self.params
+        if getattr(r, "consumes_source", False):
+            # source-consuming runner (elastic): rounds are pulled segment
+            # by segment, never materialized up front; stream preparation
+            # happens inside the trainer, per pulled chunk
+            source = self._resolve_source(stream, max_rounds)
+            self.algorithm.reset()
+            return r.run(self, run_params, source, **runner_opts)
         arrays = self._resolve_stream(stream, max_rounds)
         self._infer_shapes(arrays)
-        run_params = params if params is not None else self.params
         self.algorithm.reset()
         if r.prepare_stream:
             from repro.models import transformer as T
@@ -192,6 +219,29 @@ class FerretSession:
         return r.run(self, run_params, arrays, **runner_opts)
 
     # -- internals ---------------------------------------------------------
+    @property
+    def _session_source(self) -> BufferedStreamSource:
+        """Buffered view over an *unbounded* session stream.
+
+        Created once and shared by every run, so consumption continues
+        across runs (each live round is trained on exactly once) and a
+        shape-inference peek never loses a round.
+        """
+        if self._live_stream is None:
+            self._live_stream = BufferedStreamSource(self.stream)
+        return self._live_stream
+
+    def _bounded_arrays(self, max_rounds: Optional[int]) -> Dict[str, np.ndarray]:
+        """The bounded session stream, materialized exactly once and cached
+        so every run compares runners on identical data; ``max_rounds``
+        slices a prefix."""
+        if self._cached_stream is None:
+            self._cached_stream = self.stream.materialize(None)
+        arrays = self._cached_stream
+        if max_rounds is not None and max_rounds < next(iter(arrays.values())).shape[0]:
+            arrays = {k: v[:max_rounds] for k, v in arrays.items()}
+        return arrays
+
     def _resolve_stream(
         self, stream: Optional[StreamLike], max_rounds: Optional[int]
     ) -> Dict[str, np.ndarray]:
@@ -201,29 +251,46 @@ class FerretSession:
             raise ValueError(
                 "no stream: pass stream= to FerretSession(...) or run(...)"
             )
-        # the session stream is materialized exactly once and cached so
-        # every run compares runners on identical data: bounded streams
-        # cache in full (max_rounds always slices a prefix); unbounded
-        # streams cache the first run's window, and asking for more than
-        # that window later is an error, never a silent truncation
-        if self._cached_stream is None:
-            self._cache_is_full = self.stream.length is not None
-            self._cached_stream = self.stream.materialize(
-                None if self._cache_is_full else max_rounds
-            )
-        arrays = self._cached_stream
-        cached = next(iter(arrays.values())).shape[0]
-        if max_rounds is not None and max_rounds > cached and not self._cache_is_full:
-            # an unbounded source's cache is only the first run's window;
-            # never silently truncate a larger request
+        if self.stream.length is not None:
+            return self._bounded_arrays(max_rounds)
+        # unbounded session stream: never cached — materialize this run's
+        # window (max_rounds required) and let consumption continue from
+        # there on the next run
+        return self._session_source.materialize(max_rounds)
+
+    def _resolve_source(
+        self, stream: Optional[StreamLike], max_rounds: Optional[int]
+    ) -> StreamSource:
+        """Resolve to a ``StreamSource`` for incremental consumption, with
+        shapes inferred from the first round instead of a materialized
+        stream."""
+        if stream is not None:  # explicit per-run stream: never cached
+            src: StreamSource = as_stream_source(stream)
+            if max_rounds is not None:
+                src = LimitedStreamSource(src, max_rounds)
+        elif self.stream is None:
             raise ValueError(
-                f"the session stream cache holds {cached} rounds but "
-                f"max_rounds={max_rounds} was requested — pass stream= to "
-                "run(...) to feed fresh rounds from a live source"
+                "no stream: pass stream= to FerretSession(...) or run(...)"
             )
-        if max_rounds is not None and max_rounds < cached:
-            arrays = {k: v[:max_rounds] for k, v in arrays.items()}
-        return arrays
+        elif self.stream.length is not None:
+            # bounded: a fresh cursor over the cached arrays, so successive
+            # runs (and other runners) see identical data
+            src = ArrayStreamSource(self._bounded_arrays(max_rounds))
+        else:
+            src = self._session_source
+            if max_rounds is not None:
+                src = LimitedStreamSource(src, max_rounds)
+        if self.batch is None or self.seq is None:
+            probe = BufferedStreamSource(src)
+            first = probe.peek(1)
+            if first is None:
+                raise ValueError(
+                    "cannot infer batch/seq from an exhausted stream — "
+                    "pass batch=/seq= to FerretSession"
+                )
+            self._infer_shapes(first)
+            return probe  # retains the peeked round: nothing is lost
+        return src
 
     def _infer_shapes(self, arrays: Dict[str, np.ndarray]) -> None:
         if self.batch is not None and self.seq is not None:

@@ -9,6 +9,13 @@ array, a Python generator, or a live/unbounded feed — from the runners:
   returns), with an exactly-once cursor and ``seek`` for resume.
 - ``IterableStreamSource`` — any iterator/generator of per-round batch
   dicts ``{k: (b, ...)}``; may be unbounded (``length=None``).
+- ``BufferedStreamSource`` — a replay-buffered, prefetching view over any
+  source: the incremental elastic path's feeder. ``take`` retains what it
+  hands out until ``ack()``; ``rewind()`` re-serves the un-acked rounds
+  (exactly-once fault re-runs without ``seek``); ``prefetch(n)`` pulls the
+  next rounds on a background thread while the consumer computes.
+- ``LimitedStreamSource``  — at most ``max_rounds`` rounds of a source
+  (how ``run(max_rounds=...)`` bounds an unbounded feed).
 - ``as_stream_source``     — coercion: sources pass through, dicts wrap,
   ``StreamConfig`` synthesizes, iterables/generators wrap.
 
@@ -18,13 +25,23 @@ drains to one stacked dict — unbounded sources require ``max_rounds``.
 
 from __future__ import annotations
 
-from typing import Dict, Iterable, Iterator, Optional, Union
+import collections
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Union
 
 import numpy as np
 
 from repro.ocl.streams import StreamConfig, make_stream
 
 Batch = Dict[str, np.ndarray]
+
+
+def _concat_chunks(chunks: List[Batch]) -> Batch:
+    """Stack a list of round-stacked chunk dicts into one (no copy for 1)."""
+    if len(chunks) == 1:
+        return chunks[0]
+    return {k: np.concatenate([c[k] for c in chunks], axis=0) for k in chunks[0]}
 
 
 class StreamSource:
@@ -144,8 +161,277 @@ class IterableStreamSource(StreamSource):
                 break
         if not rows:
             return None
+        keys = set(rows[0])
+        for i, r in enumerate(rows[1:], 1):
+            if set(r) != keys:
+                # never silently drop (or KeyError on) fields that drift
+                # between rounds — a live feed producing ragged dicts is a
+                # producer bug, and the stacked batch must stay rectangular
+                raise ValueError(
+                    "inconsistent stream fields at round "
+                    f"{self._consumed + i}: {sorted(r)} != {sorted(keys)}"
+                )
         self._consumed += len(rows)
         return {k: np.stack([np.asarray(r[k]) for r in rows]) for k in rows[0]}
+
+
+class LimitedStreamSource(StreamSource):
+    """At most ``max_rounds`` rounds of ``source``, then exhausted.
+
+    Bounds an unbounded feed for one run (``session.run(max_rounds=...)``).
+    ``length`` reports the cap for an unbounded inner source — the inner
+    feed may still end earlier, in which case this source ends with it.
+    """
+
+    def __init__(self, source: StreamSource, max_rounds: int):
+        if max_rounds < 0:
+            raise ValueError(f"max_rounds must be >= 0, got {max_rounds}")
+        self.source = source
+        self.max_rounds = int(max_rounds)
+        self._given = 0
+
+    @property
+    def length(self) -> Optional[int]:
+        inner = self.source.length
+        return self.max_rounds if inner is None else min(inner, self.max_rounds)
+
+    @property
+    def remaining(self) -> Optional[int]:
+        left = self.max_rounds - self._given
+        inner = self.source.remaining
+        return left if inner is None else min(inner, left)
+
+    def take(self, n: int) -> Optional[Batch]:
+        n = min(n, self.max_rounds - self._given)
+        if n <= 0:
+            return None
+        got = self.source.take(n)
+        if got is not None:
+            self._given += next(iter(got.values())).shape[0]
+        return got
+
+
+class BufferedStreamSource(StreamSource):
+    """Replay-buffered, prefetching view over any ``StreamSource``.
+
+    The feeder of the incremental elastic path
+    (``runtime.elastic_trainer``). Three jobs:
+
+    - **exactly-once under faults**: every round handed out by ``take`` is
+      retained until ``ack()``; ``rewind()`` puts the un-acked rounds back
+      at the front, so a failed segment re-runs on identical data without
+      ``seek`` — unbounded live feeds included.
+    - **prefetch**: ``prefetch(n)`` pulls the next ``n`` rounds from the
+      inner source on a background thread, overlapping stream arrival
+      with the consumer's compute. Prefetched rounds land in the pending
+      buffer; nothing is lost if the consumer stops early.
+    - **one-shot transform**: ``transform`` (e.g. an OCL algorithm's
+      ``prepare_stream``) is applied to each pulled chunk exactly once, in
+      stream order, before retention — a rewound segment replays the
+      *prepared* rows instead of re-running a stateful preparation.
+
+    Peak host residency is ``peak_buffered_rounds`` — O(segment + prefetch
+    window), never O(stream). ``take_wait_s`` accumulates time spent
+    blocked on the inner source (the un-overlapped arrival cost).
+    """
+
+    def __init__(
+        self,
+        source: StreamSource,
+        transform: Optional[Callable[[Batch], Batch]] = None,
+        prefetch: bool = True,
+    ):
+        self.source = source
+        self.transform = transform
+        self.prefetch_enabled = prefetch
+        self._pending: collections.deque = collections.deque()  # transformed
+        self._inflight: List[Batch] = []  # handed out, not yet acked
+        self._exhausted = False
+        self._future = None
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self.peak_buffered_rounds = 0
+        self.take_wait_s = 0.0
+
+    @staticmethod
+    def _nrounds(chunk: Batch) -> int:
+        return next(iter(chunk.values())).shape[0]
+
+    def _pending_rounds(self) -> int:
+        return sum(self._nrounds(c) for c in self._pending)
+
+    def _note_peak(self) -> None:
+        n = self._pending_rounds() + sum(self._nrounds(c) for c in self._inflight)
+        self.peak_buffered_rounds = max(self.peak_buffered_rounds, n)
+
+    def _admit(self, chunk: Optional[Batch]) -> None:
+        """Transform-once and retain a chunk pulled from the inner source."""
+        if chunk is None:
+            self._exhausted = True
+            return
+        if self.transform is not None:
+            chunk = self.transform(chunk)
+        self._pending.append(chunk)
+        self._note_peak()
+
+    def _sync(self) -> None:
+        if self._future is not None:
+            fut, self._future = self._future, None
+            t0 = time.perf_counter()
+            got = fut.result()
+            self.take_wait_s += time.perf_counter() - t0
+            self._admit(got)
+
+    def _pull(self, n: int) -> None:
+        if self._exhausted:
+            return
+        t0 = time.perf_counter()
+        got = self.source.take(n)
+        self.take_wait_s += time.perf_counter() - t0
+        self._admit(got)
+
+    # -- prefetch ----------------------------------------------------------
+    def prefetch(self, n: int) -> None:
+        """Start pulling the next ``n`` rounds on a background thread.
+
+        No-op while a prefetch is already in flight, after exhaustion, or
+        when prefetching is disabled. The inner source is only ever touched
+        by one thread at a time: the worker owns it until the next
+        main-thread operation syncs on the future.
+        """
+        if (
+            not self.prefetch_enabled
+            or n <= 0
+            or self._exhausted
+            or self._future is not None
+        ):
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="stream-prefetch"
+            )
+        self._future = self._pool.submit(self.source.take, n)
+
+    def close(self) -> None:
+        """Drain any in-flight prefetch and stop the worker thread."""
+        self._sync()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    # -- StreamSource protocol --------------------------------------------
+    @property
+    def length(self) -> Optional[int]:
+        return self.source.length
+
+    @property
+    def remaining(self) -> Optional[int]:
+        inner = self.source.remaining
+        if self._exhausted:
+            inner = 0
+        if inner is None:
+            return None
+        return inner + self._pending_rounds()
+
+    def take(self, n: int) -> Optional[Batch]:
+        self._sync()
+        while self._pending_rounds() < n and not self._exhausted:
+            self._pull(n - self._pending_rounds())
+        if not self._pending:
+            return None
+        out: List[Batch] = []
+        got = 0
+        while self._pending and got < n:
+            chunk = self._pending.popleft()
+            r = self._nrounds(chunk)
+            if got + r > n:
+                keep = n - got
+                self._pending.appendleft({k: v[keep:] for k, v in chunk.items()})
+                chunk, r = {k: v[:keep] for k, v in chunk.items()}, keep
+            out.append(chunk)
+            got += r
+        stacked = _concat_chunks(out)
+        self._inflight.append(stacked)
+        self._note_peak()
+        return stacked
+
+    def materialize(self, max_rounds: Optional[int] = None) -> Batch:
+        out = super().materialize(max_rounds)
+        self.ack()
+        return out
+
+    # -- exactly-once bookkeeping -----------------------------------------
+    def ack(self) -> None:
+        """Confirm every handed-out round as consumed (drop the replay copy)."""
+        self._inflight.clear()
+
+    def rewind(self) -> None:
+        """Put all un-acked rounds back at the front for replay."""
+        self._sync()
+        for chunk in reversed(self._inflight):
+            self._pending.appendleft(chunk)
+        self._inflight.clear()
+
+    def try_seek(self, round_idx: int) -> bool:
+        """Seek the inner source (resume); discards all buffered rounds."""
+        inner = self.source
+        ok = (
+            inner.try_seek(round_idx)
+            if isinstance(inner, BufferedStreamSource)
+            else getattr(inner, "seek", None) is not None
+        )
+        if not ok:
+            return False
+        self._sync()
+        self._pending.clear()
+        self._inflight.clear()
+        self._exhausted = False
+        if not isinstance(inner, BufferedStreamSource):
+            inner.seek(round_idx)
+        return True
+
+    # -- buffered-tail access (elastic re-plan refresh) --------------------
+    def peek(self, n: int = 1) -> Optional[Batch]:
+        """The next ``n`` rounds without consuming them (pulled if needed)."""
+        self._sync()
+        while self._pending_rounds() < n and not self._exhausted:
+            self._pull(n - self._pending_rounds())
+        if not self._pending:
+            return None
+        rows: List[Batch] = []
+        got = 0
+        for chunk in self._pending:
+            keep = min(n - got, self._nrounds(chunk))
+            rows.append({k: v[:keep] for k, v in chunk.items()})
+            got += keep
+            if got >= n:
+                break
+        return _concat_chunks(rows)
+
+    def buffered_rows(self) -> Optional[Batch]:
+        """All pending (pulled, not yet handed out) rounds as one stacked
+        dict — the physically-held piece of the stream tail an elastic
+        re-plan may refresh in place. Requires no un-acked rounds."""
+        self._sync()
+        if self._inflight:
+            raise RuntimeError(
+                "buffered_rows with un-acked rounds in flight: ack() or "
+                "rewind() first"
+            )
+        if not self._pending:
+            return None
+        return _concat_chunks(list(self._pending))
+
+    def replace_buffered(self, rows: Batch) -> None:
+        """Swap the pending rounds for refreshed ones (same round count)."""
+        self._sync()
+        have = self._pending_rounds()
+        got = self._nrounds(rows)
+        if got != have:
+            raise ValueError(
+                f"replace_buffered: {got} rounds given, {have} buffered"
+            )
+        self._pending.clear()
+        self._pending.append(rows)
 
 
 StreamLike = Union[StreamSource, Batch, StreamConfig, Iterable[Batch]]

@@ -59,18 +59,50 @@ def parse_budget_schedule(spec: str):
     return events
 
 
+def _incremental_feed(args, cfg):
+    """The training stream as a lazy, unbounded-style feed.
+
+    Chunks of the drifting stream are generated on demand (per-chunk
+    seeds) and handed over one round at a time, so the driver never holds
+    more than one chunk — the elastic runner pulls it segment by segment
+    and peak stream residency stays O(segment_rounds), not O(steps).
+    """
+    from repro.api import IterableStreamSource
+
+    def rounds():
+        chunk_len, produced, chunk_idx = 64, 0, 0
+        while produced < args.steps:
+            n = min(chunk_len, args.steps - produced)
+            arrays = make_stream(StreamConfig(
+                kind=args.stream, modality="tokens", length=n, batch=args.batch,
+                vocab=min(cfg.vocab_size, 64), seq=args.seq,
+                seed=args.seed + chunk_idx,
+            ))
+            for k in ("tokens", "labels"):
+                arrays[k] = arrays[k] % cfg.vocab_size
+            for m in range(n):
+                yield {k: v[m] for k, v in arrays.items()}
+            produced += n
+            chunk_idx += 1
+
+    return IterableStreamSource(rounds())  # length undeclared: live-feed path
+
+
 def run_ferret(args) -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     cfg = dataclasses.replace(cfg, compute_dtype="float32" if args.smoke else cfg.compute_dtype)
-    stream = make_stream(
-        StreamConfig(
-            kind=args.stream, modality="tokens", length=args.steps,
-            batch=args.batch, vocab=min(cfg.vocab_size, 64), seq=args.seq,
+    if args.incremental:
+        stream = _incremental_feed(args, cfg)
+    else:
+        stream = make_stream(
+            StreamConfig(
+                kind=args.stream, modality="tokens", length=args.steps,
+                batch=args.batch, vocab=min(cfg.vocab_size, 64), seq=args.seq,
+            )
         )
-    )
-    # clamp token ids into the model vocab
-    for k in ("tokens", "labels"):
-        stream[k] = stream[k] % cfg.vocab_size
+        # clamp token ids into the model vocab
+        for k in ("tokens", "labels"):
+            stream[k] = stream[k] % cfg.vocab_size
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     budget = math.inf if args.budget_gb <= 0 else args.budget_gb * 2**30
     session = FerretSession(
@@ -85,10 +117,12 @@ def run_ferret(args) -> None:
         f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible}"
     )
     t0 = time.time()
-    if args.budget_schedule:
-        res = session.run(
-            "elastic", schedule=parse_budget_schedule(args.budget_schedule)
+    if args.budget_schedule or args.incremental:
+        schedule = (
+            parse_budget_schedule(args.budget_schedule)
+            if args.budget_schedule else []
         )
+        res = session.run("elastic", schedule=schedule)
         dt = time.time() - t0
         for s in res.segments:
             p = s.result.plan
@@ -100,12 +134,18 @@ def run_ferret(args) -> None:
                   f"N={len(p.config.active_workers())} M={p.memory/2**20:.1f}MiB "
                   f"engine={cache}@{s.rounds_compiled} "
                   f"oacc={s.result.online_acc:.4f}{tag}")
+        resident = ""
+        if args.incremental:
+            resident = (
+                f" peak-stream-residency={res.extras['peak_buffered_rounds']} "
+                f"rounds (of {res.rounds}; no materialization)"
+            )
         print(
             f"oacc={res.online_acc:.4f} admitted={res.admitted_frac:.2f} "
             f"replans={res.num_replans} "
             f"engine-cache misses={res.engine_cache_misses} "
             f"hits={res.engine_cache_hits} "
-            f"({res.rounds} items, exactly once, in {dt:.1f}s)"
+            f"({res.rounds} items, exactly once, in {dt:.1f}s){resident}"
         )
         return
     res = session.run("pipelined")
@@ -181,6 +221,12 @@ def main() -> None:
         "--budget-schedule", default=None,
         help="mid-stream budget changes as 'round:GiB,...' e.g. '0:inf,120:2,180:0.5' "
              "(ferret mode; live replan + state remap, no restart)",
+    )
+    ap.add_argument(
+        "--incremental", action="store_true",
+        help="feed the elastic runner from a lazy round generator instead of "
+             "materializing the stream — segment-by-segment take() with "
+             "prefetch, peak stream residency O(segment), not O(steps)",
     )
     ap.add_argument("--compensation", default="iter_fisher")
     ap.add_argument("--ocl", default="vanilla")

@@ -129,6 +129,17 @@ class OCLAlgorithm:
     def prepare_stream(
         self, stream: Dict[str, np.ndarray], ctx: Optional[PrepareContext] = None
     ) -> Dict[str, np.ndarray]:
+        """Host-side stream augmentation before the pipelined run.
+
+        Called once on the whole materialized stream (pipelined runner) or
+        chunk-wise in stream order, each round exactly once (the
+        incremental elastic path). Implementations must keep the round
+        count unchanged and make chunk-wise application equal whole-stream
+        application: keep per-round work local, or chain stateful work
+        (e.g. a reservoir) through instance state reset in ``reset()``.
+        At an elastic re-plan the trainer re-anchors ``ctx.params`` at the
+        live weights — the incremental counterpart of ``segment_refresh``.
+        """
         return stream
 
     def wrap_staged(self, staged: StagedModel) -> StagedModel:
@@ -184,13 +195,21 @@ class OCLAlgorithm:
 
 
 def _mix_replay(
-    stream: Dict[str, np.ndarray], cfg: OCLConfig, fields=("tokens", "labels")
+    stream: Dict[str, np.ndarray],
+    cfg: OCLConfig,
+    fields=("tokens", "labels"),
+    buf: Optional[ReplayBuffer] = None,
 ) -> Dict[str, np.ndarray]:
     """Host-side ER: extend each round's batch with reservoir samples.
 
-    Online accuracy stays computed on the *new* rows via 'new_mask'."""
+    Online accuracy stays computed on the *new* rows via 'new_mask'.
+    ``buf`` lets a caller chain calls over consecutive stream chunks (the
+    incremental elastic path): because mixing is strictly sequential per
+    round, chunk-wise preparation with one persistent buffer is
+    bit-identical to preparing the whole stream at once."""
     R = next(iter(stream.values())).shape[0]
-    buf = ReplayBuffer(cfg.replay_size, seed=cfg.seed)
+    if buf is None:
+        buf = ReplayBuffer(cfg.replay_size, seed=cfg.seed)
     out: Dict[str, list] = {k: [] for k in fields}
     new_mask = []
     rb = cfg.replay_batch
@@ -234,10 +253,16 @@ class ER(OCLAlgorithm):
 
     def reset(self) -> None:
         self.buffer = ReplayBuffer(self.cfg.replay_size, seed=self.cfg.seed)
+        # stream-prep reservoir: persists across chunk-wise prepare_stream
+        # calls (incremental elastic path) so that preparing the stream one
+        # segment at a time equals preparing it whole; reset() (run start)
+        # starts both paths from the same state
+        self._prep_buf = ReplayBuffer(self.cfg.replay_size, seed=self.cfg.seed)
 
-    # pipeline: replay rows ride inside the per-round batch
+    # pipeline: replay rows ride inside the per-round batch; chunk-wise
+    # calls in stream order chain through the persistent reservoir
     def prepare_stream(self, stream, ctx=None):
-        return _mix_replay(stream, self.cfg)
+        return _mix_replay(stream, self.cfg, buf=self._prep_buf)
 
     # sequential: exact — sample the buffer each step
     def sequential_loss_extra(self, params, batch, extras, loss_fn, forward_fn):
@@ -322,7 +347,14 @@ class LwF(OCLAlgorithm):
         return {"teacher_logits": self._teacher_logits(stream_tail, refreshed)}
 
     def _teacher_logits(self, stream, ctx: PrepareContext) -> np.ndarray:
-        fwd = jax.jit(ctx.forward_fn)
+        # the incremental elastic path calls prepare_stream once per pulled
+        # chunk: cache the jitted teacher forward per forward_fn so segments
+        # reuse one compilation (a re-plan hands over a fresh forward_fn and
+        # recompiles once, like the materialized tail refresh did)
+        if getattr(self, "_fwd_src", None) is not ctx.forward_fn:
+            self._fwd_src = ctx.forward_fn
+            self._fwd_jit = jax.jit(ctx.forward_fn)
+        fwd = self._fwd_jit
         rounds = []
         R = next(iter(stream.values())).shape[0]
         for m in range(R):

@@ -32,15 +32,34 @@ schedule rounds (identity on engine state), so repeated and A→B→A budget
 switches reuse already-compiled scans instead of re-tracing; hit/miss
 counts ride in ``ElasticStreamResult``.
 
-The stream cursor advances only when a segment completes, so a failed or
-re-planned segment is re-run from its first round with unchanged state:
-no item is lost and none is consumed twice.
+Incremental streaming: ``run_stream`` consumes a ``StreamSource`` directly
+(a dict-of-arrays is wrapped in a compat ``ArrayStreamSource``). The
+segment loop pulls ``take(segment_rounds)`` per segment through a
+``BufferedStreamSource`` feeder — peak stream residency is
+O(segment_rounds + prefetch window) on host *and* device, never O(R) —
+and prefetches segment k+1 on a background thread while segment k runs on
+device. Unknown stream length (``length=None``) works end to end: the
+per-structure schedule is grown causally (a longer ``build_schedule`` is
+bit-identical on its prefix — the same continuation ``warmup=`` computes),
+and the run ends when the source does. The algorithm's pipeline-path
+stream preparation (``prepare_stream``: ER replay mixing, LwF teacher
+logits) is applied per pulled chunk, exactly once and in stream order, so
+the incremental run is bit-exact with the materialized whole-stream
+preparation.
+
+The stream cursor advances only when a segment completes: the feeder
+retains every handed-out round until the segment is acked, so a failed or
+re-planned segment replays the *same* rounds from the retained buffer —
+no item is lost and none is consumed twice, without requiring ``seek`` on
+unbounded sources.
 
 A crashed run resumes the same way: ``load_resume_state`` reads the newest
 per-segment checkpoint (state + the partition it was split on + the stream
 cursor from the manifest extras), remaps it onto whatever partition the
 *restart's* budget plans, and ``run_stream(..., resume=...)`` continues
-from the saved cursor — every stream item is still consumed exactly once.
+from the saved cursor — seekable sources are positioned there; a live
+(non-seekable) source must already be positioned at the resume cursor.
+Every stream item is still consumed exactly once.
 
 Note: this trainer is the internal engine behind the ``"elastic"`` runner
 of ``repro.api.FerretSession`` — prefer the session layer for new code.
@@ -58,6 +77,12 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.streams import (
+    BufferedStreamSource,
+    LimitedStreamSource,
+    StreamSource,
+    as_stream_source,
+)
 from repro.checkpointing.checkpoint import (
     latest_checkpoint,
     plan_manifest,
@@ -109,6 +134,7 @@ class SegmentReport:
     result: StreamResult
     cache_hit: bool = False  # compiled scan reused from the engine cache
     rounds_compiled: int = 0  # bucketed scan length this segment ran under
+    take_s: float = 0.0  # wall time blocked pulling this segment's rounds
 
 
 @dataclasses.dataclass
@@ -120,11 +146,13 @@ class ElasticStreamResult:
     admitted_frac: float
     empirical_rate: float  # round-weighted across segments
     final_params: Pytree
-    rounds: int  # stream rounds consumed (== stream length: exactly once)
+    rounds: int  # stream rounds consumed this run (each exactly once)
     num_replans: int
     num_faults: int
     engine_cache_hits: int = 0  # compiled-scan reuses during this run
     engine_cache_misses: int = 0  # fresh compiles during this run
+    peak_buffered_rounds: int = 0  # max stream rounds resident in the feeder
+    stream_wait_s: float = 0.0  # total un-overlapped time blocked on the source
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +346,13 @@ class ElasticStreamTrainer:
             ferret_cfg.compensation,
         )
         self._pending_budget: Optional[float] = None
+        # live-run snapshot read by fatal_handler: initialized here so a
+        # Supervisor wired *before* the first segment (or between runs) can
+        # escalate a device loss into a shrink request instead of tripping
+        # over attributes that only exist once run_stream is underway
+        self._current_budget: float = float(ferret_cfg.budget_bytes)
+        self._current_plan: Optional[planner_lib.Plan] = None
+        self._prep_ctx: Optional[PrepareContext] = None
 
     # -- budget control ---------------------------------------------------
     def request_budget(self, budget_bytes: float) -> None:
@@ -343,7 +378,10 @@ class ElasticStreamTrainer:
         def handler(_exc: BaseException) -> None:
             base = self._current_budget
             if not math.isfinite(base):
-                base = self._current_plan.memory
+                # before the first segment no plan snapshot exists yet —
+                # plan for the configured budget instead of crashing
+                plan = self._current_plan or self.plan_for(base)
+                base = plan.memory
             self.request_budget(base * scale)
 
         return handler
@@ -363,7 +401,7 @@ class ElasticStreamTrainer:
     def run_stream(
         self,
         params: Pytree,
-        stream: Dict[str, np.ndarray],
+        stream: Union[Dict[str, np.ndarray], StreamSource],
         schedule: BudgetSchedule = (),
         *,
         segment_rounds: Optional[int] = None,
@@ -371,34 +409,76 @@ class ElasticStreamTrainer:
         fault_rounds: Sequence[int] = (),
         fault_budget_scale: float = 0.5,
         resume: Optional[ResumeState] = None,
+        prefetch: bool = True,
     ) -> ElasticStreamResult:
-        """Run ``stream`` across the budget ``schedule``.
+        """Run a stream across the budget ``schedule``, segment by segment.
 
+        stream: a ``StreamSource`` (consumed incrementally — rounds are
+        pulled per segment, never materialized up front) or a dict of
+        ``(R, b, ...)`` arrays (compat; wrapped in an ``ArrayStreamSource``
+        and still consumed per segment). Unbounded sources
+        (``length=None``) run until the source ends; cap them upstream
+        (``LimitedStreamSource`` / ``session.run(max_rounds=...)``) for a
+        bounded run. The algorithm's ``prepare_stream`` is applied per
+        pulled chunk, exactly once, in stream order — pass *raw* rounds,
+        not pre-prepared ones.
         schedule: ``BudgetEvent`` list (budget switches at fixed rounds) or a
         callable ``round -> budget_bytes | None`` polled at segment
         boundaries (None keeps the current budget).
         segment_rounds: optional cap on segment length; callable schedules
         and fault injection are only observed at segment boundaries, so this
-        bounds their reaction latency.
+        bounds their reaction latency. Defaults to 16 for callable
+        schedules and for unbounded sources (which need finite segments).
         supervisor_cfg: when given, every segment executes as one supervised
         step — NaN rollback, retries, async checkpoints (plan + cursor in
         the manifest extras), and ``on_fatal`` escalation all active.
         fault_rounds: stream rounds at which a device loss is simulated
         (each fires once); the escalation path shrinks the budget by
-        ``fault_budget_scale`` and re-plans.
+        ``fault_budget_scale`` and re-plans. The failed segment re-runs
+        from the feeder's retained buffer — exactly-once without ``seek``.
         resume: state recovered by ``load_resume_state`` — the run starts
         at ``resume.cursor`` with the checkpointed state remapped from
-        ``resume.bounds`` onto this run's planned partition, so a restart
-        under a *different* budget consumes only the unconsumed rounds.
+        ``resume.bounds`` onto this run's planned partition. Seekable
+        sources (arrays) are positioned at the cursor; a live feed must
+        already be positioned there.
+        prefetch: pull segment k+1 from the source on a background thread
+        while segment k runs on device.
         """
         from repro.models import transformer as T
 
-        R = next(iter(stream.values())).shape[0]
+        source = stream if isinstance(stream, StreamSource) else as_stream_source(stream)
         events, budget_fn = self._normalize_schedule(schedule)
+        pending_faults = sorted(set(int(r) for r in fault_rounds))
+
+        origin = 0
+        if resume is not None:
+            origin = int(resume.cursor)
+            if not _try_seek(source, origin):
+                # non-seekable (live/unbounded) source: it must already be
+                # positioned at the resume cursor; the feeder's retained
+                # buffer still guarantees exactly-once within this run
+                pass
+        remaining = source.remaining
+        R: Optional[int] = None if remaining is None else origin + int(remaining)
         if callable(schedule) and segment_rounds is None:
             segment_rounds = 16
-        stream_j = {k: jnp.asarray(v) for k, v in stream.items()}
-        pending_faults = sorted(set(int(r) for r in fault_rounds))
+        if segment_rounds is None and (R is None or _base_is_unbounded(source)):
+            # a live feed needs finite segments even when a max_rounds cap
+            # makes its length known — one O(R) segment would materialize
+            # the whole window and defeat the O(segment) residency bound
+            segment_rounds = 16
+
+        # per-run preparation context: the algorithm's pipeline-path stream
+        # prep (replay mixing, teacher logits) anchors at the params
+        # entering the stream, exactly like the materialized whole-stream
+        # preparation did; re-plans refresh it (see _refresh_buffered)
+        self._prep_ctx = PrepareContext(
+            params=params,
+            forward_fn=lambda p, b: T.forward(self.model_cfg, p, b)[0],
+        )
+        feeder = BufferedStreamSource(
+            source, transform=self._prepare_rows, prefetch=prefetch
+        )
 
         event_idx = 0
         budget = self.cfg.budget_bytes
@@ -414,9 +494,8 @@ class ElasticStreamTrainer:
         bounds = list(plan.partition.bounds)
         opt_states: Optional[Tuple] = None  # None → engine initializes fresh
         comp_states: Optional[Tuple] = None
-        cursor = 0
+        cursor = origin
         if resume is not None:
-            cursor = int(resume.cursor)
             old_bounds = list(resume.bounds)
             if old_bounds != bounds:
                 state_tuple = (
@@ -452,176 +531,216 @@ class ElasticStreamTrainer:
         cache_hits0 = self.engine_cache.hits
         cache_misses0 = self.engine_cache.misses
 
-        while cursor < R:
-            # ---- budget for this segment: fault request beats the schedule.
-            # Events are consumed exactly once, so a fault-shrunk budget is
-            # not clobbered by re-reading an already-applied event.
-            target = budget
-            if budget_fn is not None:
-                b = budget_fn(cursor)
-                if b is not None:
-                    target = float(b)
-            while event_idx < len(events) and events[event_idx].round <= cursor:
-                target = events[event_idx].budget_bytes
-                event_idx += 1
-            if self._pending_budget is not None:
-                target, self._pending_budget = self._pending_budget, None
-            replanned, replan_s, remap_s = False, 0.0, 0.0
-            if target != budget:
+        try:
+            while R is None or cursor < R:
+                # ---- budget for this segment: fault request beats the
+                # schedule. Events are consumed exactly once, so a
+                # fault-shrunk budget is not clobbered by re-reading an
+                # already-applied event.
+                target = budget
+                if budget_fn is not None:
+                    b = budget_fn(cursor)
+                    if b is not None:
+                        target = float(b)
+                while event_idx < len(events) and events[event_idx].round <= cursor:
+                    target = events[event_idx].budget_bytes
+                    event_idx += 1
+                if self._pending_budget is not None:
+                    target, self._pending_budget = self._pending_budget, None
+                replanned, replan_s, remap_s = False, 0.0, 0.0
+                if target != budget:
+                    t0 = time.perf_counter()
+                    new_plan = self.plan_for(target)
+                    replan_s = time.perf_counter() - t0
+                    new_bounds = list(new_plan.partition.bounds)
+                    t0 = time.perf_counter()
+                    if new_bounds != bounds:
+                        if opt_states is None:
+                            # no segment ran yet: only params exist to remap
+                            stage_params = remap_stage_params(
+                                self.model_cfg, stage_params, new_bounds
+                            )
+                        else:
+                            state_tuple = (stage_params, None, None, opt_states, comp_states)
+                            stage_params, opt_states, comp_states = remap_engine_state(
+                                self.model_cfg, state_tuple, bounds, new_bounds, self.optimizer
+                            )
+                    remap_s = time.perf_counter() - t0
+                    budget, plan, bounds, replanned = target, new_plan, new_bounds, True
+                    self._current_budget = budget
+                    self._current_plan = plan
+                    # segment-boundary hook: the algorithm may refresh
+                    # segment-constant state (e.g. the LwF teacher) — the
+                    # physically buffered rounds in place, future rounds via
+                    # the refreshed preparation context.
+                    self._refresh_buffered(feeder, stage_params)
+
+                # ---- pull this segment's rounds (replayed rows first)
+                want = self._segment_end(cursor, R, events, segment_rounds) - cursor
+                t_take = time.perf_counter()
+                rows = feeder.take(want)
+                take_s = time.perf_counter() - t_take
+                if rows is None:
+                    break  # source exhausted
+                seg_len = next(iter(rows.values())).shape[0]
+                seg_end = cursor + seg_len
+                if seg_len < want:
+                    R = seg_end  # source ended early: true stream end found
+                fault_round = next(
+                    (r for r in pending_faults if cursor <= r < seg_end), None
+                )
+
                 t0 = time.perf_counter()
-                new_plan = self.plan_for(target)
-                replan_s = time.perf_counter() - t0
-                new_bounds = list(new_plan.partition.bounds)
-                t0 = time.perf_counter()
-                if new_bounds != bounds:
-                    if opt_states is None:
-                        # no segment ran yet: only params exist to remap
-                        stage_params = remap_stage_params(
-                            self.model_cfg, stage_params, new_bounds
-                        )
+                P = plan.partition.num_stages
+                same_struct = (
+                    prev_plan is not None
+                    and list(prev_plan.partition.bounds) == bounds
+                    and prev_plan.config == plan.config
+                )
+                if not same_struct:
+                    # structure changed (or first segment): the schedule
+                    # restarts here and ring shapes/contents no longer apply
+                    sched_origin = cursor
+                    full_sched = None
+                    rings = deltas = None
+                need = seg_end - sched_origin
+                if full_sched is None or full_sched.num_rounds < need:
+                    # one causal build per structure; segments slice it. A
+                    # bounded stream builds straight to its end; an unknown
+                    # end grows geometrically — construction is causal, so
+                    # a longer rebuild is bit-identical on its prefix (the
+                    # same continuation ``build_schedule(warmup=)``
+                    # computes), and doubling keeps total host-side
+                    # schedule work O(R) per structure.
+                    if R is not None:
+                        build_len = max(R - sched_origin, need)
                     else:
-                        state_tuple = (stage_params, None, None, opt_states, comp_states)
-                        stage_params, opt_states, comp_states = remap_engine_state(
-                            self.model_cfg, state_tuple, bounds, new_bounds, self.optimizer
-                        )
-                remap_s = time.perf_counter() - t0
-                budget, plan, bounds, replanned = target, new_plan, new_bounds, True
-                self._current_budget = budget
-                self._current_plan = plan
-                # segment-boundary hook: the algorithm may refresh
-                # segment-constant state (e.g. the LwF teacher) for the
-                # not-yet-consumed remainder of the stream.
-                stream_j = self._refresh_stream_tail(stream_j, stage_params, cursor)
-
-            seg_end = self._segment_end(cursor, R, events, segment_rounds)
-            seg_len = seg_end - cursor
-            fault_round = next(
-                (r for r in pending_faults if cursor <= r < seg_end), None
-            )
-
-            t0 = time.perf_counter()
-            P = plan.partition.num_stages
-            same_struct = (
-                prev_plan is not None
-                and list(prev_plan.partition.bounds) == bounds
-                and prev_plan.config == plan.config
-            )
-            if not same_struct:
-                # structure changed (or first segment): the schedule
-                # restarts here and ring shapes/contents no longer apply
-                sched_origin = cursor
-                full_sched = None
-                rings = deltas = None
-            if full_sched is None:
-                # one build out to the stream end; segments slice it
-                full_sched = sched_lib.build_schedule(
-                    plan.config, P, R - sched_origin, phase=sched_origin
-                )
-            bucket_rounds = self.engine_cache.bucket_len(seg_len)
-            engine_sched = sched_lib.pad_schedule(
-                sched_lib.slice_schedule(
-                    full_sched, cursor - sched_origin, seg_end - sched_origin
-                ),
-                bucket_rounds,
-            )
-            struct_key = (self._cache_scope, tuple(bounds))
-            compile_key = struct_key + (
-                engine_sched.ring_size, engine_sched.delta_ring, bucket_rounds,
-                self.batch, self.seq, tuple(sorted(stream_j)),
-            )
-
-            def _factory(bounds=bounds, engine_sched=engine_sched):
-                staged = self.algorithm.wrap_staged(
-                    staged_from_transformer(self.model_cfg, bounds)
-                )
-                return FerretEngine(
-                    staged, engine_sched, self.optimizer,
-                    self.cfg.compensation, lr=self.cfg.lr,
-                )
-
-            engine = self.engine_cache.engine_for(struct_key, _factory)
-            cache_hit = self.engine_cache.seen(compile_key)
-            engine.set_schedule(engine_sched)
-            state = engine.init_state(
-                stage_params, opt_states, comp_states, rings=rings, deltas=deltas
-            )
-            seg_stream = {k: v[cursor:seg_end] for k, v in stream_j.items()}
-            if bucket_rounds > seg_len:
-                # bucket padding: repeat the last item (inert schedule rounds
-                # never admit it, so state and metrics are untouched)
-                seg_stream = {
-                    k: jnp.concatenate(
-                        [v, jnp.repeat(v[-1:], bucket_rounds - seg_len, axis=0)]
+                        built = 0 if full_sched is None else full_sched.num_rounds
+                        build_len = max(need, 2 * built, 64)
+                    full_sched = sched_lib.build_schedule(
+                        plan.config, P, build_len, phase=sched_origin
                     )
-                    for k, v in seg_stream.items()
-                }
-            try:
-                final_state, ys = self._execute_segment(
-                    engine, state, seg_stream, supervisor_cfg,
-                    fault_round, fault_budget_scale, plan, cursor, seg_end, budget,
+                bucket_rounds = self.engine_cache.bucket_len(seg_len)
+                engine_sched = sched_lib.pad_schedule(
+                    sched_lib.slice_schedule(
+                        full_sched, cursor - sched_origin, seg_end - sched_origin
+                    ),
+                    bucket_rounds,
                 )
-                faults_at_cursor = 0
-            except DeviceLossError as e:
-                # Re-run this segment from the same cursor — state is
-                # unchanged, so the stream stays exactly-once. Injected
-                # faults fire once; a genuine device loss may not have gone
-                # through a Supervisor, so make sure a shrink was requested,
-                # and bail out if shrinking stops making progress.
-                if fault_round is not None:
-                    pending_faults.remove(fault_round)
-                num_faults += 1
-                faults_at_cursor += 1
-                if self._pending_budget is None:
-                    self.fatal_handler(fault_budget_scale)(e)
-                if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
-                    raise
-                continue
-            run_s = time.perf_counter() - t0
-            # account the compile/hit only now: a faulted attempt above
-            # never compiled, and must not poison the perf counters
-            self.engine_cache.record(compile_key, cache_hit)
-
-            ys = {k: v[:seg_len] for k, v in ys.items()}  # drop bucket padding
-            stage_params = list(final_state[0])
-            rings = tuple(final_state[1])
-            deltas = tuple(final_state[2])
-            opt_states = tuple(final_state[3])
-            comp_states = tuple(final_state[4])
-            prev_plan = plan
-
-            acc = np.asarray(ys["acc"], dtype=np.float64)
-            admitted = np.asarray(ys["admitted"], dtype=np.float64)
-            result = StreamResult(
-                online_acc=float(acc.mean()),
-                online_acc_curve=np.cumsum(acc) / np.arange(1, seg_len + 1),
-                losses=np.asarray(ys["loss"]),
-                admitted_frac=float(admitted.mean()),
-                memory_bytes=plan.memory,
-                planned_rate=plan.rate,
-                empirical_rate=empirical_adaptation_rate(self.cfg, plan, admitted, seg_len),
-                lam_curve=np.asarray(ys["lam"]),
-                plan=plan,
-            )
-            segments.append(
-                SegmentReport(
-                    start=cursor, end=seg_end, budget_bytes=budget,
-                    replanned=replanned, replan_s=replan_s, remap_s=remap_s,
-                    run_s=run_s, result=result,
-                    cache_hit=cache_hit, rounds_compiled=bucket_rounds,
+                struct_key = (self._cache_scope, tuple(bounds))
+                compile_key = struct_key + (
+                    engine_sched.ring_size, engine_sched.delta_ring, bucket_rounds,
+                    self.batch, self.seq, tuple(sorted(rows)),
                 )
-            )
-            acc_all.append(acc)
-            loss_all.append(np.asarray(ys["loss"]))
-            admitted_all.append(admitted)
-            cursor = seg_end
+
+                def _factory(bounds=bounds, engine_sched=engine_sched):
+                    staged = self.algorithm.wrap_staged(
+                        staged_from_transformer(self.model_cfg, bounds)
+                    )
+                    return FerretEngine(
+                        staged, engine_sched, self.optimizer,
+                        self.cfg.compensation, lr=self.cfg.lr,
+                    )
+
+                engine = self.engine_cache.engine_for(struct_key, _factory)
+                cache_hit = self.engine_cache.seen(compile_key)
+                engine.set_schedule(engine_sched)
+                state = engine.init_state(
+                    stage_params, opt_states, comp_states, rings=rings, deltas=deltas
+                )
+                # only this segment's rounds ever reach the device: stream
+                # residency stays O(segment), not O(R)
+                seg_stream = {k: jnp.asarray(v) for k, v in rows.items()}
+                if bucket_rounds > seg_len:
+                    # bucket padding: repeat the last item (inert schedule
+                    # rounds never admit it, so state/metrics are untouched)
+                    seg_stream = {
+                        k: jnp.concatenate(
+                            [v, jnp.repeat(v[-1:], bucket_rounds - seg_len, axis=0)]
+                        )
+                        for k, v in seg_stream.items()
+                    }
+                # overlap: pull segment k+1 on the host while k computes
+                if R is None or seg_end < R:
+                    nxt = self._segment_end(seg_end, R, events, segment_rounds)
+                    feeder.prefetch(nxt - seg_end)
+                try:
+                    final_state, ys = self._execute_segment(
+                        engine, state, seg_stream, supervisor_cfg,
+                        fault_round, fault_budget_scale, plan, cursor, seg_end, budget,
+                    )
+                    faults_at_cursor = 0
+                except DeviceLossError as e:
+                    # Re-run this segment from the same cursor — state is
+                    # unchanged and the feeder re-serves the retained rows,
+                    # so the stream stays exactly-once. Injected faults fire
+                    # once; a genuine device loss may not have gone through
+                    # a Supervisor, so make sure a shrink was requested, and
+                    # bail out if shrinking stops making progress.
+                    feeder.rewind()
+                    if fault_round is not None:
+                        pending_faults.remove(fault_round)
+                    num_faults += 1
+                    faults_at_cursor += 1
+                    if self._pending_budget is None:
+                        self.fatal_handler(fault_budget_scale)(e)
+                    if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
+                        raise
+                    continue
+                feeder.ack()  # segment complete: retained rows are consumed
+                run_s = time.perf_counter() - t0
+                # account the compile/hit only now: a faulted attempt above
+                # never compiled, and must not poison the perf counters
+                self.engine_cache.record(compile_key, cache_hit)
+
+                ys = {k: v[:seg_len] for k, v in ys.items()}  # drop bucket padding
+                stage_params = list(final_state[0])
+                rings = tuple(final_state[1])
+                deltas = tuple(final_state[2])
+                opt_states = tuple(final_state[3])
+                comp_states = tuple(final_state[4])
+                prev_plan = plan
+
+                acc = np.asarray(ys["acc"], dtype=np.float64)
+                admitted = np.asarray(ys["admitted"], dtype=np.float64)
+                result = StreamResult(
+                    online_acc=float(acc.mean()),
+                    online_acc_curve=np.cumsum(acc) / np.arange(1, seg_len + 1),
+                    losses=np.asarray(ys["loss"]),
+                    admitted_frac=float(admitted.mean()),
+                    memory_bytes=plan.memory,
+                    planned_rate=plan.rate,
+                    empirical_rate=empirical_adaptation_rate(self.cfg, plan, admitted, seg_len),
+                    lam_curve=np.asarray(ys["lam"]),
+                    plan=plan,
+                )
+                segments.append(
+                    SegmentReport(
+                        start=cursor, end=seg_end, budget_bytes=budget,
+                        replanned=replanned, replan_s=replan_s, remap_s=remap_s,
+                        run_s=run_s, result=result,
+                        cache_hit=cache_hit, rounds_compiled=bucket_rounds,
+                        take_s=take_s,
+                    )
+                )
+                acc_all.append(acc)
+                loss_all.append(np.asarray(ys["loss"]))
+                admitted_all.append(admitted)
+                cursor = seg_end
+        finally:
+            feeder.close()
 
         acc_cat = np.concatenate(acc_all) if acc_all else np.zeros(0)
         admitted_cat = np.concatenate(admitted_all) if admitted_all else np.zeros(0)
         final_params = T.merge_stage_params(self.model_cfg, list(stage_params))
         self.final_params = final_params
+        consumed = sum(s.end - s.start for s in segments)
+        # round-weighted over the rounds this run actually consumed — a
+        # resumed run covers R - resume.cursor rounds, and dividing by the
+        # full stream length would dilute the rate by the skipped prefix
         rate = sum(
             s.result.empirical_rate * (s.end - s.start) for s in segments
-        ) / max(R, 1)
+        ) / max(consumed, 1)
         return ElasticStreamResult(
             segments=segments,
             online_acc=float(acc_cat.mean()) if acc_cat.size else 0.0,
@@ -630,11 +749,13 @@ class ElasticStreamTrainer:
             admitted_frac=float(admitted_cat.mean()) if admitted_cat.size else 0.0,
             empirical_rate=rate,
             final_params=final_params,
-            rounds=int(sum(s.end - s.start for s in segments)),
+            rounds=int(consumed),
             num_replans=sum(1 for s in segments if s.replanned),
             num_faults=num_faults,
             engine_cache_hits=self.engine_cache.hits - cache_hits0,
             engine_cache_misses=self.engine_cache.misses - cache_misses0,
+            peak_buffered_rounds=feeder.peak_buffered_rounds,
+            stream_wait_s=feeder.take_wait_s,
         )
 
     # -- crash restore ----------------------------------------------------
@@ -698,31 +819,57 @@ class ElasticStreamTrainer:
         )
 
     # -- internals --------------------------------------------------------
-    def _refresh_stream_tail(
-        self, stream_j: Dict[str, jnp.ndarray], stage_params, cursor: int
-    ) -> Dict[str, jnp.ndarray]:
-        """Give the algorithm its segment-boundary refresh hook."""
+    def _prepare_rows(self, rows: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """The feeder's one-shot transform: per-chunk stream preparation.
+
+        Chunks arrive in stream order and are prepared exactly once, so a
+        stateful preparation (ER's reservoir mixing) chained over chunks is
+        bit-identical to the materialized whole-stream preparation, and a
+        rewound (faulted) segment replays prepared rows without advancing
+        the algorithm's state twice.
+        """
+        algo = self.algorithm
+        if type(algo).prepare_stream is OCLAlgorithm.prepare_stream:
+            return rows  # identity prep: skip the call entirely
+        return algo.prepare_stream(rows, self._prep_ctx)
+
+    def _refresh_buffered(self, feeder: BufferedStreamSource, stage_params) -> None:
+        """The algorithm's segment-boundary refresh hook, incrementally.
+
+        The materialized path refreshed the whole un-consumed tail at a
+        re-plan. Here the tail is split in two: rounds already pulled into
+        the feeder are refreshed in place via ``segment_refresh``; rounds
+        not yet pulled are covered by re-anchoring the preparation context
+        at the live weights, so subsequent ``prepare_stream`` calls produce
+        exactly what a whole-tail refresh would have.
+        """
+        algo = self.algorithm
+        prep_default = type(algo).prepare_stream is OCLAlgorithm.prepare_stream
+        refresh_default = type(algo).segment_refresh is OCLAlgorithm.segment_refresh
+        if prep_default and refresh_default:
+            return  # no prep and no refresh: skip the O(model-size) merge
         from repro.models import transformer as T
 
-        # most algorithms inherit the no-op hook: skip the O(model-size)
-        # merge + tail copy entirely for them
-        if type(self.algorithm).segment_refresh is OCLAlgorithm.segment_refresh:
-            return stream_j
-
         merged = T.merge_stage_params(self.model_cfg, list(stage_params))
-        tail = {k: np.asarray(v[cursor:]) for k, v in stream_j.items()}
         ctx = PrepareContext(
             params=merged,
             forward_fn=lambda p, b: T.forward(self.model_cfg, p, b)[0],
         )
-        updated = self.algorithm.segment_refresh(merged, tail, ctx)
+        self._prep_ctx = ctx
+        if refresh_default:
+            return
+        tail = feeder.buffered_rows()
+        if tail is None:
+            return
+        tail = {k: np.asarray(v) for k, v in tail.items()}
+        updated = algo.segment_refresh(merged, tail, ctx)
         if not updated:
-            return stream_j
-        out = dict(stream_j)
+            return
+        out = dict(tail)
         for k, arr in updated.items():
             if k in out:
-                out[k] = out[k].at[cursor:].set(jnp.asarray(arr))
-        return out
+                out[k] = np.asarray(arr)
+        feeder.replace_buffered(out)
 
     def _execute_segment(
         self,
@@ -794,10 +941,30 @@ class ElasticStreamTrainer:
 
     @staticmethod
     def _segment_end(cursor, R, events, segment_rounds) -> int:
-        end = R
+        """Next segment boundary; ``R is None`` (unknown stream end) relies
+        on ``segment_rounds``, which ``run_stream`` defaults for that case."""
+        end = R if R is not None else cursor + segment_rounds
         for e in events:
             if cursor < e.round < end:
                 end = e.round
         if segment_rounds is not None:
             end = min(end, cursor + segment_rounds)
         return end
+
+
+def _base_is_unbounded(source: StreamSource) -> bool:
+    """Is the underlying feed unbounded (walking cap/buffer wrappers)?"""
+    while isinstance(source, (BufferedStreamSource, LimitedStreamSource)):
+        source = source.source
+    return source.length is None
+
+
+def _try_seek(source: StreamSource, round_idx: int) -> bool:
+    """Position ``source`` at an absolute round if it supports seeking."""
+    if isinstance(source, BufferedStreamSource):
+        return source.try_seek(round_idx)
+    seek = getattr(source, "seek", None)
+    if seek is None:
+        return False
+    seek(round_idx)
+    return True

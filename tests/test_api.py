@@ -302,11 +302,15 @@ def test_session_cache_slices_and_guards(setup):
     np.testing.assert_array_equal(full.losses[:3], part.losses)
     clamped = session.run("sequential", max_rounds=99)  # "at most" semantics
     assert clamped.rounds == 8
-    # unbounded session stream: cache is the first window; more raises
+    # unbounded session stream: never cached — every run consumes fresh
+    # rounds, continuing exactly where the previous run's window stopped
+    base = _stream(length=16)
+    seen = []
+
     def rounds():
-        base = _stream(length=16)
         m = 0
         while True:
+            seen.append(m)
             yield {k: v[m % 16] for k, v in base.items()}
             m += 1
 
@@ -316,10 +320,10 @@ def test_session_cache_slices_and_guards(setup):
     )
     first = live.run("sequential", max_rounds=4)
     assert first.rounds == 4
-    again = live.run("sequential", max_rounds=4)
-    np.testing.assert_array_equal(first.losses, again.losses)  # same window
-    with pytest.raises(ValueError, match="cache holds 4"):
-        live.run("sequential", max_rounds=8)
+    again = live.run("sequential", max_rounds=8)
+    assert again.rounds == 8
+    # exactly-once across runs: rounds 0-3 then 4-11, nothing re-served
+    assert seen == list(range(12))
 
 
 def test_runner_algorithm_grid_is_complete():

@@ -1,0 +1,396 @@
+"""Incremental elastic streaming: segment-by-segment ``take()`` with no
+up-front materialization.
+
+Covers the tentpole guarantees:
+(a) an elastic run fed by an *unbounded* ``IterableStreamSource`` (no
+    ``materialize``, no whole-stream device copy) is bit-identical to the
+    materialized dict run on the same rounds — params, curves, cache
+    counts — with peak stream residency O(segment_rounds), not O(R);
+(b) ``length=None`` + a budget schedule + ``segment_rounds`` compose;
+(c) a fault re-run replays the un-acked segment from the feeder's
+    retained buffer: every source round is produced exactly once;
+(d) per-chunk stream preparation (ER reservoir mixing, LwF teacher
+    logits) chains bit-exactly with the whole-stream preparation;
+plus the satellite regressions: resumed-run ``empirical_rate`` is no
+longer diluted by the skipped prefix, ``fatal_handler`` works before the
+first segment, a zero-round elastic run reports finite memory, and
+``IterableStreamSource`` rejects inconsistent per-round dicts.
+"""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FerretSession
+from repro.api.streams import BufferedStreamSource, IterableStreamSource
+from repro.core import compensation as comp_lib
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import FerretConfig
+from repro.core.profiler import ModelProfile, analytic_profile
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.ocl.algorithms import OCLConfig
+from repro.ocl.streams import StreamConfig, make_stream
+from repro.optim.optimizers import adamw
+from repro.runtime import BudgetEvent, ElasticStreamTrainer, ResumeState
+
+R_STREAM = 40
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True),
+        compute_dtype="float32", num_layers=4, vocab_size=32,
+    )
+
+
+def _ferret_cfg(**over):
+    base = dict(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+    base.update(over)
+    return FerretConfig(**base)
+
+
+def _stream(length=R_STREAM):
+    return make_stream(StreamConfig(
+        kind="drift", modality="tokens", length=length, batch=2, vocab=32, seq=16,
+    ))
+
+
+def _hetero_profile(cfg) -> ModelProfile:
+    base = analytic_profile(cfg, 2, 16)
+    layers = [
+        dataclasses.replace(ly, t_fwd=ly.t_fwd * (1 + i), t_bwd=ly.t_bwd * (1 + i))
+        for i, ly in enumerate(base.layers)
+    ]
+    return ModelProfile(layers=layers, embed_bytes=base.embed_bytes, batch=2, seq=16)
+
+
+def _unbounded(arrays, counter=None):
+    """A live-feed view of ``arrays``: per-round dicts, length undeclared."""
+
+    def rounds():
+        R = next(iter(arrays.values())).shape[0]
+        for m in range(R):
+            if counter is not None:
+                counter.append(m)
+            yield {k: v[m] for k, v in arrays.items()}
+
+    return IterableStreamSource(rounds())  # length=None: unbounded to the trainer
+
+
+# ---------------------------------------------------------------------------
+# (a) incremental unbounded == materialized, residency O(segment)
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_unbounded_matches_materialized(rng):
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    arrays = _stream()
+
+    base = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, arrays, segment_rounds=10
+    )
+    produced = []
+    res = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, _unbounded(arrays, produced), segment_rounds=10
+    )
+
+    assert res.rounds == R_STREAM
+    assert produced == list(range(R_STREAM))  # every round pulled exactly once
+    np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
+    np.testing.assert_array_equal(base.online_acc_curve, res.online_acc_curve)
+    assert [(s.start, s.end) for s in res.segments] == [
+        (s.start, s.end) for s in base.segments
+    ]
+    assert (res.engine_cache_hits, res.engine_cache_misses) == (
+        base.engine_cache_hits, base.engine_cache_misses
+    )
+    for a, b in zip(jax.tree.leaves(base.final_params), jax.tree.leaves(res.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # residency: one segment + the prefetch window, never the whole stream
+    assert 0 < res.peak_buffered_rounds <= 2 * 10
+    assert res.peak_buffered_rounds < R_STREAM
+
+
+def test_capped_live_feed_still_runs_in_finite_segments(rng):
+    """max_rounds makes the length known, but a live feed must never run
+    as one O(R) segment — the residency bound is the whole point."""
+    cfg = _cfg()
+    params = T.init_params(cfg, rng)
+    session = FerretSession(
+        cfg, math.inf, "vanilla", _unbounded(_stream()),
+        batch=2, seq=16, max_workers=3, max_stages=4, params=params,
+        ferret=_ferret_cfg(),
+    )
+    res = session.run("elastic", max_rounds=R_STREAM)
+    assert res.rounds == R_STREAM
+    raw = res.extras["raw"]
+    assert all(s.end - s.start <= 16 for s in raw.segments)
+    assert res.extras["peak_buffered_rounds"] < R_STREAM
+
+
+def test_unbounded_defaults_to_finite_segments(rng):
+    """No segment cap + no known length must still produce finite segments."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    res = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, _unbounded(_stream())
+    )
+    assert res.rounds == R_STREAM
+    assert all(s.end - s.start <= 16 for s in res.segments)
+
+
+# ---------------------------------------------------------------------------
+# (b) length=None + budget schedule + segment_rounds compose
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_length_budget_schedule_and_segment_cap_compose(rng):
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    profile = _hetero_profile(cfg)
+    params = T.init_params(cfg, rng)
+    arrays = _stream()
+    et0 = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    full = et0.plan_for(math.inf)
+    events = [BudgetEvent(18, full.memory * 0.3)]
+
+    base = et0.run_stream(params, arrays, schedule=events, segment_rounds=8)
+    et1 = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    res = et1.run_stream(
+        params, _unbounded(arrays), schedule=events, segment_rounds=8
+    )
+
+    assert res.num_replans == base.num_replans == 1
+    assert [(s.start, s.end) for s in res.segments] == [
+        (s.start, s.end) for s in base.segments
+    ]
+    # the event cut the segment mid-cap on the unknown-length path too
+    assert (18 in [s.start for s in res.segments])
+    np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
+    for a, b in zip(jax.tree.leaves(base.final_params), jax.tree.leaves(res.final_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# (c) fault re-run replays the retained buffer: exactly-once without seek
+# ---------------------------------------------------------------------------
+
+
+def test_fault_rerun_replays_buffer_exactly_once(rng, tmp_path):
+    from repro.runtime import SupervisorCfg
+
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    arrays = _stream()
+    produced = []
+    sup = SupervisorCfg(
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, step_timeout_s=600.0,
+    )
+
+    res = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, _unbounded(arrays, produced),
+        segment_rounds=R_STREAM // 2,
+        supervisor_cfg=sup,
+        fault_rounds=[R_STREAM // 2 + 2],
+        fault_budget_scale=0.3,
+    )
+    assert res.num_faults == 1 and res.num_replans == 1
+    # the generator produced every round exactly once even though the
+    # faulted segment ran twice — the re-run came from the replay buffer
+    assert produced == list(range(R_STREAM))
+    assert res.rounds == R_STREAM
+    assert [(s.start, s.end) for s in res.segments] == [
+        (0, R_STREAM // 2), (R_STREAM // 2, R_STREAM)
+    ]
+    assert np.isfinite(res.losses).all()
+
+
+# ---------------------------------------------------------------------------
+# (d) per-chunk stream preparation chains bit-exactly (ER / LwF)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["er", "lwf"])
+def test_segmented_prep_matches_whole_stream_prep(algo):
+    """pipelined (whole-stream prep in the session) == elastic with ragged
+    segments (per-chunk prep in the trainer) for prep-heavy algorithms."""
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True),
+        compute_dtype="float32", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, d_ff=64, vocab_size=16,
+    )
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    stream = make_stream(StreamConfig(
+        kind="drift", modality="tokens", length=21, batch=2, vocab=16, seq=8,
+    ))
+    session = FerretSession(
+        cfg, math.inf, algo, stream,
+        ocl=OCLConfig(replay_batch=2, replay_size=32, mir_candidates=4),
+        max_workers=2, max_stages=2, params=params,
+    )
+    a = session.run("pipelined")
+    b = session.run("elastic", segment_rounds=8)  # 8 + 8 + 5: ragged
+    assert len(b.segments) == 3
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.online_acc_curve, b.online_acc_curve)
+    for x, y in zip(jax.tree.leaves(a.final_params), jax.tree.leaves(b.final_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_resumed_run_empirical_rate_not_diluted(rng):
+    """A resumed run covers R - cursor rounds; the round-weighted rate must
+    average over the rounds consumed, not the full stream length."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=16)
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+
+    plan = et.plan_for(fc.budget_bytes)
+    bounds = list(plan.partition.bounds)
+    sp = T.split_stage_params(cfg, params, bounds)
+    resume = ResumeState(
+        stage_params=sp,
+        opt_states=tuple(adamw(lr=fc.lr).init(p) for p in sp),
+        comp_states=tuple(comp_lib.init_state(p, fc.compensation) for p in sp),
+        bounds=bounds,
+        cursor=R_STREAM // 2,
+        budget_bytes=fc.budget_bytes,
+    )
+    res = et.run_stream(params, stream, resume=resume)
+    assert res.rounds == R_STREAM // 2
+    # one segment → the run rate IS the segment rate; the old code halved
+    # it by dividing the round-weighted sum by the full stream length
+    assert len(res.segments) == 1
+    seg_rate = res.segments[0].result.empirical_rate
+    assert res.empirical_rate == pytest.approx(seg_rate, rel=1e-12)
+    assert seg_rate > 0
+
+
+def test_fatal_handler_usable_before_first_segment():
+    """A Supervisor wired before run_stream must be able to escalate."""
+    cfg = _cfg()
+    et = ElasticStreamTrainer(cfg, _ferret_cfg(), batch=2, seq=16)
+    handler = et.fatal_handler(0.5)
+    handler(RuntimeError("device loss before any segment"))  # no AttributeError
+    assert et._pending_budget is not None
+    assert math.isfinite(et._pending_budget) and et._pending_budget > 0
+
+
+def test_zero_round_stream_reports_finite_memory(rng):
+    cfg = _cfg()
+    params = T.init_params(cfg, rng)
+    session = FerretSession(
+        cfg, math.inf, "vanilla", IterableStreamSource(iter(())),
+        batch=2, seq=16, max_workers=3, max_stages=4, params=params,
+    )
+    res = session.run("elastic")
+    assert res.rounds == 0
+    assert math.isfinite(res.memory_bytes) and res.memory_bytes > 0
+
+
+def test_iterable_source_rejects_inconsistent_round_dicts():
+    rows = [
+        {"tokens": np.zeros((2, 8), np.int32), "labels": np.zeros((2, 8), np.int32)},
+        {"tokens": np.zeros((2, 8), np.int32)},  # 'labels' vanished
+    ]
+    src = IterableStreamSource(iter(rows))
+    with pytest.raises(ValueError, match="inconsistent stream fields"):
+        src.take(2)
+    extra = [
+        {"tokens": np.zeros((2, 8), np.int32)},
+        {"tokens": np.zeros((2, 8), np.int32), "mask": np.ones((2, 8), np.float32)},
+    ]
+    with pytest.raises(ValueError, match="inconsistent stream fields"):
+        IterableStreamSource(iter(extra)).take(2)
+
+
+# ---------------------------------------------------------------------------
+# BufferedStreamSource semantics
+# ---------------------------------------------------------------------------
+
+
+def _counting_source(R=12, calls=None):
+    def rounds():
+        for m in range(R):
+            if calls is not None:
+                calls.append(m)
+            yield {"x": np.full((2,), m, np.int32)}
+
+    return IterableStreamSource(rounds())
+
+
+def test_buffered_take_ack_rewind_exactly_once():
+    feeder = BufferedStreamSource(_counting_source())
+    first = feeder.take(5)
+    assert first["x"].shape[0] == 5 and int(first["x"][0, 0]) == 0
+    feeder.rewind()  # fault: replay the same rounds
+    replay = feeder.take(5)
+    np.testing.assert_array_equal(first["x"], replay["x"])
+    feeder.ack()
+    nxt = feeder.take(5)
+    assert int(nxt["x"][0, 0]) == 5  # continues after the acked rounds
+    feeder.ack()
+    tail = feeder.take(5)
+    assert tail["x"].shape[0] == 2  # source ends: short final take
+    assert feeder.take(1) is None
+
+
+def test_buffered_transform_applied_exactly_once_in_order():
+    seen = []
+
+    def transform(chunk):
+        seen.extend(chunk["x"][:, 0].tolist())
+        out = dict(chunk)
+        out["doubled"] = chunk["x"] * 2
+        return out
+
+    feeder = BufferedStreamSource(_counting_source(), transform=transform)
+    a = feeder.take(4)
+    feeder.rewind()
+    b = feeder.take(4)  # replayed rows are NOT re-transformed
+    np.testing.assert_array_equal(a["doubled"], b["doubled"])
+    feeder.ack()
+    feeder.take(8)
+    assert seen == list(range(12))  # each round transformed once, in order
+
+
+def test_buffered_prefetch_overlaps_and_loses_nothing():
+    calls = []
+    feeder = BufferedStreamSource(_counting_source(calls=calls))
+    got = feeder.take(4)
+    feeder.ack()
+    feeder.prefetch(4)
+    feeder.close()  # drains the in-flight prefetch into the buffer
+    nxt = feeder.take(8)  # 4 prefetched + 4 pulled now
+    assert int(got["x"][0, 0]) == 0 and int(nxt["x"][0, 0]) == 4
+    assert nxt["x"].shape[0] == 8
+    feeder.ack()
+    assert feeder.take(4) is None  # all 12 rounds consumed
+    assert calls == list(range(12))
+
+
+def test_buffered_peek_does_not_consume():
+    feeder = BufferedStreamSource(_counting_source())
+    first = feeder.peek(2)
+    assert first["x"].shape[0] == 2 and int(first["x"][0, 0]) == 0
+    taken = feeder.take(3)
+    assert int(taken["x"][0, 0]) == 0  # peeked rounds served first
+    assert feeder.peak_buffered_rounds >= 3
