@@ -1,11 +1,13 @@
 """Incremental streaming benchmark: peak stream residency + take/compute
-overlap.
+overlap, for *both* pipeline-path runners.
 
-The materialized elastic path held the whole stream in host *and* device
+The materialized pipeline paths held the whole stream in host *and* device
 memory (one ``jnp.asarray`` over all R rounds) before training a single
-item. The incremental path pulls ``take(segment_rounds)`` per segment
-through a ``BufferedStreamSource`` feeder and prefetches segment k+1 on a
-background thread while segment k runs on device, so:
+item. The incremental paths — the elastic trainer since PR 4, the
+pipelined (single-plan) ``FerretTrainer`` since PR 5 — pull
+``take(segment_rounds)`` per segment through a ``BufferedStreamSource``
+feeder and prefetch segment k+1 on a background thread while segment k
+runs on device, so:
 
 1. **Peak stream residency** is O(segment_rounds + prefetch window), not
    O(R). Measured here: the feeder's ``peak_buffered_rounds`` (converted
@@ -16,7 +18,11 @@ background thread while segment k runs on device, so:
    Measured here: total time blocked on the source, prefetch on vs off.
 3. **Bit-exactness.** The incremental unbounded run must equal the
    materialized dict run on the same rounds — asserted, and recorded as
-   ``bit_exact`` in the payload.
+   ``bit_exact`` (elastic) / ``pipelined.bit_exact`` in the payload.
+4. **MAS exactness.** The pipelined runner applies MAS's Ω-weighted
+   parameter penalty through the ``FerretEngine`` hook (no Vanilla
+   fallback): asserted by divergence from a vanilla run on identical
+   data, recorded as ``pipelined.mas_engine_exact``.
 
 Writes the machine-readable ``BENCH_stream.json`` at the repo root (CI
 uploads it as an artifact next to ``BENCH_elastic.json``).
@@ -36,7 +42,8 @@ import numpy as np
 from benchmarks import common as C
 from repro.api.streams import IterableStreamSource
 from repro.core.compensation import CompensationConfig
-from repro.core.ferret import FerretConfig
+from repro.core.ferret import FerretConfig, FerretTrainer
+from repro.ocl.algorithms import OCLConfig
 from repro.runtime import ElasticStreamTrainer
 
 BENCH_JSON = os.path.join(
@@ -107,6 +114,45 @@ def run(write_json: bool = True) -> dict:
         segment_rounds=SEGMENT_ROUNDS, prefetch=False,
     )
 
+    # --- pipelined (single-plan) runner: same feeder, same guarantees ---
+    def _pipelined(source, **kw):
+        tr = FerretTrainer(cfg, _ferret_cfg(), batch=C.BATCH, seq=C.SEQ)
+        return tr.run_stream(params, source, segment_rounds=SEGMENT_ROUNDS, **kw)
+
+    t0 = time.time()
+    pipe_base = _pipelined(arrays)
+    pipe_base_s = time.time() - t0
+    t0 = time.time()
+    pipe_incr = _pipelined(_live_feed(arrays))
+    pipe_incr_s = time.time() - t0
+    pipe_bit_exact = bool(
+        np.array_equal(np.asarray(pipe_base.losses), np.asarray(pipe_incr.losses))
+        and np.array_equal(pipe_base.online_acc_curve, pipe_incr.online_acc_curve)
+    )
+    assert pipe_bit_exact, "pipelined incremental run diverged from materialized"
+    assert pipe_incr.peak_buffered_rounds < STREAM_LEN, "residency must not be O(R)"
+
+    # MAS exactness on the pipeline path: the engine penalty hook is live
+    # iff the MAS trajectory diverges from vanilla on identical data
+    mas_arrays = {k: v[:24] for k, v in arrays.items()}
+    mas_fc = FerretConfig(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+        ocl=OCLConfig(method="mas", mas_weight=10.0),
+    )
+    mas_res = FerretTrainer(
+        cfg, mas_fc, batch=C.BATCH, seq=C.SEQ, algorithm="mas"
+    ).run_stream(params, mas_arrays, segment_rounds=SEGMENT_ROUNDS)
+    van_res = FerretTrainer(
+        cfg, mas_fc, batch=C.BATCH, seq=C.SEQ, algorithm="vanilla"
+    ).run_stream(params, mas_arrays, segment_rounds=SEGMENT_ROUNDS)
+    mas_engine_exact = bool(
+        not np.allclose(np.asarray(mas_res.losses), np.asarray(van_res.losses))
+        and np.isfinite(np.asarray(mas_res.losses)).all()
+    )
+    assert mas_engine_exact, "MAS ran as Vanilla on the pipeline path"
+
     residency_bytes = res.peak_buffered_rounds * round_bytes
     materialized_bytes = STREAM_LEN * round_bytes
     arrival_total_s = STREAM_LEN * ARRIVAL_COST_S
@@ -115,11 +161,16 @@ def run(write_json: bool = True) -> dict:
         f"segment_rounds={SEGMENT_ROUNDS}"
     )
     print(
-        f"peak stream residency: {res.peak_buffered_rounds} rounds "
+        f"peak stream residency (elastic): {res.peak_buffered_rounds} rounds "
         f"({residency_bytes} B) vs materialized {STREAM_LEN} rounds "
         f"({materialized_bytes} B) — {materialized_bytes / residency_bytes:.1f}× less"
     )
     print(f"bit-exact with materialized run: {bit_exact}")
+    print(
+        f"peak stream residency (pipelined): {pipe_incr.peak_buffered_rounds} "
+        f"rounds ({pipe_incr.peak_buffered_rounds * round_bytes} B) — "
+        f"bit-exact={pipe_bit_exact}, MAS-engine-exact={mas_engine_exact}"
+    )
     print(
         f"slow feed ({1e3 * ARRIVAL_COST_S:.1f} ms/round, "
         f"{arrival_total_s:.2f}s total arrival): blocked on source "
@@ -164,6 +215,18 @@ def run(write_json: bool = True) -> dict:
             "overlapped_s": slow_off.stream_wait_s - slow_on.stream_wait_s,
         },
         "segments": seg_rows,
+        "pipelined": {
+            "peak_buffered_rounds": pipe_incr.peak_buffered_rounds,
+            "peak_residency_bytes": pipe_incr.peak_buffered_rounds * round_bytes,
+            "residency_ratio": (
+                pipe_incr.peak_buffered_rounds * round_bytes / materialized_bytes
+            ),
+            "bit_exact": pipe_bit_exact,
+            "mas_engine_exact": mas_engine_exact,
+            "materialized_wall_s": pipe_base_s,
+            "incremental_wall_s": pipe_incr_s,
+            "stream_wait_s": pipe_incr.stream_wait_s,
+        },
     }
     if write_json:
         with open(BENCH_JSON, "w") as f:

@@ -25,15 +25,18 @@ The three protocols
     replan + state remap, crash-resume), ``sequential`` (exact
     predict-then-train Oracle; alias ``oracle``), ``baseline``
     (admission-policy-gated sequential loop). A runner declares
-    ``prepare_stream = True`` to receive the algorithm's pipeline-path
-    stream preparation (replay mixing, teacher logits).
+    ``consumes_source = True`` to receive a ``StreamSource`` and pull
+    rounds incrementally (both pipeline-path built-ins do; stream
+    preparation then happens inside the trainer, per pulled chunk), or
+    ``prepare_stream = True`` to have the session run the algorithm's
+    whole-stream preparation before handing over materialized arrays.
 
 ``OCLAlgorithm`` (repro.ocl.registry, re-exported here)
     One class per algorithm, registered with ``@register_algorithm`` and
     selected by ``OCLConfig.method`` or by name. An instance owns both
     execution paths: the pipeline path (``prepare_stream`` /
-    ``wrap_staged`` / ``segment_refresh``) consumed by the pipelined and
-    elastic runners, and the exact sequential path
+    ``wrap_staged`` / ``engine_penalty`` / ``segment_refresh``) consumed
+    by the pipelined and elastic runners, and the exact sequential path
     (``sequential_loss_extra`` / ``host_extras`` / ``observe`` /
     ``sequential_refresh``) consumed by the sequential and baseline
     runners. Built-ins: ``vanilla``, ``er``, ``mir``, ``lwf``, ``mas``.
@@ -47,9 +50,10 @@ The three protocols
     ``BufferedStreamSource`` adds replay-buffering + background prefetch
     (the incremental elastic path's feeder), ``LimitedStreamSource`` caps
     a feed at ``max_rounds``, and ``as_stream_source`` coerces dicts /
-    ``StreamConfig`` / iterables. The elastic runner consumes a source
-    directly — segment-by-segment ``take()``, no up-front
-    materialization; the other runners materialize.
+    ``StreamConfig`` / iterables. The pipelined and elastic runners
+    consume a source directly — segment-by-segment ``take()``, no
+    up-front materialization; the sequential/baseline runners
+    materialize.
 
 Everything returns one ``StreamResult`` (repro.api.results) — runner name,
 algorithm name, online accuracy (+curve), per-round losses, admitted

@@ -5,7 +5,8 @@ A ``Runner`` turns (session, params, stream-of-arrays) into the unified
 modes, previously reachable only through divergent entrypoints:
 
 - ``pipelined``  — plan once, run the fine-grained async pipeline engine
-                   (was ``FerretTrainer.run_stream``)
+                   (was ``FerretTrainer.run_stream``); streaming-native:
+                   consumes a ``StreamSource`` segment by segment
 - ``elastic``    — segmented run under a varying budget with live replan +
                    state remap (was ``ElasticStreamTrainer.run_stream``)
 - ``sequential`` — exact per-item predict-then-train loop (the Oracle;
@@ -70,15 +71,18 @@ def get_runner(spec: Union[str, "Runner"]) -> "Runner":
 
 
 class Runner:
-    """Base runner. ``prepare_stream`` says whether the session should run
-    the algorithm's pipeline-path stream preparation (replay mixing, LwF
-    teacher logits) before handing the stream over — the sequential paths
-    manage replay/teacher state exactly, per step, instead.
+    """Base runner. ``consumes_source`` says the runner takes a
+    ``StreamSource`` and pulls rounds incrementally (no up-front
+    materialization; stream preparation happens inside the runner, per
+    pulled chunk) — the session then resolves the stream to a source
+    instead of arrays. Both pipeline-path built-ins (pipelined, elastic)
+    declare it.
 
-    ``consumes_source`` says the runner takes a ``StreamSource`` and pulls
-    rounds incrementally (no up-front materialization; stream preparation
-    happens inside the runner, per pulled chunk) — the session then
-    resolves the stream to a source instead of arrays.
+    ``prepare_stream`` says a *materializing* runner wants the session to
+    run the algorithm's whole-stream preparation (replay mixing, LwF
+    teacher logits) before handing the arrays over — kept for custom
+    runners; the sequential paths manage replay/teacher state exactly,
+    per step, instead.
 
     Concrete runners declare their options explicitly — a misspelled
     option to ``session.run`` raises ``TypeError`` instead of being
@@ -110,12 +114,21 @@ def _model_bytes(model_cfg) -> float:
 
 @register_runner
 class PipelinedRunner(Runner):
-    """Single-plan fine-grained async pipeline (Ferret proper)."""
+    """Single-plan fine-grained async pipeline (Ferret proper).
+
+    Streaming-native: the session hands over a ``StreamSource`` (unbounded
+    live feeds included) and the trainer pulls ``take(segment_rounds)``
+    per segment through a prefetching feeder — peak stream residency stays
+    O(segment), never O(R), and the chunked run is bit-exact with the
+    materialized single-scan run. Stream preparation (ER mixing, LwF
+    teacher logits) runs inside the trainer, per pulled chunk; algorithms
+    with a parameter-space penalty (MAS) apply it through the
+    ``FerretEngine`` hook instead of degrading to Vanilla."""
 
     name = "pipelined"
-    prepare_stream = True
+    consumes_source = True
 
-    def run(self, session, params, stream):
+    def run(self, session, params, stream, *, segment_rounds=None, prefetch=True):
         from repro.core.ferret import FerretTrainer
 
         trainer = FerretTrainer(
@@ -124,20 +137,29 @@ class PipelinedRunner(Runner):
             optimizer=session.optimizer, profile=session.profile,
             algorithm=session.algorithm,
         )
-        raw = trainer.run_stream(params, stream)
+        raw = trainer.run_stream(
+            params, stream, segment_rounds=segment_rounds, prefetch=prefetch
+        )
         return StreamResult(
             runner=self.name,
             algorithm=session.algorithm.name,
             online_acc=raw.online_acc,
             online_acc_curve=raw.online_acc_curve,
             losses=np.asarray(raw.losses),
-            rounds=int(len(raw.losses)),
+            # consumed-rounds accounting, same semantics as the elastic
+            # runner (a capped/early-ending source reports what it ran)
+            rounds=int(raw.rounds),
             admitted_frac=raw.admitted_frac,
             memory_bytes=raw.memory_bytes,
             empirical_rate=raw.empirical_rate,
             final_params=trainer.final_params,
             plan=raw.plan,
-            extras={"raw": raw, "lam_curve": raw.lam_curve},
+            extras={
+                "raw": raw,
+                "lam_curve": raw.lam_curve,
+                "peak_buffered_rounds": raw.peak_buffered_rounds,
+                "stream_wait_s": raw.stream_wait_s,
+            },
         )
 
 
@@ -203,6 +225,12 @@ class ElasticRunner(Runner):
                 "num_faults": raw.num_faults,
                 "peak_buffered_rounds": raw.peak_buffered_rounds,
                 "stream_wait_s": raw.stream_wait_s,
+                # stream-wide λ trajectory, same key the pipelined runner
+                # reports (stitched across segments here)
+                "lam_curve": (
+                    np.concatenate([s.result.lam_curve for s in raw.segments])
+                    if raw.segments else np.zeros(0)
+                ),
             },
         )
 

@@ -64,10 +64,11 @@ class FerretSession:
     ``max_rounds``. Explicit per-run streams (``run(stream=...)``) are
     never cached either.
 
-    Runners that declare ``consumes_source = True`` (the elastic runner)
-    receive a ``StreamSource`` and pull rounds segment by segment — no
-    up-front materialization, host/device stream residency stays
-    O(segment); the rest receive materialized arrays.
+    Runners that declare ``consumes_source = True`` (the pipelined and
+    elastic runners — the whole pipeline path) receive a ``StreamSource``
+    and pull rounds segment by segment — no up-front materialization,
+    host/device stream residency stays O(segment); the sequential/baseline
+    runners receive materialized arrays.
     """
 
     def __init__(
@@ -199,9 +200,9 @@ class FerretSession:
         r = get_runner(runner if runner is not None else self.default_runner)
         run_params = params if params is not None else self.params
         if getattr(r, "consumes_source", False):
-            # source-consuming runner (elastic): rounds are pulled segment
-            # by segment, never materialized up front; stream preparation
-            # happens inside the trainer, per pulled chunk
+            # source-consuming runner (pipelined/elastic): rounds are
+            # pulled segment by segment, never materialized up front;
+            # stream preparation happens inside the trainer, per chunk
             source = self._resolve_source(stream, max_rounds)
             self.algorithm.reset()
             return r.run(self, run_params, source, **runner_opts)
@@ -225,10 +226,14 @@ class FerretSession:
 
         Created once and shared by every run, so consumption continues
         across runs (each live round is trained on exactly once) and a
-        shape-inference peek never loses a round.
+        shape-inference peek never loses a round. Non-retaining: the
+        consuming trainer wraps this view in its own replay-buffered
+        feeder, and a second retention layer here would silently hold
+        every round pulled through it for the whole run — O(R) host
+        memory, exactly what the incremental path exists to avoid.
         """
         if self._live_stream is None:
-            self._live_stream = BufferedStreamSource(self.stream)
+            self._live_stream = BufferedStreamSource(self.stream, retain=False)
         return self._live_stream
 
     def _bounded_arrays(self, max_rounds: Optional[int]) -> Dict[str, np.ndarray]:
@@ -281,7 +286,10 @@ class FerretSession:
             if max_rounds is not None:
                 src = LimitedStreamSource(src, max_rounds)
         if self.batch is None or self.seq is None:
-            probe = BufferedStreamSource(src)
+            # non-retaining: the trainer's own feeder provides replay
+            # retention; a retaining probe would hold every round of the
+            # run (see BufferedStreamSource retain=)
+            probe = BufferedStreamSource(src, retain=False)
             first = probe.peek(1)
             if first is None:
                 raise ValueError(

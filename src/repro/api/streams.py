@@ -10,8 +10,9 @@ array, a Python generator, or a live/unbounded feed — from the runners:
 - ``IterableStreamSource`` — any iterator/generator of per-round batch
   dicts ``{k: (b, ...)}``; may be unbounded (``length=None``).
 - ``BufferedStreamSource`` — a replay-buffered, prefetching view over any
-  source: the incremental elastic path's feeder. ``take`` retains what it
-  hands out until ``ack()``; ``rewind()`` re-serves the un-acked rounds
+  source: the feeder of both incremental pipeline paths (the pipelined
+  trainer and the elastic trainer). ``take`` retains what it hands out
+  until ``ack()``; ``rewind()`` re-serves the un-acked rounds
   (exactly-once fault re-runs without ``seek``); ``prefetch(n)`` pulls the
   next rounds on a background thread while the consumer computes.
 - ``LimitedStreamSource``  — at most ``max_rounds`` rounds of a source
@@ -214,8 +215,8 @@ class LimitedStreamSource(StreamSource):
 class BufferedStreamSource(StreamSource):
     """Replay-buffered, prefetching view over any ``StreamSource``.
 
-    The feeder of the incremental elastic path
-    (``runtime.elastic_trainer``). Three jobs:
+    The feeder of the incremental pipeline paths (``core.ferret``'s
+    pipelined trainer and ``runtime.elastic_trainer``). Three jobs:
 
     - **exactly-once under faults**: every round handed out by ``take`` is
       retained until ``ack()``; ``rewind()`` puts the un-acked rounds back
@@ -233,6 +234,14 @@ class BufferedStreamSource(StreamSource):
     Peak host residency is ``peak_buffered_rounds`` — O(segment + prefetch
     window), never O(stream). ``take_wait_s`` accumulates time spent
     blocked on the inner source (the un-overlapped arrival cost).
+
+    ``retain=False`` turns the replay buffer off: ``take`` hands rounds
+    out without keeping a copy (``rewind`` becomes a no-op). Use it for
+    pass-through views that only exist to ``peek``/share a source — e.g.
+    the session's shape-inference probe and its cross-run live-stream
+    view — where the *consuming* trainer wraps this view in its own
+    retaining feeder; stacking two retaining views would hold every round
+    pulled through the inner one for the whole run, O(R) host memory.
     """
 
     def __init__(
@@ -240,10 +249,12 @@ class BufferedStreamSource(StreamSource):
         source: StreamSource,
         transform: Optional[Callable[[Batch], Batch]] = None,
         prefetch: bool = True,
+        retain: bool = True,
     ):
         self.source = source
         self.transform = transform
         self.prefetch_enabled = prefetch
+        self.retain = retain
         self._pending: collections.deque = collections.deque()  # transformed
         self._inflight: List[Batch] = []  # handed out, not yet acked
         self._exhausted = False
@@ -312,8 +323,25 @@ class BufferedStreamSource(StreamSource):
         self._future = self._pool.submit(self.source.take, n)
 
     def close(self) -> None:
-        """Drain any in-flight prefetch and stop the worker thread."""
-        self._sync()
+        """Drain any in-flight prefetch and stop the worker thread.
+
+        Exception-safe: consumers call this from a ``finally`` while an
+        error may already be unwinding, so a *failed* in-flight take is
+        dropped here instead of raised — during normal operation the
+        background exception re-raises, original traceback attached, at
+        the next main-thread sync point (``take``/``peek``/``ack`` path),
+        which is where the consumer can act on it. Without the shutdown a
+        non-daemon worker blocked on a slow feed outlives the trainer.
+        """
+        fut, self._future = self._future, None
+        if fut is not None:
+            try:
+                self._admit(fut.result())
+            except Exception:
+                # the consumer is already unwinding its own error; but
+                # KeyboardInterrupt/SystemExit must still get through or
+                # a hung feed makes the process unstoppable
+                pass
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -350,7 +378,8 @@ class BufferedStreamSource(StreamSource):
             out.append(chunk)
             got += r
         stacked = _concat_chunks(out)
-        self._inflight.append(stacked)
+        if self.retain:
+            self._inflight.append(stacked)
         self._note_peak()
         return stacked
 

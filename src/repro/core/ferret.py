@@ -8,7 +8,14 @@ This is the user-facing composition of the paper's three contributions:
 
 ``FerretTrainer.run_stream`` executes a stream and reports online accuracy,
 the empirical adaptation rate (Def. 4.1), and the planned memory footprint
-(for agm/tagm comparisons).
+(for agm/tagm comparisons). It consumes a ``StreamSource`` incrementally —
+segment-by-segment ``take()`` through a ``BufferedStreamSource`` feeder
+with background prefetch, per-chunk stream preparation, and O(segment)
+peak stream residency; a dict of stacked arrays is wrapped for compat —
+and is bit-exact with a single materialized scan (each segment runs a
+slice of one causal schedule build with the engine rings carried across
+slices). Algorithms with a parameter-space penalty (MAS) apply it inside
+the engine via the ``penalty_fn`` hook.
 
 Note: ``FerretTrainer`` / ``sequential_oracle_run`` are the internal
 engines behind ``repro.api.FerretSession`` — prefer the session layer for
@@ -32,7 +39,7 @@ from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, analytic_profile
 from repro.models.config import ModelConfig
 from repro.ocl.algorithms import OCLConfig
-from repro.ocl.registry import OCLAlgorithm, get_algorithm
+from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
 from repro.optim.optimizers import Optimizer, adamw
 
 Pytree = Any
@@ -56,6 +63,13 @@ class FerretConfig:
 # ---------------------------------------------------------------------------
 # Engine compile cache (bucketed segment lengths)
 # ---------------------------------------------------------------------------
+
+# The pipelined (single-plan) runner's feeder chunk length: rounds are
+# pulled from the stream source this many at a time, so peak stream
+# residency is O(segment), and every slice pads to this length so the
+# whole run reuses one compiled scan. Override per run with
+# run_stream(segment_rounds=...).
+DEFAULT_PIPELINE_SEGMENT_ROUNDS = 32
 
 # Geometric bucket set for segment lengths: a segment of n rounds runs a
 # compiled scan of the smallest bucket ≥ n (padded with inert schedule
@@ -166,6 +180,60 @@ class StreamResult:
     empirical_rate: float
     lam_curve: np.ndarray
     plan: planner_lib.Plan
+    rounds: int = 0  # stream rounds consumed (exactly once)
+    peak_buffered_rounds: int = 0  # max rounds resident in the feeder
+    stream_wait_s: float = 0.0  # un-overlapped time blocked on the source
+
+
+# ---------------------------------------------------------------------------
+# Engine parameter-penalty adapters (shared by the pipelined and elastic
+# trainers): an OCLAlgorithm's penalty operates on a params-shaped tree,
+# the engine holds per-stage slices — these bridge the two.
+# ---------------------------------------------------------------------------
+
+
+def stage_penalty_fn(algorithm: OCLAlgorithm) -> Optional[Callable]:
+    """``algorithm.engine_penalty`` lifted to the engine's per-stage weight
+    tuple: evaluated on each stage's slice and summed (the hook's contract
+    requires the penalty to decompose over parameter groups)."""
+    fn = algorithm.engine_penalty()
+    if fn is None:
+        return None
+
+    def stage_fn(stages, extras):
+        total = jnp.zeros((), jnp.float32)
+        for sp, ex in zip(stages, extras):
+            total = total + fn(sp, ex)
+        return total
+
+    return stage_fn
+
+
+def split_penalty_extras(
+    algorithm: OCLAlgorithm, model_cfg: ModelConfig, bounds
+) -> Tuple:
+    """The algorithm's current penalty extras, split per pipeline stage.
+
+    Called at every segment boundary — after ``prepare_stream`` /
+    ``segment_refresh`` have run, so the extras reflect this segment's
+    anchor. Raising (instead of silently running without the penalty) is
+    the point: MAS-as-Vanilla was exactly that silent fallback.
+    """
+    from repro.models import transformer as T
+
+    extras = algorithm.engine_penalty_extras()
+    if extras is None:
+        raise RuntimeError(
+            f"algorithm {algorithm.name!r} declares engine_penalty() but "
+            "engine_penalty_extras() is None at segment start — its "
+            "prepare_stream/segment_refresh must populate the penalty "
+            "state before the engine runs"
+        )
+    parts = {
+        k: T.split_stage_params(model_cfg, v, bounds) for k, v in extras.items()
+    }
+    P = len(bounds) - 1
+    return tuple({k: parts[k][j] for k in parts} for j in range(P))
 
 
 def empirical_adaptation_rate(
@@ -220,35 +288,188 @@ class FerretTrainer:
         self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
 
     # ------------------------------------------------------------------
-    def run_stream(self, params: Pytree, stream: Dict[str, np.ndarray]) -> StreamResult:
+    def _prepare_rows(self, rows: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """The feeder's one-shot transform: per-chunk stream preparation.
+
+        Chunks arrive in stream order and are prepared exactly once, so a
+        stateful preparation (ER reservoir mixing) chained over chunks is
+        bit-identical to preparing the whole stream at once (PR 4's
+        incremental-elastic guarantee, now shared by the pipelined path).
+        """
+        algo = self.algorithm
+        if type(algo).prepare_stream is OCLAlgorithm.prepare_stream:
+            return rows  # identity prep: skip the call entirely
+        return algo.prepare_stream(rows, self._prep_ctx)
+
+    def run_stream(
+        self,
+        params: Pytree,
+        stream: Union[Dict[str, np.ndarray], "StreamSource"],
+        *,
+        segment_rounds: Optional[int] = None,
+        prefetch: bool = True,
+    ) -> StreamResult:
+        """Execute a stream through the single-plan pipeline engine.
+
+        stream: a ``StreamSource`` — consumed *incrementally*: rounds are
+        pulled ``take(segment_rounds)`` at a time through a
+        ``BufferedStreamSource`` feeder, so peak stream residency on host
+        and device is O(segment_rounds), never O(R), and unbounded sources
+        (``length=None``) run until the feed ends. A dict of ``(R, b,
+        ...)`` arrays is accepted for compat (wrapped in an
+        ``ArrayStreamSource``; still consumed per segment). Pass *raw*
+        rounds — the algorithm's ``prepare_stream`` (replay mixing,
+        teacher logits) is applied per pulled chunk, exactly once, in
+        stream order, which is bit-identical to whole-stream preparation.
+
+        Each segment runs a slice of one causal schedule build with the
+        engine's gradient-accumulation/Δθ rings carried across slices, so
+        the chunked run is bit-exact with the materialized single-scan
+        run; segments pad to ``segment_rounds`` with inert rounds, so the
+        whole run reuses one compiled scan. ``prefetch`` pulls segment
+        k+1 on a background thread while segment k computes.
+
+        Algorithms that declare an ``engine_penalty`` (MAS) have their
+        parameter-space term applied *inside* the engine — no silent
+        Vanilla fallback remains on the pipeline path.
+        """
+        from repro.api.streams import (
+            BufferedStreamSource,
+            StreamSource,
+            as_stream_source,
+        )
         from repro.models import transformer as T
 
-        R = next(iter(stream.values())).shape[0]
-        P = self.plan.partition.num_stages
-        schedule = sched_lib.build_schedule(self.plan.config, P, R)
-        engine = FerretEngine(
-            self.staged, schedule, self.optimizer, self.cfg.compensation, lr=self.cfg.lr
+        source = (
+            stream if isinstance(stream, StreamSource) else as_stream_source(stream)
         )
+        seg = int(segment_rounds) if segment_rounds else DEFAULT_PIPELINE_SEGMENT_ROUNDS
+        remaining = source.remaining
+        R: Optional[int] = None if remaining is None else int(remaining)
+
+        # stream prep anchors at the weights entering the stream, exactly
+        # like the materialized whole-stream preparation did
+        self._prep_ctx = PrepareContext(
+            params=params,
+            forward_fn=lambda p, b: T.forward(self.model_cfg, p, b)[0],
+        )
+        feeder = BufferedStreamSource(
+            source, transform=self._prepare_rows, prefetch=prefetch
+        )
+
+        P = self.plan.partition.num_stages
+        penalty_fn = stage_penalty_fn(self.algorithm)
+        penalty = None  # split once after the first chunk anchors it
+        engine: Optional[FerretEngine] = None
+        full_sched: Optional[sched_lib.EngineSchedule] = None
         stages = T.split_stage_params(self.model_cfg, params, self.boundaries)
-        state = engine.init_state(stages)
-        stream_j = {k: jnp.asarray(v) for k, v in stream.items()}
-        final_state, ys = engine.run(state, stream_j)
-        self.final_params = T.merge_stage_params(self.model_cfg, list(final_state[0]))
+        rings = deltas = opt_states = comp_states = None
+        cursor = 0
+        acc_all: list = []
+        loss_all: list = []
+        adm_all: list = []
+        lam_all: list = []
+        try:
+            while R is None or cursor < R:
+                want = seg if R is None else min(seg, R - cursor)
+                rows = feeder.take(want)
+                if rows is None:
+                    break  # source exhausted
+                seg_len = next(iter(rows.values())).shape[0]
+                seg_end = cursor + seg_len
+                if seg_len < want:
+                    R = seg_end  # source ended early: true stream end found
+                # one causal build; segments slice it. A bounded stream
+                # builds straight to its end; an unknown end grows
+                # geometrically — construction is causal, so a longer
+                # rebuild is bit-identical on its prefix (the same
+                # continuation ``build_schedule(warmup=)`` computes), and
+                # doubling keeps host-side schedule work O(R) per run.
+                if full_sched is None or full_sched.num_rounds < seg_end:
+                    if R is not None:
+                        build_len = max(R, seg_end)
+                    else:
+                        built = 0 if full_sched is None else full_sched.num_rounds
+                        build_len = max(seg_end, 2 * built, 2 * seg)
+                    full_sched = sched_lib.build_schedule(
+                        self.plan.config, P, build_len
+                    )
+                # pad every slice to the segment length with inert rounds
+                # (identity on engine state): one compiled scan serves the
+                # whole run, ragged tail included
+                engine_sched = sched_lib.pad_schedule(
+                    sched_lib.slice_schedule(full_sched, cursor, seg_end), seg
+                )
+                if engine is None:
+                    engine = FerretEngine(
+                        self.staged, engine_sched, self.optimizer,
+                        self.cfg.compensation, lr=self.cfg.lr,
+                        penalty_fn=penalty_fn,
+                    )
+                else:
+                    engine.set_schedule(engine_sched)
+                state = engine.init_state(
+                    stages, opt_states, comp_states, rings=rings, deltas=deltas
+                )
+                # only this segment's rounds ever reach the device
+                seg_stream = {k: jnp.asarray(v) for k, v in rows.items()}
+                if seg > seg_len:
+                    # padding rounds repeat the last item (never admitted)
+                    seg_stream = {
+                        k: jnp.concatenate(
+                            [v, jnp.repeat(v[-1:], seg - seg_len, axis=0)]
+                        )
+                        for k, v in seg_stream.items()
+                    }
+                # overlap: pull segment k+1 on the host while k computes
+                if R is None or seg_end < R:
+                    feeder.prefetch(seg if R is None else min(seg, R - seg_end))
+                if penalty_fn is not None and penalty is None:
+                    # single-plan run: the anchor never refreshes after the
+                    # first chunk sets it, so split Ω/θ* once and reuse the
+                    # same pytree every segment (stable jit arguments, no
+                    # per-segment re-split/re-upload of 2× model size)
+                    penalty = split_penalty_extras(
+                        self.algorithm, self.model_cfg, self.boundaries
+                    )
+                final_state, ys = engine.run(state, seg_stream, penalty)
+                feeder.ack()  # segment complete: retained rows consumed
+                ys = {k: v[:seg_len] for k, v in ys.items()}  # drop padding
+                stages = list(final_state[0])
+                rings = tuple(final_state[1])
+                deltas = tuple(final_state[2])
+                opt_states = tuple(final_state[3])
+                comp_states = tuple(final_state[4])
+                acc_all.append(np.asarray(ys["acc"], dtype=np.float64))
+                loss_all.append(np.asarray(ys["loss"]))
+                adm_all.append(np.asarray(ys["admitted"], dtype=np.float64))
+                lam_all.append(np.asarray(ys["lam"]))
+                cursor = seg_end
+        finally:
+            feeder.close()
 
-        acc = np.asarray(ys["acc"], dtype=np.float64)
-        admitted = np.asarray(ys["admitted"], dtype=np.float64)
-        empirical_rate = empirical_adaptation_rate(self.cfg, self.plan, admitted, R)
-
+        self.final_params = T.merge_stage_params(self.model_cfg, list(stages))
+        rounds = cursor
+        acc = np.concatenate(acc_all) if acc_all else np.zeros(0)
+        admitted = np.concatenate(adm_all) if adm_all else np.zeros(0)
+        empirical_rate = empirical_adaptation_rate(
+            self.cfg, self.plan, admitted, rounds
+        )
         return StreamResult(
-            online_acc=float(acc.mean()),
-            online_acc_curve=np.cumsum(acc) / np.arange(1, R + 1),
-            losses=np.asarray(ys["loss"]),
-            admitted_frac=float(admitted.mean()),
+            # a zero-round stream reports 0.0, not an empty-mean NaN (the
+            # elastic path's twin guard landed in PR 4)
+            online_acc=float(acc.mean()) if acc.size else 0.0,
+            online_acc_curve=np.cumsum(acc) / np.arange(1, acc.size + 1),
+            losses=np.concatenate(loss_all) if loss_all else np.zeros(0),
+            admitted_frac=float(admitted.mean()) if admitted.size else 0.0,
             memory_bytes=self.plan.memory,
             planned_rate=self.plan.rate,
             empirical_rate=empirical_rate,
-            lam_curve=np.asarray(ys["lam"]),
+            lam_curve=np.concatenate(lam_all) if lam_all else np.zeros(0),
             plan=self.plan,
+            rounds=rounds,
+            peak_buffered_rounds=feeder.peak_buffered_rounds,
+            stream_wait_s=feeder.take_wait_s,
         )
 
     # ------------------------------------------------------------------

@@ -21,7 +21,7 @@ engine with ``sync_period=P`` schedules (fresh gradients, delayed updates).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,16 @@ class FerretEngine:
     re-tracing. The *content* of the schedule is scan data (xs), not a
     trace constant; only its shapes (rounds, stages, ring depths) key the
     compile cache.
+
+    ``penalty_fn(stage_params, penalty) -> scalar`` adds a
+    *parameter-space* loss term (MAS/EWC-style pulls, weight decay against
+    a reference) that the staged ``(logits, batch)`` loss cannot express:
+    it sees the per-stage weight tuple directly and its gradient flows into
+    the same backward as the data loss. ``penalty`` is the segment-constant
+    state the term needs (e.g. Ω and the reference weights, split per
+    stage) — it is passed through the jitted scan as an *argument*, not a
+    closure constant, so refreshing it at a segment boundary reuses the
+    compiled executable as long as shapes hold.
     """
 
     def __init__(
@@ -100,12 +110,14 @@ class FerretEngine:
         optimizer: Optimizer,
         comp_cfg: comp_lib.CompensationConfig,
         lr: float = 1e-3,
+        penalty_fn: Optional[Callable] = None,
     ):
         self.staged = staged
         self.sched = schedule
         self.opt = optimizer
         self.comp_cfg = comp_cfg
         self.lr = lr
+        self.penalty_fn = penalty_fn
         self._compiled = jax.jit(self._scan)
 
     def set_schedule(self, schedule: EngineSchedule) -> None:
@@ -176,7 +188,7 @@ class FerretEngine:
         }
 
     # -- one round ----------------------------------------------------------
-    def _round(self, carry, xs):
+    def _round(self, carry, xs, penalty):
         """One scan step. Bucket-padding rounds (``compute=False``, only
         ever emitted by ``pad_schedule``) skip the forward/backward through
         the cond — the carry passes through untouched and the per-round
@@ -190,9 +202,12 @@ class FerretEngine:
             }
             return carry, ys
 
-        return jax.lax.cond(xs["compute"], self._live_round, skip, carry, xs)
+        def live(carry, xs):
+            return self._live_round(carry, xs, penalty)
 
-    def _live_round(self, carry, xs):
+        return jax.lax.cond(xs["compute"], live, skip, carry, xs)
+
+    def _live_round(self, carry, xs, penalty):
         stages, rings, deltas, opts, comps = carry
         batch = xs["batch"]
         P = self.staged.num_stages
@@ -203,7 +218,10 @@ class FerretEngine:
             x = None
             for j in range(P):
                 x = self.staged.forward_stage(j, stages_t[j], x, batch)
-            return self.staged.loss(x, batch)
+            loss, metrics = self.staged.loss(x, batch)
+            if self.penalty_fn is not None:
+                loss = loss + self.penalty_fn(stages_t, penalty)
+            return loss, metrics
 
         (loss, metrics), grads = jax.value_and_grad(full_loss, has_aux=True)(stages)
         pmask = xs["process"].astype(f32)
@@ -275,16 +293,29 @@ class FerretEngine:
         return carry, ys
 
     # -- run ------------------------------------------------------------
-    def _scan(self, state, xs):
-        return jax.lax.scan(self._round, state, xs)
+    def _scan(self, state, xs, penalty):
+        def round_fn(carry, x):
+            return self._round(carry, x, penalty)
 
-    def run(self, state, stream: Dict[str, jnp.ndarray]):
+        return jax.lax.scan(round_fn, state, xs)
+
+    def run(self, state, stream: Dict[str, jnp.ndarray], penalty: Pytree = None):
         """stream: dict of arrays stacked over rounds, e.g. tokens (R, b, s).
 
+        ``penalty`` is the extras pytree for ``penalty_fn`` (required iff
+        the engine was built with one); it rides through the jitted scan as
+        an argument, so a same-shape refresh never retraces.
+
         Returns (final_state, ys dict of per-round metrics)."""
+        if (self.penalty_fn is not None) and penalty is None:
+            raise ValueError(
+                "engine built with penalty_fn but run() got penalty=None — "
+                "the algorithm must populate its penalty extras before the "
+                "segment runs (see OCLAlgorithm.engine_penalty_extras)"
+            )
         xs = dict(self._schedule_xs())
         xs["batch"] = stream
-        return self._compiled(state, xs)
+        return self._compiled(state, xs, penalty)
 
 
 # ---------------------------------------------------------------------------

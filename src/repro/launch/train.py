@@ -117,12 +117,8 @@ def run_ferret(args) -> None:
         f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible}"
     )
     t0 = time.time()
-    if args.budget_schedule or args.incremental:
-        schedule = (
-            parse_budget_schedule(args.budget_schedule)
-            if args.budget_schedule else []
-        )
-        res = session.run("elastic", schedule=schedule)
+    if args.budget_schedule:
+        res = session.run("elastic", schedule=parse_budget_schedule(args.budget_schedule))
         dt = time.time() - t0
         for s in res.segments:
             p = s.result.plan
@@ -148,13 +144,22 @@ def run_ferret(args) -> None:
             f"({res.rounds} items, exactly once, in {dt:.1f}s){resident}"
         )
         return
+    # the pipelined runner is streaming-native: a lazy --incremental feed
+    # is pulled segment by segment with prefetch, same as a materialized
+    # stream — only the residency report differs
     res = session.run("pipelined")
     dt = time.time() - t0
     lam = res.extras["lam_curve"]
+    resident = ""
+    if args.incremental:
+        resident = (
+            f" peak-stream-residency={res.extras['peak_buffered_rounds']} "
+            f"rounds (of {res.rounds}; no materialization)"
+        )
     print(
         f"oacc={res.online_acc:.4f} admitted={res.admitted_frac:.2f} "
         f"loss {res.losses[0]:.3f}→{res.losses[-1]:.3f} λ={lam[-1]:.4f} "
-        f"({args.steps} items in {dt:.1f}s)"
+        f"({res.rounds} items in {dt:.1f}s){resident}"
     )
 
 
@@ -224,9 +229,11 @@ def main() -> None:
     )
     ap.add_argument(
         "--incremental", action="store_true",
-        help="feed the elastic runner from a lazy round generator instead of "
+        help="feed the runner from a lazy round generator instead of "
              "materializing the stream — segment-by-segment take() with "
-             "prefetch, peak stream residency O(segment), not O(steps)",
+             "prefetch, peak stream residency O(segment), not O(steps) "
+             "(works on the default pipelined runner and, with "
+             "--budget-schedule, the elastic runner)",
     )
     ap.add_argument("--compensation", default="iter_fisher")
     ap.add_argument("--ocl", default="vanilla")

@@ -8,11 +8,20 @@ object instead of each re-implementing a string dispatch:
 
 pipeline path (one jit'd scan over the stream):
     ``prepare_stream``   host-side stream augmentation before the run
-                         (ER/MIR replay mixing, LwF teacher logits)
+                         (ER/MIR replay mixing, LwF teacher logits);
+                         applied per pulled chunk, in stream order, on the
+                         streaming-native trainers
     ``wrap_staged``      loss wrapper over a ``StagedModel``
+    ``engine_penalty``   parameter-space loss term for the pipeline engine
+                         (MAS Ω-pull) — the staged loss sees only
+                         ``(logits, batch)``, this hook sees the weights
+    ``engine_penalty_extras``  the segment-constant state that term needs
+                         (Ω, reference weights), re-read at every segment
+                         boundary and passed through the jitted scan as an
+                         argument, so a refresh never retraces
     ``segment_refresh``  hook at elastic segment boundaries — refresh
-                         segment-constant state (e.g. the LwF teacher) for
-                         the remaining stream
+                         segment-constant state (e.g. the LwF teacher, the
+                         MAS Ω anchor) for the remaining stream
 
 sequential path (exact per-item predict-then-train loop):
     ``sequential_loss_extra``  extra loss terms (jit-traceable; state rides
@@ -36,6 +45,7 @@ Register your own from anywhere:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable, ClassVar, Dict, List, Optional, Type, Union
 
@@ -144,6 +154,32 @@ class OCLAlgorithm:
 
     def wrap_staged(self, staged: StagedModel) -> StagedModel:
         return staged
+
+    def engine_penalty(self) -> Optional[Callable]:
+        """Parameter-space penalty for the pipeline engine, or ``None``.
+
+        The staged loss sees only ``(logits, batch)``; this hook is how an
+        algorithm adds a loss term over the *weights* (MAS/EWC pulls).
+        Returns ``penalty_fn(params, extras) -> scalar`` where ``params``
+        is a params-shaped pytree and ``extras`` the matching slice of
+        ``engine_penalty_extras``. The engine evaluates it per pipeline
+        stage on that stage's slice of the weights and sums, so the
+        penalty must decompose as a sum over parameter groups — leaf-wise
+        penalties (MAS, EWC, L2-to-reference) all do.
+        """
+        return None
+
+    def engine_penalty_extras(self) -> Optional[Dict[str, Pytree]]:
+        """Current state for ``engine_penalty``: a flat dict of
+        params-shaped pytrees (e.g. ``{"omega": Ω, "ref": θ*}``).
+
+        Trainers re-read this at every segment boundary (after
+        ``prepare_stream`` / ``segment_refresh`` have run), split each
+        entry on the live partition, and pass it through the jitted scan
+        as an argument — a same-shape refresh reuses the compiled engine.
+        Must be non-``None`` whenever ``engine_penalty`` is.
+        """
+        return None
 
     def segment_refresh(
         self,
@@ -387,18 +423,77 @@ class LwF(OCLAlgorithm):
 class MAS(OCLAlgorithm):
     """Memory Aware Synapses: Ω-weighted quadratic pull to a reference.
 
-    Exact on the sequential path. The staged pipeline loss sees only
-    (logits, batch) — a parameter-space penalty cannot ride there — so the
-    pipeline path runs as Vanilla (documented; Table 2's exact MAS numbers
-    come from the sequential runner).
+    Exact on *both* paths. The sequential loop applies the penalty through
+    ``sequential_loss_extra``; the pipeline path rides the
+    ``FerretEngine`` parameter-penalty hook (``engine_penalty``): Ω and
+    the reference weights are anchored at stream entry from the first
+    arriving round — the same anchor the sequential path uses — and
+    refreshed at elastic re-plan boundaries from the most recent rounds
+    (``segment_refresh``, the granularity at which the engine re-jits).
     """
 
     name = "mas"
 
+    # fields an importance/teacher forward can consume (mirrors LwF)
+    _FWD_FIELDS = ("tokens", "labels", "x", "mask")
+
     def reset(self) -> None:
         self.omega: Optional[Pytree] = None
         self.ref: Optional[Pytree] = None
+        # recent rounds seen by the pipeline-path stream prep: the Ω
+        # refresh sample at a re-plan boundary (the incremental trainers
+        # never retain the consumed stream, so the algorithm keeps the
+        # window itself — the twin of the sequential loop's `recent` deque)
+        self._recent: collections.deque = collections.deque(maxlen=4)
 
+    # -- pipeline path: Ω/ref maintained host-side, applied in-engine ------
+    def prepare_stream(self, stream, ctx=None):
+        R = next(iter(stream.values())).shape[0]
+        # only the last maxlen rounds survive the deque — skip building
+        # per-round dicts the window would immediately evict
+        for m in range(max(0, R - self._recent.maxlen), R):
+            self._recent.append({
+                k: np.asarray(v[m]) for k, v in stream.items()
+                if k in self._FWD_FIELDS
+            })
+        if self.omega is None and ctx is not None and R > 0:
+            # anchor at stream entry: importance from the first round,
+            # reference at the weights entering the stream — exactly the
+            # sequential path's first-step anchor
+            first = {
+                k: jnp.asarray(stream[k][0]) for k in stream
+                if k in self._FWD_FIELDS
+            }
+            self.omega = mas_importance(ctx.forward_fn, ctx.params, [first])
+            self.ref = ctx.params
+        return stream
+
+    def engine_penalty(self) -> Optional[Callable]:
+        weight = self.cfg.mas_weight
+
+        def fn(params, extras):
+            return weight * mas_penalty(params, extras["ref"], extras["omega"])
+
+        return fn
+
+    def engine_penalty_extras(self) -> Optional[Dict[str, Pytree]]:
+        if self.omega is None:
+            return None
+        return {"omega": self.omega, "ref": self.ref}
+
+    def segment_refresh(self, params, stream_tail, ctx=None):
+        """Re-anchor Ω/ref at a re-plan boundary from the live weights and
+        the most recent rounds (nothing in the stream itself changes)."""
+        if ctx is None or not self._recent:
+            return None
+        batches = [
+            {k: jnp.asarray(v) for k, v in b.items()} for b in self._recent
+        ]
+        self.omega = mas_importance(ctx.forward_fn, params, batches)
+        self.ref = params
+        return None
+
+    # -- sequential path: exact, unchanged ---------------------------------
     def sequential_loss_extra(self, params, batch, extras, loss_fn, forward_fn):
         if extras.get("mas_omega") is None:
             return jnp.zeros((), jnp.float32)

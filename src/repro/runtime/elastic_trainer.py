@@ -97,6 +97,8 @@ from repro.core.ferret import (
     IdentityKey,
     StreamResult,
     empirical_adaptation_rate,
+    split_penalty_extras,
+    stage_penalty_fn,
 )
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, analytic_profile
@@ -346,6 +348,12 @@ class ElasticStreamTrainer:
             ferret_cfg.compensation,
         )
         self._pending_budget: Optional[float] = None
+        # memo for the per-stage split of the algorithm's penalty extras:
+        # (bounds, extras dict, split) — recomputed only when the anchor
+        # objects or the partition change, so steady-state segments skip
+        # the O(model) re-split/re-upload (the entry pins the keyed
+        # objects, so identity comparison cannot alias a recycled id)
+        self._penalty_split: Optional[Tuple] = None
         # live-run snapshot read by fatal_handler: initialized here so a
         # Supervisor wired *before* the first segment (or between runs) can
         # escalate a device loss into a shrink request instead of tripping
@@ -640,6 +648,7 @@ class ElasticStreamTrainer:
                     return FerretEngine(
                         staged, engine_sched, self.optimizer,
                         self.cfg.compensation, lr=self.cfg.lr,
+                        penalty_fn=stage_penalty_fn(self.algorithm),
                     )
 
                 engine = self.engine_cache.engine_for(struct_key, _factory)
@@ -664,10 +673,18 @@ class ElasticStreamTrainer:
                 if R is None or seg_end < R:
                     nxt = self._segment_end(seg_end, R, events, segment_rounds)
                     feeder.prefetch(nxt - seg_end)
+                # segment-constant penalty extras (MAS Ω/ref): re-read at
+                # every boundary so a re-plan refresh is picked up; rides
+                # the compiled scan as an argument, never a retrace
+                penalty = (
+                    self._split_penalty_cached(bounds)
+                    if engine.penalty_fn is not None else None
+                )
                 try:
                     final_state, ys = self._execute_segment(
                         engine, state, seg_stream, supervisor_cfg,
                         fault_round, fault_budget_scale, plan, cursor, seg_end, budget,
+                        penalty,
                     )
                     faults_at_cursor = 0
                 except DeviceLossError as e:
@@ -819,6 +836,28 @@ class ElasticStreamTrainer:
         )
 
     # -- internals --------------------------------------------------------
+    def _split_penalty_cached(self, bounds) -> Tuple:
+        """Per-stage split of the algorithm's penalty extras, memoized.
+
+        The anchor objects (MAS Ω/ref) only change at a re-plan refresh,
+        but segments are frequent — reuse the split (and its stable jit
+        argument identity) until the extras or the partition actually
+        change, instead of re-splitting two model-sized trees per segment.
+        """
+        extras = self.algorithm.engine_penalty_extras()
+        cached = self._penalty_split
+        if cached is not None and extras is not None:
+            c_bounds, c_extras, c_split = cached
+            if (
+                c_bounds == tuple(bounds)
+                and c_extras.keys() == extras.keys()
+                and all(c_extras[k] is extras[k] for k in extras)
+            ):
+                return c_split
+        split = split_penalty_extras(self.algorithm, self.model_cfg, bounds)
+        self._penalty_split = (tuple(bounds), extras, split)
+        return split
+
     def _prepare_rows(self, rows: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         """The feeder's one-shot transform: per-chunk stream preparation.
 
@@ -858,12 +897,15 @@ class ElasticStreamTrainer:
         self._prep_ctx = ctx
         if refresh_default:
             return
+        # the refresh hook fires even when nothing is physically buffered
+        # (state-only refreshes like the MAS Ω re-anchor have no rows to
+        # rewrite); returned field updates only apply to buffered rows
         tail = feeder.buffered_rows()
-        if tail is None:
-            return
-        tail = {k: np.asarray(v) for k, v in tail.items()}
+        tail = (
+            {} if tail is None else {k: np.asarray(v) for k, v in tail.items()}
+        )
         updated = algo.segment_refresh(merged, tail, ctx)
-        if not updated:
+        if not updated or not tail:
             return
         out = dict(tail)
         for k, arr in updated.items():
@@ -883,6 +925,7 @@ class ElasticStreamTrainer:
         cursor: int,
         seg_end: int,
         budget: float,
+        penalty=None,
     ):
         """One segment, either direct or as a single supervised step."""
         out: Dict[str, Any] = {}
@@ -893,7 +936,7 @@ class ElasticStreamTrainer:
                 raise DeviceLossError(
                     f"simulated device loss at stream round {fault_round}"
                 )
-            new_st, ys = engine.run(st, batch)
+            new_st, ys = engine.run(st, batch, penalty)
             out["ys"] = ys
             # monitored loss over the real rounds only — bucket-padding
             # rows are zeros and must not dilute NaN checks / thresholds
@@ -904,7 +947,7 @@ class ElasticStreamTrainer:
                 raise DeviceLossError(
                     f"simulated device loss at stream round {fault_round}"
                 )
-            return engine.run(state, seg_stream)
+            return engine.run(state, seg_stream, penalty)
 
         # Per-segment checkpoint dir: state shapes are partition-dependent,
         # so a NaN/timeout rollback inside this segment must never restore a

@@ -1,0 +1,361 @@
+"""Streaming-native pipelined runner + engine parameter-penalty hook.
+
+Covers the tentpole guarantees:
+(a) ``FerretTrainer.run_stream`` fed by an *unbounded* source (no
+    materialization, no whole-stream device copy) is bit-identical to the
+    dict run on the same rounds for vanilla/ER/LwF/MAS — losses, curves,
+    final params — with peak stream residency O(segment_rounds);
+(b) MAS on the pipeline path applies the Ω-weighted penalty through the
+    ``FerretEngine`` hook: it matches the sequential runner on a
+    degenerate (P=1, N=1, no-compensation) plan, and it is *live* — no
+    silent Vanilla fallback remains;
+plus the satellite regressions: a zero-round stream reports 0.0 instead
+of a NaN ``online_acc`` (pipelined and sequential), the feeder's prefetch
+pool winds down when the consumer dies mid-segment, background ``take``
+exceptions re-raise with the original traceback at the next sync point,
+and the pipelined runner reports consumed-rounds/residency like the
+elastic runner does.
+"""
+
+import dataclasses
+import math
+import threading
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import FerretSession, IterableStreamSource, get_runner
+from repro.api.streams import ArrayStreamSource, BufferedStreamSource, StreamSource
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import FerretConfig, FerretTrainer
+from repro.models import transformer as T
+from repro.models.registry import get_config
+from repro.ocl.algorithms import OCLConfig, mas_penalty
+from repro.ocl.registry import OCLAlgorithm
+from repro.ocl.streams import StreamConfig, make_stream
+
+R_STREAM = 24
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("h2o-danube-1.8b", smoke=True),
+        compute_dtype="float32", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, d_ff=64, vocab_size=16,
+    )
+
+
+def _ferret_cfg(**over):
+    base = dict(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=2, max_stages=2,
+        ocl=OCLConfig(replay_batch=2, replay_size=32, mir_candidates=4),
+    )
+    base.update(over)
+    return FerretConfig(**base)
+
+
+def _stream(length=R_STREAM, seed=0):
+    return make_stream(StreamConfig(
+        kind="drift", modality="tokens", length=length, batch=2, vocab=16,
+        seq=8, seed=seed,
+    ))
+
+
+def _unbounded(arrays, counter=None):
+    """A live-feed view of ``arrays``: per-round dicts, length undeclared."""
+
+    def rounds():
+        R = next(iter(arrays.values())).shape[0]
+        for m in range(R):
+            if counter is not None:
+                counter.append(m)
+            yield {k: v[m] for k, v in arrays.items()}
+
+    return IterableStreamSource(rounds())
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, _stream()
+
+
+# ---------------------------------------------------------------------------
+# (a) incremental unbounded == materialized, residency O(segment)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["vanilla", "er", "lwf", "mas"])
+def test_pipelined_unbounded_matches_materialized(setup, algo):
+    cfg, params, arrays = setup
+    fc = _ferret_cfg()
+
+    t_base = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm=algo)
+    base = t_base.run_stream(params, arrays, segment_rounds=8)
+    produced = []
+    t_incr = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm=algo)
+    res = t_incr.run_stream(
+        params, _unbounded(arrays, produced), segment_rounds=8
+    )
+
+    assert res.rounds == R_STREAM
+    assert produced == list(range(R_STREAM))  # every round pulled exactly once
+    np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
+    np.testing.assert_array_equal(base.online_acc_curve, res.online_acc_curve)
+    np.testing.assert_array_equal(base.lam_curve, res.lam_curve)
+    for a, b in zip(
+        jax.tree.leaves(t_base.final_params), jax.tree.leaves(t_incr.final_params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # residency: one segment + the prefetch window, never the whole stream
+    assert 0 < res.peak_buffered_rounds <= 2 * 8
+    assert res.peak_buffered_rounds < R_STREAM
+
+
+@pytest.mark.parametrize("algo", ["vanilla", "mas"])
+def test_pipelined_chunked_matches_single_scan_params(setup, algo):
+    """The chunked run carries the engine rings across slices: final
+    weights equal the one-big-scan run bit for bit."""
+    cfg, params, arrays = setup
+    fc = _ferret_cfg()
+    t_one = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm=algo)
+    one = t_one.run_stream(params, arrays, segment_rounds=R_STREAM)
+    t_chunk = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm=algo)
+    chunk = t_chunk.run_stream(params, arrays, segment_rounds=7)  # ragged
+    np.testing.assert_array_equal(np.asarray(one.losses), np.asarray(chunk.losses))
+    for a, b in zip(
+        jax.tree.leaves(t_one.final_params), jax.tree.leaves(t_chunk.final_params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pipelined_runner_consumes_source_with_rounds_accounting(setup):
+    cfg, params, arrays = setup
+    session = FerretSession(
+        cfg, math.inf, "vanilla", _unbounded(arrays),
+        batch=2, seq=8, max_workers=2, max_stages=2, params=params,
+    )
+    res = session.run("pipelined", max_rounds=12, segment_rounds=4)
+    # consumed-rounds semantics (PR 4), not len(losses)-of-whatever-ran
+    assert res.rounds == 12
+    assert res.losses.shape == (12,)
+    assert res.extras["lam_curve"].shape == (12,)
+    assert 0 < res.extras["peak_buffered_rounds"] <= 8
+    assert res.extras["stream_wait_s"] >= 0.0
+    # the rest of the feed is untouched: the next run continues at round 12
+    nxt = session.run("pipelined", max_rounds=4, segment_rounds=4)
+    assert nxt.rounds == 4
+
+
+def test_session_probe_does_not_retain_the_stream(setup):
+    """With batch/seq inferred from a live feed, the session's pass-through
+    views (shape probe + cross-run live view) must not keep a replay copy
+    of every round the trainer pulls through them — retention is the
+    consuming trainer's feeder's job, once."""
+    cfg, params, arrays = setup
+    session = FerretSession(
+        cfg, math.inf, "vanilla", _unbounded(arrays),
+        max_workers=2, max_stages=2, params=params,  # no batch/seq: probed
+    )
+    res = session.run("pipelined", segment_rounds=8)
+    assert res.rounds == R_STREAM
+    assert (session.batch, session.seq) == (2, 8)
+    # the shared live view handed out every round exactly once and holds
+    # none of them afterwards — host residency stays O(segment)
+    assert session._live_stream._inflight == []
+    assert res.extras["peak_buffered_rounds"] < R_STREAM
+
+
+# ---------------------------------------------------------------------------
+# (b) MAS: engine penalty hook — exact, live, parity with sequential
+# ---------------------------------------------------------------------------
+
+
+def test_mas_penalty_is_live_on_pipeline_path(setup):
+    """No silent Vanilla fallback: MAS and vanilla trajectories diverge on
+    identical data/params as soon as θ moves off the reference."""
+    cfg, params, arrays = setup
+    fc = _ferret_cfg(ocl=OCLConfig(method="mas", mas_weight=10.0))
+    mas = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm="mas").run_stream(
+        params, arrays, segment_rounds=8
+    )
+    van = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm="vanilla").run_stream(
+        params, arrays, segment_rounds=8
+    )
+    # round 0: θ == θ_ref, the penalty is exactly 0 → identical loss
+    assert mas.losses[0] == van.losses[0]
+    assert not np.allclose(mas.losses[1:], van.losses[1:])
+    assert np.isfinite(mas.losses).all()
+
+
+def test_mas_pipeline_matches_sequential_parity():
+    """On a degenerate plan (P=1, N=1, no compensation, no periodic
+    refresh) the pipeline engine's per-round update equals the sequential
+    runner's — penalty value and final params within tolerance."""
+    # a 1-layer model is the smallest profile the planner partitions into
+    # a single stage (τ=0: the pipeline update is as fresh as sequential)
+    cfg = dataclasses.replace(_cfg(), num_layers=1)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    arrays = _stream(length=12, seed=3)
+    ocl = OCLConfig(method="mas", mas_weight=5.0, refresh_every=0)
+    fc = FerretConfig(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="none"),
+        max_workers=1, max_stages=1, ocl=ocl,
+    )
+
+    def _session():
+        return FerretSession(
+            cfg, algorithm="mas", stream=arrays, batch=2, seq=8,
+            params=params, ferret=fc, max_workers=1, max_stages=1, ocl=ocl,
+        )
+
+    s_pipe = _session()
+    pipe = s_pipe.run("pipelined")
+    assert pipe.plan.partition.num_stages == 1
+    assert pipe.admitted_frac == 1.0
+    s_seq = _session()
+    seq = s_seq.run("sequential")
+
+    # both paths anchored Ω/θ* at stream entry from the first round
+    a_pipe, a_seq = s_pipe.algorithm, s_seq.algorithm
+    for x, y in zip(jax.tree.leaves(a_pipe.omega), jax.tree.leaves(a_seq.omega)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+    # the Ω-weighted pull on the final weights agrees across paths
+    p_pipe = float(mas_penalty(pipe.final_params, a_pipe.ref, a_pipe.omega))
+    p_seq = float(mas_penalty(seq.final_params, a_seq.ref, a_seq.omega))
+    assert p_pipe > 0.0  # the penalty actually engaged
+    assert p_pipe == pytest.approx(p_seq, rel=1e-3)
+
+    np.testing.assert_allclose(pipe.losses, seq.losses, rtol=1e-4, atol=1e-5)
+    for x, y in zip(
+        jax.tree.leaves(pipe.final_params), jax.tree.leaves(seq.final_params)
+    ):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-6)
+
+
+def test_mas_elastic_replan_refreshes_omega(setup):
+    """At a re-plan boundary the Ω anchor moves to the live weights
+    (segment_refresh), and the run stays finite/penalized throughout."""
+    from repro.runtime import BudgetEvent, ElasticStreamTrainer
+
+    cfg, params, arrays = setup
+    fc = _ferret_cfg(ocl=OCLConfig(method="mas", mas_weight=5.0))
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=8, algorithm="mas")
+    full = et.plan_for(math.inf)
+    events = [BudgetEvent(12, full.memory * 0.3)]
+    res = et.run_stream(params, arrays, schedule=events, segment_rounds=6)
+    assert res.num_replans == 1
+    assert np.isfinite(res.losses).all()
+    algo = et.algorithm
+    assert algo.omega is not None
+    # after the refresh the reference is the replan-boundary weights, not
+    # the stream-entry weights
+    entry_leaf = jax.tree.leaves(params)[0]
+    ref_leaf = jax.tree.leaves(algo.ref)[0]
+    assert not np.array_equal(np.asarray(entry_leaf), np.asarray(ref_leaf))
+
+
+# ---------------------------------------------------------------------------
+# satellite: zero-round streams report 0.0, not NaN (pipelined + sequential)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("runner", ["pipelined", "sequential"])
+def test_zero_round_stream_reports_zero_not_nan(setup, runner):
+    cfg, params, arrays = setup
+    empty = {k: v[:0] for k, v in arrays.items()}
+    session = FerretSession(
+        cfg, math.inf, "vanilla", None,
+        batch=2, seq=8, max_workers=2, max_stages=2, params=params,
+    )
+    r = get_runner(runner)
+    stream = ArrayStreamSource(empty) if r.consumes_source else empty
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the empty-mean RuntimeWarning fails
+        res = r.run(session, params, stream)
+    assert res.rounds == 0
+    assert res.online_acc == 0.0
+    assert not math.isnan(res.empirical_rate)
+    assert res.losses.shape == (0,)
+    assert math.isfinite(res.memory_bytes)
+
+
+# ---------------------------------------------------------------------------
+# satellite: feeder prefetch-pool lifecycle under consumer faults
+# ---------------------------------------------------------------------------
+
+
+def _prefetch_threads():
+    return [
+        t for t in threading.enumerate()
+        if t.name.startswith("stream-prefetch") and t.is_alive()
+    ]
+
+
+class _BoomPrep(OCLAlgorithm):
+    """Test-only algorithm whose stream prep dies on the second chunk —
+    a consumer fault *mid-stream*, with a prefetch already in flight."""
+
+    name = "test-boom-prep"
+
+    def reset(self):
+        self.calls = 0
+
+    def prepare_stream(self, stream, ctx=None):
+        self.calls += 1
+        if self.calls >= 2:
+            raise RuntimeError("boom mid-segment")
+        return stream
+
+
+def test_feeder_pool_winds_down_when_trainer_dies_mid_segment(setup):
+    cfg, params, arrays = setup
+    fc = _ferret_cfg()
+    trainer = FerretTrainer(cfg, fc, batch=2, seq=8, algorithm=_BoomPrep())
+    with pytest.raises(RuntimeError, match="boom mid-segment"):
+        trainer.run_stream(params, _unbounded(arrays), segment_rounds=8)
+    # the try/finally close() shut the worker down — no leaked non-daemon
+    # thread left blocked on the feed
+    assert _prefetch_threads() == []
+
+
+class _ExplodingSource(StreamSource):
+    """A feed whose ``take`` raises — e.g. a dead upstream socket."""
+
+    @property
+    def length(self):
+        return None
+
+    @property
+    def remaining(self):
+        return None
+
+    def take(self, n):
+        raise ConnectionError("upstream feed died")
+
+
+def test_background_take_exception_rethrows_with_traceback_then_closes():
+    feeder = BufferedStreamSource(_ExplodingSource())
+    feeder.prefetch(4)
+    with pytest.raises(ConnectionError, match="upstream feed died") as exc:
+        feeder.take(4)  # the sync point: the background error surfaces here
+    # the original traceback is attached: the failing frame is the
+    # source's take, not an opaque future internals frame
+    frames = []
+    tb = exc.value.__traceback__
+    while tb is not None:
+        frames.append(tb.tb_frame.f_code.co_name)
+        tb = tb.tb_next
+    assert frames[-1] == "take"  # innermost frame: the source's take
+    # close() during unwind must not raise and must stop the worker, even
+    # with another failed prefetch in flight
+    feeder.prefetch(4)
+    feeder.close()
+    assert _prefetch_threads() == []
