@@ -1,0 +1,142 @@
+"""Multi-tenant serving benchmark: throughput/latency vs tenant count.
+
+For 1, 4, and 16 same-geometry tenants on one ``FerretServer``:
+
+1. **Sustained rounds/sec** across all tenants (engine pre-warmed by a
+   throwaway tenant, so the number is steady-state serving, not compile).
+2. **p50/p99 round latency** — each tenant is push-fed through a bounded
+   ``TenantFeed`` with per-round arrival timestamps; latency is arrival →
+   completion of the segment that trained the round.
+3. **Engine sharing** — every tenant has identical geometry (model config,
+   algorithm, optimizer, lr, budget share), so the bucketed cache must
+   compile < tenant-count engines; asserted and recorded per scenario
+   (``compiles`` is cumulative across warmup + scenario: exactly 1).
+4. **Exactly-once consumption** — every pushed round is trained exactly
+   once per tenant; asserted per scenario.
+
+Writes the machine-readable ``BENCH_serve.json`` at the repo root (CI
+uploads it as an artifact next to the other BENCH_* files).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.serve import FerretServer
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_serve.json"
+)
+
+TENANT_COUNTS = (1, 4, 16)
+ROUNDS_PER_TENANT = 16
+SEGMENT_ROUNDS = 4
+BUDGET_BYTES = 4 * 2**30
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _scenario(cfg, params, n_tenants: int) -> dict:
+    server = FerretServer(BUDGET_BYTES, segment_rounds=SEGMENT_ROUNDS)
+
+    # warm the shared engine with a throwaway tenant so the measured window
+    # is steady-state serving (same geometry ⇒ same compiled engine)
+    warm = server.admit(
+        cfg, "er", C.bench_stream(length=SEGMENT_ROUNDS, seed=99),
+        name="warmup", batch=C.BATCH, seq=C.SEQ, params=params,
+        max_workers=3, max_stages=4,
+    )
+    server.serve()
+    assert warm.done
+
+    handles = []
+    for i in range(n_tenants):
+        h = server.admit(
+            cfg, "er", None, name=f"t{i}", batch=C.BATCH, seq=C.SEQ,
+            params=params, seed=i, max_workers=3, max_stages=4,
+        )
+        # burst-push the whole stream (arrival-stamped), then close: the
+        # measured window serves a full backlog at every tenant
+        rows = C.bench_stream(length=ROUNDS_PER_TENANT, seed=i)
+        admitted = h.push_many(rows)
+        assert admitted == ROUNDS_PER_TENANT, (admitted, ROUNDS_PER_TENANT)
+        h.close_feed()
+        handles.append(h)
+
+    t0 = time.time()
+    results = server.serve()
+    wall_s = time.time() - t0
+
+    total_rounds = sum(results[h.name].rounds for h in handles)
+    assert total_rounds == n_tenants * ROUNDS_PER_TENANT, (
+        "exactly-once violated", total_rounds)
+    latencies = [lat for h in handles for lat in h.round_latencies_s]
+    assert len(latencies) == total_rounds, (len(latencies), total_rounds)
+    assert server.compile_count < max(2, n_tenants), (
+        "geometry sharing failed", server.compile_count)
+
+    row = {
+        "tenants": n_tenants,
+        "rounds_per_tenant": ROUNDS_PER_TENANT,
+        "total_rounds": total_rounds,
+        "wall_s": wall_s,
+        "rounds_per_s": total_rounds / wall_s,
+        "latency_p50_s": _percentile(latencies, 50),
+        "latency_p99_s": _percentile(latencies, 99),
+        "compiles": server.compile_count,  # cumulative incl. warmup
+        "cache_hits": server.engine_cache.hits,
+        "online_acc_mean": float(np.mean(
+            [results[h.name].online_acc for h in handles])),
+    }
+    print(
+        f"  {n_tenants:>2} tenants: {row['rounds_per_s']:7.1f} rounds/s  "
+        f"p50={1e3 * row['latency_p50_s']:7.1f}ms  "
+        f"p99={1e3 * row['latency_p99_s']:7.1f}ms  "
+        f"compiles={row['compiles']} hits={row['cache_hits']}"
+    )
+    return row
+
+
+def run(write_json: bool = True) -> dict:
+    cfg = C.bench_model()
+    params = C.init_params(cfg)
+    print(
+        f"serving {ROUNDS_PER_TENANT} rounds/tenant, "
+        f"segment_rounds={SEGMENT_ROUNDS}, shared pool "
+        f"{BUDGET_BYTES / 2**30:.0f}GiB:"
+    )
+    rows = [_scenario(cfg, params, n) for n in TENANT_COUNTS]
+    payload = {
+        "bench": "serve",
+        "rounds_per_tenant": ROUNDS_PER_TENANT,
+        "segment_rounds": SEGMENT_ROUNDS,
+        "budget_bytes": BUDGET_BYTES,
+        "scenarios": rows,
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {BENCH_JSON}")
+    return payload
+
+
+def main() -> None:
+    t0 = time.time()
+    payload = run()
+    total = sum(r["total_rounds"] for r in payload["scenarios"])
+    dt = (time.time() - t0) * 1e6 / total
+    peak = max(r["rounds_per_s"] for r in payload["scenarios"])
+    print(f"bench_serve,{dt:.0f},peak_rounds_per_s={peak:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,7 @@ def main():
           f"M_F={plan.memory/2**20:.1f} MiB, R_F={plan.rate:.3f}")
 
     res = session.run()  # default runner: the pipelined engine
-    lam = res.extras["lam_curve"]
+    lam = res.lam_curve
     print(f"online accuracy: {100*res.online_acc:.2f}%  "
           f"(loss {res.losses[0]:.3f} → {res.losses[-1]:.3f}, "
           f"admitted {100*res.admitted_frac:.0f}%, λ→{lam[-1]:.3f})")

@@ -85,6 +85,7 @@ from repro.api.streams import (
     LimitedStreamSource,
     StreamSource,
     as_stream_source,
+    coerce_trainer_stream,
 )
 from repro.ocl.algorithms import OCLConfig
 from repro.ocl.registry import (
@@ -112,6 +113,7 @@ __all__ = [
     "StreamResult",
     "StreamSource",
     "as_stream_source",
+    "coerce_trainer_stream",
     "available_algorithms",
     "available_runners",
     "get_algorithm",

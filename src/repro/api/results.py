@@ -38,6 +38,50 @@ class StreamResult:
     engine_cache_misses: int = 0  # fresh engine compiles (elastic runner)
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    # -- typed accessors over the runner extras -----------------------------
+    # The pipeline-path runners report streaming/caching observability as
+    # extras entries; these accessors are the supported way to read them —
+    # BENCH_* writers and the server's per-tenant reporting use these
+    # instead of string-probing the dict (absent entries read as empty).
+
+    @property
+    def peak_buffered_rounds(self) -> int:
+        """Max stream rounds resident in the feeder (O(segment) bound)."""
+        return int(self.extras.get("peak_buffered_rounds", 0))
+
+    @property
+    def stream_wait_s(self) -> float:
+        """Total un-overlapped wall time blocked on the stream source."""
+        return float(self.extras.get("stream_wait_s", 0.0))
+
+    @property
+    def lam_curve(self) -> np.ndarray:
+        """Per-round Iter-Fisher λ trajectory (empty when not tracked)."""
+        return np.asarray(self.extras.get("lam_curve", np.zeros(0)))
+
+    @property
+    def cache_counts(self) -> Dict[str, int]:
+        """Engine-compile cache accounting for this run."""
+        return {"hits": self.engine_cache_hits, "misses": self.engine_cache_misses}
+
+    def metrics(self) -> Dict[str, Any]:
+        """The scalar observability surface as one flat typed dict — what
+        benchmark writers serialize and the server reports per tenant."""
+        return {
+            "runner": self.runner,
+            "algorithm": self.algorithm,
+            "online_acc": float(self.online_acc),
+            "admitted_frac": float(self.admitted_frac),
+            "rounds": int(self.rounds),
+            "memory_bytes": float(self.memory_bytes),
+            "empirical_rate": float(self.empirical_rate),
+            "num_replans": int(self.num_replans),
+            "engine_cache_hits": int(self.engine_cache_hits),
+            "engine_cache_misses": int(self.engine_cache_misses),
+            "peak_buffered_rounds": self.peak_buffered_rounds,
+            "stream_wait_s": self.stream_wait_s,
+        }
+
     def summary(self) -> str:
         mem = (
             "inf" if not np.isfinite(self.memory_bytes)

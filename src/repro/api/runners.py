@@ -198,41 +198,54 @@ class ElasticRunner(Runner):
             fault_rounds=fault_rounds, fault_budget_scale=fault_budget_scale,
             resume=resume, prefetch=prefetch,
         )
-        # a zero-round stream plans nothing: report the resident weights,
-        # not the inf that max(..., default=...) used to produce
-        peak_mem = max(
-            (s.result.memory_bytes for s in raw.segments),
-            default=_model_bytes(session.model_cfg),
+        return stream_result_from_elastic(
+            raw, runner=self.name, algorithm=session.algorithm.name,
+            model_cfg=session.model_cfg,
         )
-        return StreamResult(
-            runner=self.name,
-            algorithm=session.algorithm.name,
-            online_acc=raw.online_acc,
-            online_acc_curve=raw.online_acc_curve,
-            losses=np.asarray(raw.losses),
-            rounds=raw.rounds,
-            admitted_frac=raw.admitted_frac,
-            memory_bytes=peak_mem,
-            empirical_rate=raw.empirical_rate,
-            final_params=raw.final_params,
-            plan=raw.segments[0].result.plan if raw.segments else None,
-            segments=list(raw.segments),
-            num_replans=raw.num_replans,
-            engine_cache_hits=raw.engine_cache_hits,
-            engine_cache_misses=raw.engine_cache_misses,
-            extras={
-                "raw": raw,
-                "num_faults": raw.num_faults,
-                "peak_buffered_rounds": raw.peak_buffered_rounds,
-                "stream_wait_s": raw.stream_wait_s,
-                # stream-wide λ trajectory, same key the pipelined runner
-                # reports (stitched across segments here)
-                "lam_curve": (
-                    np.concatenate([s.result.lam_curve for s in raw.segments])
-                    if raw.segments else np.zeros(0)
-                ),
-            },
-        )
+
+
+def stream_result_from_elastic(
+    raw, *, runner: str, algorithm: str, model_cfg
+) -> StreamResult:
+    """Fold an ``ElasticStreamResult`` into the unified ``StreamResult``.
+
+    Shared by the elastic runner and the multi-tenant server's per-tenant
+    reporting, so both surfaces present identical accounting."""
+    # a zero-round stream plans nothing: report the resident weights,
+    # not the inf that max(..., default=...) used to produce
+    peak_mem = max(
+        (s.result.memory_bytes for s in raw.segments),
+        default=_model_bytes(model_cfg),
+    )
+    return StreamResult(
+        runner=runner,
+        algorithm=algorithm,
+        online_acc=raw.online_acc,
+        online_acc_curve=raw.online_acc_curve,
+        losses=np.asarray(raw.losses),
+        rounds=raw.rounds,
+        admitted_frac=raw.admitted_frac,
+        memory_bytes=peak_mem,
+        empirical_rate=raw.empirical_rate,
+        final_params=raw.final_params,
+        plan=raw.segments[0].result.plan if raw.segments else None,
+        segments=list(raw.segments),
+        num_replans=raw.num_replans,
+        engine_cache_hits=raw.engine_cache_hits,
+        engine_cache_misses=raw.engine_cache_misses,
+        extras={
+            "raw": raw,
+            "num_faults": raw.num_faults,
+            "peak_buffered_rounds": raw.peak_buffered_rounds,
+            "stream_wait_s": raw.stream_wait_s,
+            # stream-wide λ trajectory, same key the pipelined runner
+            # reports (stitched across segments here)
+            "lam_curve": (
+                np.concatenate([s.result.lam_curve for s in raw.segments])
+                if raw.segments else np.zeros(0)
+            ),
+        },
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -219,6 +219,47 @@ class FerretSession:
             arrays = self.algorithm.prepare_stream(arrays, ctx)
         return r.run(self, run_params, arrays, **runner_opts)
 
+    def open_stream_run(
+        self,
+        *,
+        stream: Optional[StreamLike] = None,
+        params: Optional[Pytree] = None,
+        max_rounds: Optional[int] = None,
+        schedule: Any = (),
+        segment_rounds: Optional[Any] = None,
+        supervisor_cfg: Optional[Any] = None,
+        engine_cache: Optional[Any] = None,
+        prefetch: bool = True,
+    ):
+        """Open the session's stream as a *steppable* elastic run.
+
+        Where ``run("elastic")`` drives the whole stream to completion,
+        this returns an ``ElasticRun``: each ``step()`` executes one
+        segment, ``stop()`` ends at a boundary with exactly-once
+        accounting intact, and ``run.trainer.request_budget(...)`` re-plans
+        live between steps. This is the session-level primitive the
+        multi-tenant ``repro.serve.FerretServer`` multiplexes — pass a
+        shared ``engine_cache`` so same-geometry sessions reuse compiled
+        engines. ``segment_rounds`` may be a callable ``cursor -> rounds``
+        (dynamic segment sizing).
+        """
+        from repro.runtime.elastic_trainer import ElasticStreamTrainer
+
+        source = self._resolve_source(stream, max_rounds)
+        run_params = params if params is not None else self.params
+        self.algorithm.reset()
+        trainer = ElasticStreamTrainer(
+            self.model_cfg, self.ferret_cfg,
+            batch=self.batch, seq=self.seq,
+            optimizer=self.optimizer, profile=self.profile,
+            algorithm=self.algorithm, engine_cache=engine_cache,
+        )
+        return trainer.open_stream(
+            run_params, source, schedule,
+            segment_rounds=segment_rounds, supervisor_cfg=supervisor_cfg,
+            prefetch=prefetch,
+        )
+
     # -- internals ---------------------------------------------------------
     @property
     def _session_source(self) -> BufferedStreamSource:

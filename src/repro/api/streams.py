@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import collections
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Union
 
@@ -270,6 +271,14 @@ class BufferedStreamSource(StreamSource):
     def _pending_rounds(self) -> int:
         return sum(self._nrounds(c) for c in self._pending)
 
+    def pending_round_count(self) -> int:
+        """Rounds pulled from the inner source but not yet handed out.
+
+        A cheap, non-blocking observation (an in-flight prefetch is *not*
+        synced): schedulers use it to size the next segment to what is
+        physically available instead of blocking a shared serve loop."""
+        return self._pending_rounds()
+
     def _note_peak(self) -> None:
         n = self._pending_rounds() + sum(self._nrounds(c) for c in self._inflight)
         self.peak_buffered_rounds = max(self.peak_buffered_rounds, n)
@@ -481,3 +490,25 @@ def as_stream_source(obj: StreamLike, length: Optional[int] = None) -> StreamSou
         "StreamSource, a dict of (R, b, ...) arrays, a StreamConfig, or an "
         "iterable of per-round batch dicts"
     )
+
+
+def coerce_trainer_stream(stream: StreamLike, caller: str) -> StreamSource:
+    """The trainers' single stream-coercion entry point.
+
+    ``StreamSource`` objects pass straight through. Anything else — in
+    particular the historical raw dict-of-arrays form — is coerced via
+    ``as_stream_source`` with a ``DeprecationWarning``: the trainer-level
+    compat wrapping used to be copy-pasted per trainer, and the session
+    layer (``FerretSession(stream=...)``) is the supported place to hand
+    over raw arrays.
+    """
+    if isinstance(stream, StreamSource):
+        return stream
+    warnings.warn(
+        f"passing a raw {type(stream).__name__} stream to {caller} is "
+        "deprecated: wrap it with repro.api.as_stream_source(...) or use "
+        "FerretSession(stream=...), which accepts raw arrays directly",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return as_stream_source(stream)

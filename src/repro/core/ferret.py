@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import threading
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
@@ -120,6 +121,13 @@ class EngineCache:
     segment and ``record``s after it *succeeds*, so aborted segments never
     skew the perf accounting. An A→B→A budget schedule compiles 2 engines
     and hits once.
+
+    Thread-safe: one cache may be shared by concurrent trainers (the
+    multi-tenant server path). The internal lock covers the engine map and
+    the compile bookkeeping; callers who need ``seen``/``record`` to stay
+    truthful across a whole segment additionally serialize execution on
+    the shared engine's ``exec_lock`` (see ``FerretEngine``), which also
+    protects the engine's mutable schedule.
     """
 
     def __init__(self, buckets: Optional[Tuple[int, ...]] = None, enabled: bool = True):
@@ -127,6 +135,7 @@ class EngineCache:
         self.enabled = enabled
         self._engines: Dict[Tuple, Any] = {}
         self._compiled: set = set()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
@@ -145,24 +154,27 @@ class EngineCache:
         first use; always fresh when the cache is disabled)."""
         if not self.enabled:
             return factory()
-        engine = self._engines.get(struct_key)
-        if engine is None:
-            engine = factory()
-            self._engines[struct_key] = engine
-        return engine
+        with self._lock:
+            engine = self._engines.get(struct_key)
+            if engine is None:
+                engine = factory()
+                self._engines[struct_key] = engine
+            return engine
 
     def seen(self, compile_key: Tuple) -> bool:
         """Was this shape already compiled (i.e. will the run be a hit)?"""
-        return self.enabled and compile_key in self._compiled
+        with self._lock:
+            return self.enabled and compile_key in self._compiled
 
     def record(self, compile_key: Tuple, hit: bool) -> None:
         """Account one *completed* segment run under ``compile_key``."""
-        if hit:
-            self.hits += 1
-        else:
-            self.misses += 1
-            if self.enabled:
-                self._compiled.add(compile_key)
+        with self._lock:
+            if hit:
+                self.hits += 1
+            else:
+                self.misses += 1
+                if self.enabled:
+                    self._compiled.add(compile_key)
 
     @property
     def counts(self) -> Dict[str, int]:
@@ -333,16 +345,10 @@ class FerretTrainer:
         parameter-space term applied *inside* the engine — no silent
         Vanilla fallback remains on the pipeline path.
         """
-        from repro.api.streams import (
-            BufferedStreamSource,
-            StreamSource,
-            as_stream_source,
-        )
+        from repro.api.streams import BufferedStreamSource, coerce_trainer_stream
         from repro.models import transformer as T
 
-        source = (
-            stream if isinstance(stream, StreamSource) else as_stream_source(stream)
-        )
+        source = coerce_trainer_stream(stream, "FerretTrainer.run_stream")
         seg = int(segment_rounds) if segment_rounds else DEFAULT_PIPELINE_SEGMENT_ROUNDS
         remaining = source.remaining
         R: Optional[int] = None if remaining is None else int(remaining)

@@ -21,6 +21,7 @@ engine with ``sync_period=P`` schedules (fresh gradients, delayed updates).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -119,6 +120,12 @@ class FerretEngine:
         self.lr = lr
         self.penalty_fn = penalty_fn
         self._compiled = jax.jit(self._scan)
+        # ``set_schedule`` mutates ``self.sched`` and ``run`` reads it —
+        # callers sharing one engine across threads (a shared EngineCache,
+        # the multi-tenant server) hold this across the whole
+        # set_schedule → init_state → run span so one tenant's schedule
+        # swap can never leak into another's in-flight scan
+        self.exec_lock = threading.Lock()
 
     def set_schedule(self, schedule: EngineSchedule) -> None:
         """Swap the schedule. Same (rounds, stages, ring_size, delta_ring)

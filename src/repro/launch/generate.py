@@ -1,0 +1,89 @@
+"""Token-generation driver: batched prefill + decode with per-family caches.
+
+Formerly ``repro.launch.serve`` — that name now belongs to the multi-tenant
+OCL serving CLI over ``repro.serve.FerretServer``; generation moved here.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.generate --arch mamba2-780m --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import transformer as T
+from repro.models.registry import get_config
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    rng = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, rng)
+    max_len = args.prompt_len + args.gen
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+    decode = jax.jit(make_decode_step(cfg))
+
+    if cfg.embed_inputs:
+        prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
+        batch = {"tokens": prompts}
+    else:
+        batch = {
+            "embeds": jax.random.normal(
+                rng, (args.batch, args.prompt_len, cfg.d_model),
+                dtype=jnp.dtype(cfg.compute_dtype),
+            )
+        }
+
+    t0 = time.time()
+    logits, cache = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.time() - t0
+
+    toks = []
+    t0 = time.time()
+    next_tok = jnp.argmax(logits, axis=-1)
+    for i in range(args.gen):
+        if args.temperature > 0:
+            rng, sub = jax.random.split(rng)
+            next_tok = jax.random.categorical(sub, logits / args.temperature, axis=-1)
+        toks.append(np.asarray(next_tok))
+        if cfg.embed_inputs:
+            step_batch = {"tokens": next_tok[:, None]}
+        else:
+            emb = jax.random.normal(
+                jax.random.fold_in(rng, i), (args.batch, 1, cfg.d_model),
+                dtype=jnp.dtype(cfg.compute_dtype),
+            )
+            step_batch = {"embeds": emb}
+        logits, cache = decode(params, cache, step_batch)
+        next_tok = jnp.argmax(logits, axis=-1)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    total_tokens = args.batch * args.gen
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms ({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
+    print(f"decode : {t_decode*1e3:.1f} ms total, {t_decode/args.gen*1e3:.2f} ms/step, "
+          f"{total_tokens/t_decode:.0f} tok/s")
+    print("sample tokens[0]:", [int(t[0]) for t in toks][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,85 +1,124 @@
-"""Serving driver: batched prefill + decode with per-family caches.
+"""Multi-tenant OCL serving CLI over ``repro.serve.FerretServer``.
 
-Example:
-  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+Admits ``--tenants`` same-architecture sessions — each with its own
+drifting token stream, OCL algorithm, and weighted share of one device
+memory pool — and drives them to completion through the shared server:
+one bucketed engine cache (compile count < tenant count proves the
+same-geometry sharing), deficit-round-robin segment scheduling, live pool
+re-division as tenants finish.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --tenants 4 --rounds 64 \
+      --arch h2o-danube-1.8b --smoke --budget-gb 4
+  PYTHONPATH=src python -m repro.launch.serve --tenants 2 \
+      --algorithm er --scheduler rr
+
+The former ``repro.launch.serve`` (batched prefill + decode token
+generation) lives at ``repro.launch.generate``; invocations using its
+flags (``--gen`` / ``--prompt-len``) are forwarded there with a
+``DeprecationWarning``.
 """
 
 from __future__ import annotations
 
 import argparse
+import math
+import sys
 import time
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import transformer as T
-from repro.models.registry import get_config
+_GENERATE_FLAGS = ("--gen", "--prompt-len", "--temperature")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if any(flag in argv or any(a.startswith(flag + "=") for a in argv)
+           for flag in _GENERATE_FLAGS):
+        warnings.warn(
+            "token generation moved from repro.launch.serve to "
+            "repro.launch.generate — forwarding this invocation; switch to "
+            "`python -m repro.launch.generate`",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.launch import generate
+
+        sys.argv = [sys.argv[0], *argv]
+        generate.main()
+        return
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--arch", default=None, help="registered architecture name "
+                    "(default: a small built-in benchmark LM)")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=48, help="stream rounds per tenant")
+    ap.add_argument("--segment-rounds", type=int, default=8)
+    ap.add_argument("--budget-gb", type=float, default=0.0,
+                    help="global pool; 0 = unconstrained (every tenant M+)")
+    ap.add_argument("--algorithm", default="vanilla")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--scheduler", default="drr", choices=["drr", "rr"])
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    rng = jax.random.PRNGKey(args.seed)
-    params = T.init_params(cfg, rng)
-    max_len = args.prompt_len + args.gen
+    from repro.models.config import ModelConfig
+    from repro.models.registry import get_config
+    from repro.ocl.streams import StreamConfig, make_stream
+    from repro.serve import FerretServer, RoundRobinScheduler
 
-    prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
-    decode = jax.jit(make_decode_step(cfg))
-
-    if cfg.embed_inputs:
-        prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-        batch = {"tokens": prompts}
+    if args.arch is not None:
+        cfg = get_config(args.arch, smoke=args.smoke)
+        vocab = min(cfg.vocab_size, 64)
     else:
-        batch = {
-            "embeds": jax.random.normal(
-                rng, (args.batch, args.prompt_len, cfg.d_model),
-                dtype=jnp.dtype(cfg.compute_dtype),
-            )
-        }
+        vocab = 32
+        cfg = ModelConfig(
+            name="serve-lm", family="dense", num_layers=4, d_model=64,
+            num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=vocab,
+            compute_dtype="float32",
+        )
+
+    budget = math.inf if args.budget_gb <= 0 else args.budget_gb * 2**30
+    scheduler = RoundRobinScheduler() if args.scheduler == "rr" else None
+    server = FerretServer(
+        budget, scheduler=scheduler, segment_rounds=args.segment_rounds,
+        smoke=True,
+    )
+    for i in range(args.tenants):
+        stream = make_stream(StreamConfig(
+            kind="drift", modality="tokens", length=args.rounds,
+            batch=args.batch, vocab=vocab, seq=args.seq, seed=args.seed + i,
+        ))
+        for k in ("tokens", "labels"):
+            stream[k] = stream[k] % cfg.vocab_size
+        server.admit(
+            cfg, args.algorithm, stream, name=f"tenant{i}",
+            batch=args.batch, seq=args.seq, lr=args.lr,
+            max_workers=3, max_stages=4, seed=args.seed + i,
+        )
+    print(f"admitted {args.tenants} tenants "
+          f"(pool={'inf' if math.isinf(budget) else f'{args.budget_gb:g}GiB'}, "
+          f"scheduler={args.scheduler})")
 
     t0 = time.time()
-    logits, cache = jax.block_until_ready(prefill(params, batch))
-    t_prefill = time.time() - t0
+    results = server.serve()
+    dt = time.time() - t0
 
-    toks = []
-    t0 = time.time()
-    next_tok = jnp.argmax(logits, axis=-1)
-    for i in range(args.gen):
-        if args.temperature > 0:
-            rng, sub = jax.random.split(rng)
-            next_tok = jax.random.categorical(sub, logits / args.temperature, axis=-1)
-        toks.append(np.asarray(next_tok))
-        if cfg.embed_inputs:
-            step_batch = {"tokens": next_tok[:, None]}
-        else:
-            emb = jax.random.normal(
-                jax.random.fold_in(rng, i), (args.batch, 1, cfg.d_model),
-                dtype=jnp.dtype(cfg.compute_dtype),
-            )
-            step_batch = {"embeds": emb}
-        logits, cache = decode(params, cache, step_batch)
-        next_tok = jnp.argmax(logits, axis=-1)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-
-    total_tokens = args.batch * args.gen
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms ({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
-    print(f"decode : {t_decode*1e3:.1f} ms total, {t_decode/args.gen*1e3:.2f} ms/step, "
-          f"{total_tokens/t_decode:.0f} tok/s")
-    print("sample tokens[0]:", [int(t[0]) for t in toks][:16])
+    total_rounds = sum(r.rounds for r in results.values())
+    for name in sorted(results):
+        print(f"  {name}: {results[name].summary()}")
+    print(
+        f"{len(results)} tenants, {total_rounds} rounds in {dt:.1f}s "
+        f"({total_rounds / dt:.1f} rounds/s sustained); engine compiles="
+        f"{server.compile_count} (< {args.tenants} tenants: shared), "
+        f"cache hits={server.engine_cache.hits}"
+    )
+    accs = np.array([r.online_acc for r in results.values()])
+    print(f"online acc mean={accs.mean():.4f} min={accs.min():.4f} "
+          f"max={accs.max():.4f}")
 
 
 if __name__ == "__main__":

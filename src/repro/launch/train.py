@@ -133,7 +133,7 @@ def run_ferret(args) -> None:
         resident = ""
         if args.incremental:
             resident = (
-                f" peak-stream-residency={res.extras['peak_buffered_rounds']} "
+                f" peak-stream-residency={res.peak_buffered_rounds} "
                 f"rounds (of {res.rounds}; no materialization)"
             )
         print(
@@ -149,11 +149,11 @@ def run_ferret(args) -> None:
     # stream — only the residency report differs
     res = session.run("pipelined")
     dt = time.time() - t0
-    lam = res.extras["lam_curve"]
+    lam = res.lam_curve
     resident = ""
     if args.incremental:
         resident = (
-            f" peak-stream-residency={res.extras['peak_buffered_rounds']} "
+            f" peak-stream-residency={res.peak_buffered_rounds} "
             f"rounds (of {res.rounds}; no materialization)"
         )
     print(

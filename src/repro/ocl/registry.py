@@ -135,6 +135,23 @@ class OCLAlgorithm:
     def reset(self) -> None:
         """Clear host-side state (replay buffer, teacher, Ω)."""
 
+    def engine_fingerprint(self) -> Any:
+        """Hashable identity of the *traced* code this algorithm bakes into
+        a compiled engine (``wrap_staged`` + ``engine_penalty``).
+
+        Two instances with equal fingerprints may share one compiled
+        ``FerretEngine`` through a shared ``EngineCache`` — this is what
+        lets same-geometry tenants of the multi-tenant server reuse one
+        compile. The built-ins' traced code closes only over ``self.cfg``
+        (host-side state such as replay buffers and Ω *values* ride the
+        scan as arguments), so class identity + config is exact. A custom
+        algorithm whose wrapped loss closes over per-instance state must
+        override this — returning ``repro.core.ferret.IdentityKey(self)``
+        restores strict per-instance engines.
+        """
+        cls = type(self)
+        return (cls.__module__, cls.__qualname__, self.cfg)
+
     # -- pipeline path -----------------------------------------------------
     def prepare_stream(
         self, stream: Dict[str, np.ndarray], ctx: Optional[PrepareContext] = None

@@ -21,6 +21,12 @@ class Optimizer:
     init: Callable[[Pytree], Pytree]
     update: Callable[[Pytree, Pytree, Pytree], Tuple[Pytree, Pytree]]
     # update(params, grads, state) -> (new_params, new_state)
+    # Hashable structural identity of the update rule (constructor name +
+    # hyperparameters). Two Optimizer objects with equal fingerprints are
+    # interchangeable inside a compiled engine, so engine caches key on it
+    # and same-geometry tenants built from separate adamw(...) calls still
+    # share compiles. None → identity-keyed (never shared).
+    fingerprint: Any = None
 
 
 class AdamWState(NamedTuple):
@@ -71,7 +77,10 @@ def adamw(
         new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
         return new_params, AdamWState(new_mu, new_nu, count)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(
+        init=init, update=update,
+        fingerprint=("adamw", lr, b1, b2, eps, weight_decay, grad_clip),
+    )
 
 
 class SGDState(NamedTuple):
@@ -94,4 +103,4 @@ def sgd(lr: float = 1e-3, momentum: float = 0.0) -> Optimizer:
         new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
         return new_params, SGDState(new_m)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update, fingerprint=("sgd", lr, momentum))

@@ -2,6 +2,7 @@ from repro.core.ferret import EngineCache
 from repro.runtime.elastic import ClusterSpec, DeviceLossError, ElasticPlanner
 from repro.runtime.elastic_trainer import (
     BudgetEvent,
+    ElasticRun,
     ElasticStreamResult,
     ElasticStreamTrainer,
     ResumeState,
@@ -12,6 +13,7 @@ from repro.runtime.supervisor import Supervisor, SupervisorCfg
 __all__ = [
     "BudgetEvent",
     "ClusterSpec",
+    "ElasticRun",
     "DeviceLossError",
     "ElasticPlanner",
     "ElasticStreamResult",

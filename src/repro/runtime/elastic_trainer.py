@@ -81,7 +81,7 @@ from repro.api.streams import (
     BufferedStreamSource,
     LimitedStreamSource,
     StreamSource,
-    as_stream_source,
+    coerce_trainer_stream,
 )
 from repro.checkpointing.checkpoint import (
     latest_checkpoint,
@@ -300,6 +300,101 @@ class ResumeState:
 
 
 # ---------------------------------------------------------------------------
+# Steppable runs
+# ---------------------------------------------------------------------------
+
+_STOP = object()  # sent into the run generator to end at a segment boundary
+
+
+class ElasticRun:
+    """A steppable handle over one elastic stream run.
+
+    ``step()`` executes exactly one segment (blocking until its rounds are
+    available) and returns the ``SegmentReport``, or ``None`` once the
+    source is exhausted — at which point ``result()`` holds the final
+    ``ElasticStreamResult``. ``stop()`` ends the run early at the current
+    segment boundary with everything consumed so far accounted. This is
+    the primitive the multi-tenant ``FerretServer`` interleaves across
+    tenants: one ``step()`` per scheduling decision, budget re-divisions
+    landing through ``trainer.request_budget`` between steps.
+    """
+
+    def __init__(self, trainer: "ElasticStreamTrainer", gen, params: Pytree):
+        self.trainer = trainer
+        self._gen = gen
+        self._params = params
+        self._started = False
+        self._finished = False
+        self._result: Optional[ElasticStreamResult] = None
+        self.segments: List[SegmentReport] = []
+
+    @property
+    def finished(self) -> bool:
+        return self._finished
+
+    def buffered_rounds(self) -> int:
+        """Rounds pulled into the run's feeder and not yet consumed."""
+        feeder = self.trainer._feeder
+        return 0 if feeder is None else feeder.pending_round_count()
+
+    def step(self) -> Optional[SegmentReport]:
+        """Run exactly one segment; ``None`` once the source is exhausted."""
+        if self._finished:
+            return None
+        try:
+            self._started = True
+            report = self._gen.send(None)  # None = keep going (starts the gen)
+        except StopIteration as stop:
+            self._finished = True
+            self._result = stop.value
+            return None
+        self.segments.append(report)
+        return report
+
+    def stop(self) -> ElasticStreamResult:
+        """End the run at the current segment boundary.
+
+        Every round consumed so far stays accounted (exactly-once); an
+        unstarted run returns an empty result without touching the source.
+        """
+        if self._finished:
+            return self._result
+        self._finished = True
+        if not self._started:
+            self._gen.close()
+            self._result = _empty_elastic_result(self._params)
+            return self._result
+        try:
+            self._gen.send(_STOP)
+        except StopIteration as stop:
+            self._result = stop.value
+        else:  # pragma: no cover — the generator always honors _STOP
+            self._gen.close()
+            raise RuntimeError("elastic run generator ignored the stop request")
+        return self._result
+
+    def result(self) -> ElasticStreamResult:
+        if not self._finished:
+            raise RuntimeError(
+                "run still open: step() to exhaustion or stop() first"
+            )
+        return self._result
+
+    def close(self) -> None:
+        """``stop()`` that is safe to call on an already-finished run."""
+        if not self._finished:
+            self.stop()
+
+
+def _empty_elastic_result(params: Pytree) -> ElasticStreamResult:
+    return ElasticStreamResult(
+        segments=[], online_acc=0.0, online_acc_curve=np.zeros(0),
+        losses=np.zeros(0), admitted_frac=0.0, empirical_rate=0.0,
+        final_params=params, rounds=0, num_replans=0, num_faults=0,
+    )
+
+
+# ---------------------------------------------------------------------------
 # The elastic trainer
 # ---------------------------------------------------------------------------
 
@@ -336,14 +431,20 @@ class ElasticStreamTrainer:
         # EngineCache(enabled=False) to disable bucketing + reuse.
         self.engine_cache = engine_cache or EngineCache()
         # Cache-key scope: a compiled engine bakes in the model, the
-        # algorithm's loss wrapper, the optimizer, lr and compensation
-        # config — trainers differing in any of these must never share an
-        # engine through a shared EngineCache, even for equal bounds.
-        # IdentityKey pins the referents so a recycled id can never alias.
+        # algorithm's loss wrapper, the optimizer update rule, lr and
+        # compensation config — trainers differing in any of these must
+        # never share an engine through a shared EngineCache, even for
+        # equal bounds. The scope is *structural* where structure is
+        # exact (frozen model config, the algorithm's engine_fingerprint,
+        # the optimizer's hyperparameter fingerprint), so same-geometry
+        # tenants built from separate-but-equal pieces share one compile;
+        # a fingerprint-less optimizer falls back to IdentityKey, which
+        # pins the referent so a recycled id can never alias.
+        opt_fp = self.optimizer.fingerprint
         self._cache_scope = (
-            IdentityKey(self.model_cfg),
-            IdentityKey(self.algorithm),
-            IdentityKey(self.optimizer),
+            self.model_cfg,
+            self.algorithm.engine_fingerprint(),
+            opt_fp if opt_fp is not None else IdentityKey(self.optimizer),
             ferret_cfg.lr,
             ferret_cfg.compensation,
         )
@@ -361,6 +462,9 @@ class ElasticStreamTrainer:
         self._current_budget: float = float(ferret_cfg.budget_bytes)
         self._current_plan: Optional[planner_lib.Plan] = None
         self._prep_ctx: Optional[PrepareContext] = None
+        # the live run's feeder (set while a run/_run_gen is underway):
+        # schedulers peek its pending-round count to size segments
+        self._feeder: Optional[BufferedStreamSource] = None
 
     # -- budget control ---------------------------------------------------
     def request_budget(self, budget_bytes: float) -> None:
@@ -412,7 +516,7 @@ class ElasticStreamTrainer:
         stream: Union[Dict[str, np.ndarray], StreamSource],
         schedule: BudgetSchedule = (),
         *,
-        segment_rounds: Optional[int] = None,
+        segment_rounds: Optional[Union[int, Callable[[int], int]]] = None,
         supervisor_cfg: Optional[SupervisorCfg] = None,
         fault_rounds: Sequence[int] = (),
         fault_budget_scale: float = 0.5,
@@ -437,6 +541,10 @@ class ElasticStreamTrainer:
         and fault injection are only observed at segment boundaries, so this
         bounds their reaction latency. Defaults to 16 for callable
         schedules and for unbounded sources (which need finite segments).
+        May itself be a callable ``cursor -> rounds`` re-evaluated at every
+        boundary — how the multi-tenant server sizes segments to what a
+        live feed has actually buffered instead of blocking a shared serve
+        loop on a fixed-size ``take``.
         supervisor_cfg: when given, every segment executes as one supervised
         step — NaN rollback, retries, async checkpoints (plan + cursor in
         the manifest extras), and ``on_fatal`` escalation all active.
@@ -452,9 +560,70 @@ class ElasticStreamTrainer:
         prefetch: pull segment k+1 from the source on a background thread
         while segment k runs on device.
         """
+        run = self.open_stream(
+            params, stream, schedule,
+            segment_rounds=segment_rounds, supervisor_cfg=supervisor_cfg,
+            fault_rounds=fault_rounds, fault_budget_scale=fault_budget_scale,
+            resume=resume, prefetch=prefetch,
+        )
+        try:
+            while run.step() is not None:
+                pass
+        finally:
+            run.close()
+        return run.result()
+
+    def open_stream(
+        self,
+        params: Pytree,
+        stream: Union[Dict[str, np.ndarray], StreamSource],
+        schedule: BudgetSchedule = (),
+        *,
+        segment_rounds: Optional[Union[int, Callable[[int], int]]] = None,
+        supervisor_cfg: Optional[SupervisorCfg] = None,
+        fault_rounds: Sequence[int] = (),
+        fault_budget_scale: float = 0.5,
+        resume: Optional[ResumeState] = None,
+        prefetch: bool = True,
+    ) -> "ElasticRun":
+        """Open the stream as a *steppable* run (same options as
+        ``run_stream``): each ``ElasticRun.step()`` executes exactly one
+        segment and returns its ``SegmentReport``; ``stop()`` ends the run
+        at the current boundary with every consumed round accounted. This
+        is the multiplexing primitive of the multi-tenant server — a
+        scheduler interleaves ``step()`` calls across tenants, and budget
+        re-divisions land through ``request_budget`` between steps.
+
+        One trainer drives at most one open run at a time (the run borrows
+        the trainer's live-state snapshot fields).
+        """
+        gen = self._run_gen(
+            params, stream, schedule,
+            segment_rounds=segment_rounds, supervisor_cfg=supervisor_cfg,
+            fault_rounds=fault_rounds, fault_budget_scale=fault_budget_scale,
+            resume=resume, prefetch=prefetch,
+        )
+        return ElasticRun(self, gen, params)
+
+    def _run_gen(
+        self,
+        params: Pytree,
+        stream: Union[Dict[str, np.ndarray], StreamSource],
+        schedule: BudgetSchedule,
+        *,
+        segment_rounds,
+        supervisor_cfg: Optional[SupervisorCfg],
+        fault_rounds: Sequence[int],
+        fault_budget_scale: float,
+        resume: Optional[ResumeState],
+        prefetch: bool,
+    ):
+        """The segment loop as a generator: yields one ``SegmentReport``
+        per segment, receives ``_STOP`` to end at a boundary, and returns
+        the final ``ElasticStreamResult`` (``StopIteration.value``)."""
         from repro.models import transformer as T
 
-        source = stream if isinstance(stream, StreamSource) else as_stream_source(stream)
+        source = coerce_trainer_stream(stream, "ElasticStreamTrainer.run_stream")
         events, budget_fn = self._normalize_schedule(schedule)
         pending_faults = sorted(set(int(r) for r in fault_rounds))
 
@@ -487,6 +656,7 @@ class ElasticStreamTrainer:
         feeder = BufferedStreamSource(
             source, transform=self._prepare_rows, prefetch=prefetch
         )
+        self._feeder = feeder
 
         event_idx = 0
         budget = self.cfg.budget_bytes
@@ -652,63 +822,72 @@ class ElasticStreamTrainer:
                     )
 
                 engine = self.engine_cache.engine_for(struct_key, _factory)
-                cache_hit = self.engine_cache.seen(compile_key)
-                engine.set_schedule(engine_sched)
-                state = engine.init_state(
-                    stage_params, opt_states, comp_states, rings=rings, deltas=deltas
-                )
-                # only this segment's rounds ever reach the device: stream
-                # residency stays O(segment), not O(R)
-                seg_stream = {k: jnp.asarray(v) for k, v in rows.items()}
-                if bucket_rounds > seg_len:
-                    # bucket padding: repeat the last item (inert schedule
-                    # rounds never admit it, so state/metrics are untouched)
-                    seg_stream = {
-                        k: jnp.concatenate(
-                            [v, jnp.repeat(v[-1:], bucket_rounds - seg_len, axis=0)]
-                        )
-                        for k, v in seg_stream.items()
-                    }
-                # overlap: pull segment k+1 on the host while k computes
-                if R is None or seg_end < R:
-                    nxt = self._segment_end(seg_end, R, events, segment_rounds)
-                    feeder.prefetch(nxt - seg_end)
-                # segment-constant penalty extras (MAS Ω/ref): re-read at
-                # every boundary so a re-plan refresh is picked up; rides
-                # the compiled scan as an argument, never a retrace
-                penalty = (
-                    self._split_penalty_cached(bounds)
-                    if engine.penalty_fn is not None else None
-                )
-                try:
-                    final_state, ys = self._execute_segment(
-                        engine, state, seg_stream, supervisor_cfg,
-                        fault_round, fault_budget_scale, plan, cursor, seg_end, budget,
-                        penalty,
+                # exec_lock spans seen → set_schedule → run → record: a
+                # shared engine (multi-tenant, same geometry) never has its
+                # schedule swapped under an in-flight scan, and concurrent
+                # first-users cannot both count a miss for one compile
+                with engine.exec_lock:
+                    cache_hit = self.engine_cache.seen(compile_key)
+                    engine.set_schedule(engine_sched)
+                    state = engine.init_state(
+                        stage_params, opt_states, comp_states, rings=rings, deltas=deltas
                     )
-                    faults_at_cursor = 0
-                except DeviceLossError as e:
-                    # Re-run this segment from the same cursor — state is
-                    # unchanged and the feeder re-serves the retained rows,
-                    # so the stream stays exactly-once. Injected faults fire
-                    # once; a genuine device loss may not have gone through
-                    # a Supervisor, so make sure a shrink was requested, and
-                    # bail out if shrinking stops making progress.
-                    feeder.rewind()
-                    if fault_round is not None:
-                        pending_faults.remove(fault_round)
-                    num_faults += 1
-                    faults_at_cursor += 1
-                    if self._pending_budget is None:
-                        self.fatal_handler(fault_budget_scale)(e)
-                    if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
-                        raise
-                    continue
-                feeder.ack()  # segment complete: retained rows are consumed
-                run_s = time.perf_counter() - t0
-                # account the compile/hit only now: a faulted attempt above
-                # never compiled, and must not poison the perf counters
-                self.engine_cache.record(compile_key, cache_hit)
+                    # only this segment's rounds ever reach the device:
+                    # stream residency stays O(segment), not O(R)
+                    seg_stream = {k: jnp.asarray(v) for k, v in rows.items()}
+                    if bucket_rounds > seg_len:
+                        # bucket padding: repeat the last item (inert
+                        # schedule rounds never admit it, so state/metrics
+                        # are untouched)
+                        seg_stream = {
+                            k: jnp.concatenate(
+                                [v, jnp.repeat(v[-1:], bucket_rounds - seg_len, axis=0)]
+                            )
+                            for k, v in seg_stream.items()
+                        }
+                    # overlap: pull segment k+1 on the host while k computes
+                    if R is None or seg_end < R:
+                        nxt = self._segment_end(seg_end, R, events, segment_rounds)
+                        feeder.prefetch(nxt - seg_end)
+                    # segment-constant penalty extras (MAS Ω/ref): re-read
+                    # at every boundary so a re-plan refresh is picked up;
+                    # rides the compiled scan as an argument, never a
+                    # retrace
+                    penalty = (
+                        self._split_penalty_cached(bounds)
+                        if engine.penalty_fn is not None else None
+                    )
+                    try:
+                        final_state, ys = self._execute_segment(
+                            engine, state, seg_stream, supervisor_cfg,
+                            fault_round, fault_budget_scale, plan, cursor, seg_end,
+                            budget, penalty,
+                        )
+                        faults_at_cursor = 0
+                    except DeviceLossError as e:
+                        # Re-run this segment from the same cursor — state
+                        # is unchanged and the feeder re-serves the retained
+                        # rows, so the stream stays exactly-once. Injected
+                        # faults fire once; a genuine device loss may not
+                        # have gone through a Supervisor, so make sure a
+                        # shrink was requested, and bail out if shrinking
+                        # stops making progress.
+                        feeder.rewind()
+                        if fault_round is not None:
+                            pending_faults.remove(fault_round)
+                        num_faults += 1
+                        faults_at_cursor += 1
+                        if self._pending_budget is None:
+                            self.fatal_handler(fault_budget_scale)(e)
+                        if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
+                            raise
+                        continue
+                    feeder.ack()  # segment complete: retained rows consumed
+                    run_s = time.perf_counter() - t0
+                    # account the compile/hit only now: a faulted attempt
+                    # above never compiled, and must not poison the perf
+                    # counters
+                    self.engine_cache.record(compile_key, cache_hit)
 
                 ys = {k: v[:seg_len] for k, v in ys.items()}  # drop bucket padding
                 stage_params = list(final_state[0])
@@ -744,8 +923,13 @@ class ElasticStreamTrainer:
                 loss_all.append(np.asarray(ys["loss"]))
                 admitted_all.append(admitted)
                 cursor = seg_end
+                # hand the segment to the driver; a _STOP reply ends the
+                # run at this boundary with everything consumed accounted
+                if (yield segments[-1]) is _STOP:
+                    break
         finally:
             feeder.close()
+            self._feeder = None
 
         acc_cat = np.concatenate(acc_all) if acc_all else np.zeros(0)
         admitted_cat = np.concatenate(admitted_all) if admitted_all else np.zeros(0)
@@ -985,13 +1169,19 @@ class ElasticStreamTrainer:
     @staticmethod
     def _segment_end(cursor, R, events, segment_rounds) -> int:
         """Next segment boundary; ``R is None`` (unknown stream end) relies
-        on ``segment_rounds``, which ``run_stream`` defaults for that case."""
-        end = R if R is not None else cursor + segment_rounds
+        on ``segment_rounds``, which ``run_stream`` defaults for that case.
+        A callable ``segment_rounds`` is re-evaluated here, at every
+        boundary — dynamic segment sizing (clamped to ≥ 1 so the loop
+        always makes progress)."""
+        cap = segment_rounds(cursor) if callable(segment_rounds) else segment_rounds
+        if cap is not None:
+            cap = max(1, int(cap))
+        end = R if R is not None else cursor + cap
         for e in events:
             if cursor < e.round < end:
                 end = e.round
-        if segment_rounds is not None:
-            end = min(end, cursor + segment_rounds)
+        if cap is not None:
+            end = min(end, cursor + cap)
         return end
 
 

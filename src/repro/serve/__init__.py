@@ -1,0 +1,29 @@
+"""repro.serve: multi-tenant online continual learning on one device.
+
+``FerretServer`` admits N independent tenant sessions — each its own
+stream, OCL algorithm, and elastic memory share — multiplexed onto one
+shared bucketed ``EngineCache`` (same-geometry tenants reuse compiled
+engines), with per-tenant admission control (``TenantFeed``), a global
+``MemoryPool`` re-divided live as tenants join and leave, and a segment
+-granular ``Scheduler`` deciding who runs next.
+"""
+
+from repro.serve.admission import TenantFeed
+from repro.serve.pool import MemoryPool
+from repro.serve.scheduler import (
+    DeficitRoundRobinScheduler,
+    RoundRobinScheduler,
+    Scheduler,
+)
+from repro.serve.server import FerretServer, ServedSegment, TenantHandle
+
+__all__ = [
+    "DeficitRoundRobinScheduler",
+    "FerretServer",
+    "MemoryPool",
+    "RoundRobinScheduler",
+    "Scheduler",
+    "ServedSegment",
+    "TenantFeed",
+    "TenantHandle",
+]

@@ -1,0 +1,141 @@
+"""Admission control: bounded push-queues feeding tenant streams.
+
+A ``TenantFeed`` is the producer-facing edge of the multi-tenant server:
+clients ``push`` per-round batches, the serving side consumes the feed as
+an ordinary ``StreamSource``. The queue depth is bounded — when a tenant's
+feed outruns its share of the device, the admission ``policy`` decides
+what gives:
+
+- ``"reject"``      — ``push`` returns ``False``; the producer backs off
+                      (backpressure surfaces at the edge).
+- ``"drop_oldest"`` — the stalest *queued* round is evicted to make room;
+                      in OCL terms the tenant skips forward to fresher
+                      data (the paper's stream-pressure regime: a learner
+                      that falls behind trains on what is still current).
+- ``"drop_newest"`` — the incoming round is dropped, the queue keeps its
+                      backlog (arrival-order fidelity over freshness).
+
+Every queued round carries its arrival timestamp; the server pops the
+timestamps of consumed rounds segment by segment to report per-round
+serving latency (arrival → segment completion). Rounds already handed to
+a trainer are never evicted — exactly-once consumption is preserved by
+the trainer's replay-buffered feeder on top of this queue.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api.streams import Batch, StreamSource
+
+_POLICIES = ("reject", "drop_oldest", "drop_newest")
+
+
+class TenantFeed(StreamSource):
+    """A bounded, thread-safe push queue exposed as a ``StreamSource``.
+
+    ``take`` blocks until at least one round is queued (or the feed is
+    closed) and then returns *what is available* up to ``n`` — it never
+    waits for a full segment, so a scheduler sizing segments to
+    ``available_rounds()`` stays non-blocking. ``length`` is ``None``
+    (live feed); ``remaining`` becomes known once the feed is closed.
+    """
+
+    def __init__(self, max_rounds: int = 64, policy: str = "reject"):
+        if max_rounds < 1:
+            raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+        if policy not in _POLICIES:
+            raise ValueError(
+                f"unknown admission policy {policy!r}; choose from {_POLICIES}"
+            )
+        self.max_rounds = int(max_rounds)
+        self.policy = policy
+        self._rows: collections.deque = collections.deque()
+        self._arrivals: collections.deque = collections.deque()  # ts per queued round
+        self._consumed_arrivals: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._closed = False
+        self.pushed = 0  # rounds accepted into the queue
+        self.dropped = 0  # rounds rejected or evicted by the policy
+
+    # -- producer side -----------------------------------------------------
+    def push(self, row: Batch) -> bool:
+        """Queue one round ``{field: (b, ...)}``; ``False`` if admission
+        dropped it (``reject``/``drop_newest``) or evicted another for it
+        (``drop_oldest`` still returns ``True`` — *this* round got in)."""
+        now = time.perf_counter()
+        with self._not_empty:
+            if self._closed:
+                raise RuntimeError("push() on a closed TenantFeed")
+            if len(self._rows) >= self.max_rounds:
+                self.dropped += 1
+                if self.policy in ("reject", "drop_newest"):
+                    return False
+                self._rows.popleft()  # drop_oldest: evict the stalest round
+                self._arrivals.popleft()
+            self._rows.append({k: np.asarray(v) for k, v in row.items()})
+            self._arrivals.append(now)
+            self.pushed += 1
+            self._not_empty.notify_all()
+            return True
+
+    def push_many(self, rows: Dict[str, np.ndarray]) -> int:
+        """Push a stacked ``(R, b, ...)`` burst round by round; returns how
+        many were admitted."""
+        n = next(iter(rows.values())).shape[0]
+        admitted = 0
+        for m in range(n):
+            admitted += bool(self.push({k: v[m] for k, v in rows.items()}))
+        return admitted
+
+    def close(self) -> None:
+        """No more pushes; consumers drain what is queued, then end."""
+        with self._not_empty:
+            self._closed = True
+            self._not_empty.notify_all()
+
+    # -- observability -----------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def available_rounds(self) -> int:
+        """Rounds queued right now (what a ``take`` would get unblocked)."""
+        with self._lock:
+            return len(self._rows)
+
+    def pop_consumed_arrivals(self, n: int) -> List[float]:
+        """Arrival timestamps of the ``n`` oldest consumed rounds (FIFO —
+        consumption order equals completion order per tenant, so the
+        server calls this once per completed segment)."""
+        with self._lock:
+            take = min(n, len(self._consumed_arrivals))
+            return [self._consumed_arrivals.popleft() for _ in range(take)]
+
+    # -- StreamSource protocol ---------------------------------------------
+    @property
+    def length(self) -> Optional[int]:
+        return None  # live feed: total length is unknowable up front
+
+    @property
+    def remaining(self) -> Optional[int]:
+        with self._lock:
+            return len(self._rows) if self._closed else None
+
+    def take(self, n: int) -> Optional[Batch]:
+        with self._not_empty:
+            while not self._rows and not self._closed:
+                self._not_empty.wait()
+            if not self._rows:
+                return None  # closed and drained
+            m = min(n, len(self._rows))
+            rows = [self._rows.popleft() for _ in range(m)]
+            for _ in range(m):
+                self._consumed_arrivals.append(self._arrivals.popleft())
+            return {k: np.stack([r[k] for r in rows]) for k in rows[0]}

@@ -1,0 +1,52 @@
+"""The global device-memory pool, divided among live tenants by weight.
+
+One number — the device's memory budget — is split into per-tenant shares
+proportional to tenant weight. Joins and leaves re-divide the pool; the
+server pushes the new shares into every live tenant's elastic trainer
+(``request_budget``), which re-enters the Alg. 2+3 planner at the next
+segment boundary. An infinite pool (the Ferret_M+ regime) hands every
+tenant an unconstrained share.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+
+class MemoryPool:
+    """Weighted proportional shares of one memory budget."""
+
+    def __init__(self, budget_bytes: float = math.inf):
+        if budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be > 0, got {budget_bytes}")
+        self.budget_bytes = float(budget_bytes)
+        self._weights: Dict[str, float] = {}  # insertion-ordered
+
+    @property
+    def tenants(self) -> List[str]:
+        return list(self._weights)
+
+    def join(self, name: str, weight: float = 1.0) -> float:
+        """Add a tenant; returns its share under the new division."""
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        if name in self._weights:
+            raise ValueError(f"tenant {name!r} already holds a pool share")
+        self._weights[name] = float(weight)
+        return self.share(name)
+
+    def leave(self, name: str) -> None:
+        """Release a tenant's share back to the pool (re-divided among the
+        rest)."""
+        del self._weights[name]
+
+    def share(self, name: str) -> float:
+        """``name``'s current share in bytes (inf under an infinite pool)."""
+        weight = self._weights[name]
+        if math.isinf(self.budget_bytes):
+            return math.inf
+        return self.budget_bytes * weight / sum(self._weights.values())
+
+    def shares(self) -> Dict[str, float]:
+        return {name: self.share(name) for name in self._weights}

@@ -1,0 +1,87 @@
+"""Tenant schedulers: which ready tenant runs its next segment.
+
+The server asks ``select(ready, weights)`` once per serving decision,
+runs one segment for the chosen tenant, and reports the consumed rounds
+back through ``charge``. Segments are the scheduling quantum — a tenant
+holds the device for exactly one segment, so reaction latency to joins,
+leaves, and budget changes is bounded by the segment length.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class Scheduler:
+    """Scheduler protocol; implementations must be deterministic given the
+    same call sequence (the serve loop is replayable)."""
+
+    def select(self, ready: List[str], weights: Dict[str, float]) -> str:
+        """Pick the next tenant from ``ready`` (non-empty, admission
+        order)."""
+        raise NotImplementedError
+
+    def charge(self, name: str, rounds: int) -> None:
+        """Account ``rounds`` consumed by ``name``'s completed segment."""
+
+    def forget(self, name: str) -> None:
+        """Drop any per-tenant state (the tenant left or finished)."""
+
+
+class RoundRobinScheduler(Scheduler):
+    """Cycle through ready tenants in admission order, ignoring weights."""
+
+    def __init__(self) -> None:
+        self._last: str = ""
+
+    def select(self, ready: List[str], weights: Dict[str, float]) -> str:
+        if self._last in ready:
+            pick = ready[(ready.index(self._last) + 1) % len(ready)]
+        else:
+            pick = ready[0]
+        self._last = pick
+        return pick
+
+
+class DeficitRoundRobinScheduler(Scheduler):
+    """Weighted fair scheduling at segment granularity (deficit-style).
+
+    Each tenant carries a *virtual service* counter: the rounds it has
+    consumed, normalized by its weight. The ready tenant furthest behind
+    (smallest ``service / weight`` — equivalently, the largest deficit
+    against a weight-proportional ideal) runs next and is charged what it
+    actually consumed. A bursty tenant cannot starve a light one — the
+    light tenant's normalized service stays behind until it wins — and
+    weights skew sustained throughput proportionally. A tenant that joins
+    late starts *at* the current virtual time instead of at zero, so it
+    gets its fair share going forward without a catch-up burst.
+
+    ``quantum`` only seeds the tie-break granularity kept for API
+    compatibility; service accounting is driven by ``charge``.
+    """
+
+    def __init__(self, quantum: float = 8.0):
+        if quantum <= 0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        self.quantum = float(quantum)
+        self._service: Dict[str, float] = {}  # weight-normalized rounds served
+        self._weight: Dict[str, float] = {}
+
+    def select(self, ready: List[str], weights: Dict[str, float]) -> str:
+        known = [n for n in ready if n in self._service]
+        floor = min((self._service[n] for n in known), default=0.0)
+        for name in ready:
+            self._weight[name] = weights.get(name, 1.0)
+            if name not in self._service:
+                self._service[name] = floor  # join at current virtual time
+        # min is stable: ties resolve to admission order (ready's order)
+        return min(ready, key=lambda n: self._service[n])
+
+    def charge(self, name: str, rounds: int) -> None:
+        self._service[name] = (
+            self._service.get(name, 0.0) + float(rounds) / self._weight.get(name, 1.0)
+        )
+
+    def forget(self, name: str) -> None:
+        self._service.pop(name, None)
+        self._weight.pop(name, None)

@@ -1,0 +1,512 @@
+"""FerretServer: N tenant OCL sessions multiplexed onto one device.
+
+Each tenant is an independent ``FerretSession`` — its own stream, its own
+OCL algorithm, its own elastic memory share — opened as a *steppable*
+elastic run (``ElasticRun``). The server owns what is shared:
+
+- one bucketed ``EngineCache``: same-geometry tenants (equal model config,
+  algorithm fingerprint, optimizer fingerprint, lr, compensation, and
+  planned partition) reuse one compiled engine; the engine's ``exec_lock``
+  keeps concurrent use race-free.
+- one ``MemoryPool``: the device budget divided by tenant weight and
+  re-divided live on every join/leave/finish — running tenants pick the
+  new share up through ``request_budget`` (the elastic trainer's
+  segment-boundary re-plan path, Alg. 2+3).
+- one ``Scheduler``: each serving decision runs exactly one segment of
+  one ready tenant, so the device stays saturated under bursty arrival
+  while reaction latency stays bounded by the segment length.
+
+Tenants fed by a ``TenantFeed`` get admission control (bounded queue,
+reject/drop policy) and non-blocking scheduling: segments are sized to
+what the feed has actually buffered, so a tenant with an open-but-idle
+feed never stalls the serve loop. Per-round serving latency (arrival →
+segment completion) is reported per segment from the feed's arrival
+timestamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.api.results import StreamResult
+from repro.api.session import FerretSession
+from repro.api.streams import BufferedStreamSource, LimitedStreamSource, StreamSource
+from repro.core.ferret import EngineCache
+from repro.models.config import ModelConfig
+from repro.serve.admission import TenantFeed
+from repro.serve.pool import MemoryPool
+from repro.serve.scheduler import DeficitRoundRobinScheduler, Scheduler
+
+Batch = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class ServedSegment:
+    """One scheduling decision's outcome: one segment of one tenant."""
+
+    tenant: str
+    report: Any  # runtime.SegmentReport
+    round_latencies_s: Optional[List[float]]  # arrival → completion (feed tenants)
+
+
+class _Tenant:
+    """Internal per-tenant state; the public face is ``TenantHandle``."""
+
+    def __init__(
+        self, name, weight, session, tenant_feed, segment_rounds, max_rounds,
+        supervisor_cfg,
+    ):
+        self.name = name
+        self.weight = weight
+        self.session: FerretSession = session
+        self.tenant_feed: Optional[TenantFeed] = tenant_feed
+        self.segment_rounds = segment_rounds
+        self.max_rounds = max_rounds
+        self.supervisor_cfg = supervisor_cfg
+        self.run = None  # ElasticRun once started (lazily, on first ready step)
+        self.stepping = False  # a segment is executing outside the server lock
+        self.done = False
+        self.rounds_served = 0
+        self.latencies_s: List[float] = []
+
+
+class TenantHandle:
+    """Thin per-tenant view over the underlying ``FerretSession``.
+
+    The handle is how a client talks to its admitted tenant: push rounds
+    into its feed, watch its budget/progress, leave, and read the final
+    ``StreamResult``. It holds no state of its own — everything delegates
+    to the server, so a handle stays valid after the tenant finishes.
+    """
+
+    def __init__(self, server: "FerretServer", name: str):
+        self._server = server
+        self.name = name
+
+    @property
+    def session(self) -> FerretSession:
+        return self._server._tenant(self.name).session
+
+    @property
+    def budget_bytes(self) -> float:
+        """The tenant's current share of the memory pool."""
+        return self._server.pool.share(self.name)
+
+    @property
+    def done(self) -> bool:
+        with self._server._lock:
+            return self.name in self._server._results
+
+    @property
+    def rounds_served(self) -> int:
+        with self._server._lock:
+            t = self._server._tenants.get(self.name)
+            if t is not None:
+                return t.rounds_served
+        res = self.result()
+        return 0 if res is None else res.rounds
+
+    @property
+    def round_latencies_s(self) -> List[float]:
+        """Arrival → completion latency of every served round (feed
+        tenants; empty for pull sources, which have no arrival times)."""
+        with self._server._lock:
+            t = self._server._tenants.get(self.name)
+            if t is not None:
+                return list(t.latencies_s)
+            return list(self._server._latencies.get(self.name, ()))
+
+    # -- feed passthrough --------------------------------------------------
+    def push(self, row: Batch) -> bool:
+        return self._feed().push(row)
+
+    def push_many(self, rows: Batch) -> int:
+        return self._feed().push_many(rows)
+
+    def close_feed(self) -> None:
+        self._feed().close()
+
+    def _feed(self) -> TenantFeed:
+        feed = self._server._tenant(self.name).tenant_feed
+        if feed is None:
+            raise RuntimeError(
+                f"tenant {self.name!r} is not fed by a TenantFeed — it pulls "
+                "from the stream it was admitted with"
+            )
+        return feed
+
+    # -- lifecycle ---------------------------------------------------------
+    def leave(self) -> StreamResult:
+        return self._server.leave(self.name)
+
+    def result(self) -> Optional[StreamResult]:
+        with self._server._lock:
+            return self._server._results.get(self.name)
+
+    def summary(self) -> str:
+        res = self.result()
+        if res is not None:
+            return f"{self.name}: {res.summary()}"
+        return (
+            f"{self.name}: serving, rounds={self.rounds_served} "
+            f"budget={self._server.pool.share(self.name) / 2**20:.1f}MiB"
+            if math.isfinite(self._server.pool.budget_bytes)
+            else f"{self.name}: serving, rounds={self.rounds_served} budget=inf"
+        )
+
+
+class FerretServer:
+    """Admit, schedule, and elastically budget N concurrent OCL tenants.
+
+        server = FerretServer(budget_bytes=8 * 2**30)
+        a = server.admit(model_cfg, algorithm="er", stream=feed_a)
+        b = server.admit(model_cfg, algorithm="er", stream=arrays_b)
+        ...
+        results = server.serve()          # drive everything to completion
+
+    ``admit`` with ``stream=None`` creates a ``TenantFeed`` the client
+    pushes rounds into through the returned handle. The serve loop is
+    single-threaded by design — ``step()`` is one scheduling decision —
+    but admission, pushes, and ``leave`` are safe from other threads, and
+    multiple threads may drive ``step()`` concurrently (distinct tenants
+    execute in parallel; same-geometry tenants serialize on their shared
+    engine's ``exec_lock``).
+    """
+
+    def __init__(
+        self,
+        budget_bytes: float = math.inf,
+        *,
+        engine_cache: Optional[EngineCache] = None,
+        scheduler: Optional[Scheduler] = None,
+        segment_rounds: int = 8,
+        smoke: bool = True,
+    ):
+        self.engine_cache = engine_cache or EngineCache()
+        self.pool = MemoryPool(budget_bytes)
+        self.scheduler = scheduler or DeficitRoundRobinScheduler(
+            quantum=float(segment_rounds)
+        )
+        self.segment_rounds = int(segment_rounds)
+        self.smoke = smoke
+        self._tenants: Dict[str, _Tenant] = {}  # insertion = admission order
+        self._results: Dict[str, StreamResult] = {}
+        self._latencies: Dict[str, List[float]] = {}
+        self._model_cache: Dict[Any, ModelConfig] = {}
+        self._lock = threading.RLock()
+        self._counter = 0
+
+    # -- admission ---------------------------------------------------------
+    def admit(
+        self,
+        model: Union[ModelConfig, str],
+        algorithm: Any = "vanilla",
+        stream: Optional[Union[StreamSource, Batch]] = None,
+        *,
+        name: Optional[str] = None,
+        weight: float = 1.0,
+        batch: Optional[int] = None,
+        seq: Optional[int] = None,
+        lr: float = 5e-3,
+        compensation: Any = None,
+        ocl: Any = None,
+        max_workers: Optional[int] = 8,
+        max_stages: Optional[int] = None,
+        segment_rounds: Optional[int] = None,
+        max_rounds: Optional[int] = None,
+        supervisor_cfg: Any = None,
+        params: Any = None,
+        seed: int = 0,
+    ) -> TenantHandle:
+        """Admit one tenant session; the pool re-divides immediately.
+
+        ``stream=None`` creates a ``TenantFeed`` (push-fed tenant; use
+        ``handle.push``/``push_many``/``close_feed``). ``max_rounds``
+        bounds the tenant's run; ``segment_rounds`` overrides the server's
+        scheduling quantum for this tenant. ``supervisor_cfg`` runs the
+        tenant's segments supervised (checkpoints, NaN rollback) in its
+        own per-tenant checkpoint namespace.
+        """
+        with self._lock:
+            if name is None:
+                name = f"tenant{self._counter}"
+            self._counter += 1
+            if name in self._tenants or name in self._results:
+                raise ValueError(f"tenant name {name!r} already in use")
+            model_cfg = self._intern_model(model)
+            tenant_feed = stream if isinstance(stream, TenantFeed) else None
+            if stream is None:
+                tenant_feed = TenantFeed()
+                stream = tenant_feed
+            share = self.pool.join(name, weight)
+            try:
+                session = FerretSession(
+                    model_cfg, budget=share, algorithm=algorithm, stream=stream,
+                    batch=batch, seq=seq, lr=lr, compensation=compensation,
+                    ocl=ocl, max_workers=max_workers, max_stages=max_stages,
+                    params=params, seed=seed, smoke=self.smoke,
+                )
+            except Exception:
+                self.pool.leave(name)
+                raise
+            if supervisor_cfg is not None:
+                # per-tenant checkpoint namespace: same cfg for every
+                # tenant must not collide on one directory
+                supervisor_cfg = dataclasses.replace(
+                    supervisor_cfg,
+                    checkpoint_dir=os.path.join(
+                        supervisor_cfg.checkpoint_dir, f"tenant_{name}"
+                    ),
+                )
+            tenant = _Tenant(
+                name=name, weight=weight, session=session,
+                tenant_feed=tenant_feed,
+                segment_rounds=int(segment_rounds or self.segment_rounds),
+                max_rounds=max_rounds, supervisor_cfg=supervisor_cfg,
+            )
+            self._tenants[name] = tenant
+            self._rebalance_locked()
+            return TenantHandle(self, name)
+
+    def leave(self, name: str) -> StreamResult:
+        """Remove a tenant now: its run stops at the current segment
+        boundary (everything consumed stays accounted), its pool share is
+        re-divided among the rest, and its final result is returned."""
+        with self._lock:
+            tenant = self._tenants.get(name)
+            if tenant is None:
+                if name in self._results:
+                    return self._results[name]
+                raise KeyError(f"unknown tenant {name!r}")
+            if tenant.stepping:
+                raise RuntimeError(
+                    f"tenant {name!r} is mid-segment — leave() between steps"
+                )
+            tenant.done = True  # no further scheduling
+        raw = tenant.run.stop() if tenant.run is not None else None
+        self._finalize(tenant, raw)
+        return self._results[name]
+
+    # -- scheduling --------------------------------------------------------
+    def step(self) -> Optional[ServedSegment]:
+        """One scheduling decision: run one segment of one ready tenant.
+
+        Returns ``None`` when no tenant is ready (every live feed is open
+        but empty) or when the stepped tenant turned out to be finished —
+        check ``active_tenants`` to distinguish idle from done.
+        """
+        with self._lock:
+            ready = [t.name for t in self._tenants.values() if self._ready(t)]
+            if not ready:
+                return None
+            weights = {t.name: t.weight for t in self._tenants.values()}
+            pick = self.scheduler.select(ready, weights)
+            tenant = self._tenants[pick]
+            tenant.stepping = True
+        try:
+            return self._step_tenant(tenant)
+        finally:
+            tenant.stepping = False
+
+    def serve(
+        self,
+        *,
+        max_segments: Optional[int] = None,
+        timeout_s: Optional[float] = None,
+        poll_s: float = 0.005,
+    ) -> Dict[str, StreamResult]:
+        """Drive the scheduler until every tenant finishes (or a cap hits).
+
+        Tenants with open live feeds never finish on their own — close
+        their feeds (or pass ``max_segments``/``timeout_s``) to bound the
+        call. Returns the results of every finished tenant so far.
+        """
+        served = 0
+        t0 = time.perf_counter()
+        while self._tenants:
+            if max_segments is not None and served >= max_segments:
+                break
+            if timeout_s is not None and time.perf_counter() - t0 > timeout_s:
+                break
+            if self.step() is not None:
+                served += 1
+            elif self._tenants:
+                time.sleep(poll_s)  # everyone is waiting on an open feed
+        return self.results()
+
+    # -- observability -----------------------------------------------------
+    def results(self) -> Dict[str, StreamResult]:
+        """Final ``StreamResult`` per finished tenant (admission order)."""
+        with self._lock:
+            return dict(self._results)
+
+    @property
+    def active_tenants(self) -> List[str]:
+        with self._lock:
+            return list(self._tenants)
+
+    @property
+    def compile_count(self) -> int:
+        """Fresh engine compiles across all tenants — the same-geometry
+        sharing headline (< tenant count when geometry is shared)."""
+        return self.engine_cache.misses
+
+    # -- internals ---------------------------------------------------------
+    def _tenant(self, name: str) -> _Tenant:
+        with self._lock:
+            tenant = self._tenants.get(name)
+            if tenant is None:
+                raise KeyError(f"unknown (or finished) tenant {name!r}")
+            return tenant
+
+    def _intern_model(self, model: Union[ModelConfig, str]) -> ModelConfig:
+        if not isinstance(model, str):
+            return model
+        key = (model, self.smoke)
+        cached = self._model_cache.get(key)
+        if cached is None:
+            from repro.models.registry import get_config
+
+            cached = get_config(model, smoke=self.smoke)
+            self._model_cache[key] = cached
+        return cached
+
+    def _rebalance_locked(self) -> None:
+        """Push the pool's current division into every live tenant."""
+        for tenant in self._tenants.values():
+            if tenant.done:
+                continue
+            share = self.pool.share(tenant.name)
+            if tenant.run is not None:
+                # running: re-plan at the next segment boundary
+                tenant.run.trainer.request_budget(share)
+            else:
+                # not started: the trainer it will build reads this config
+                tenant.session.ferret_cfg = dataclasses.replace(
+                    tenant.session.ferret_cfg, budget_bytes=share
+                )
+
+    def _ready(self, tenant: _Tenant) -> bool:
+        """Can one segment run for this tenant without blocking the loop?"""
+        if tenant.done or tenant.stepping:
+            return False
+        if tenant.tenant_feed is None:
+            return True  # pull source: take() resolves immediately (or ends)
+        if tenant.tenant_feed.closed:
+            return True  # drains what is buffered, then finishes
+        avail = self._available(tenant)
+        return avail is None or avail > 0
+
+    def _available(self, tenant: _Tenant) -> Optional[int]:
+        """Rounds obtainable for this tenant without blocking: everything
+        buffered along the source chain plus the feed's queue. ``None``
+        when the chain bottoms out in an unbounded pull source (no queue
+        to observe — assume available)."""
+        n = 0
+        if tenant.run is not None:
+            feeder = tenant.run.trainer._feeder
+            if feeder is None:
+                return None  # between open and first pull
+            source: Any = feeder
+        else:
+            source = tenant.session._live_stream or tenant.session.stream
+        while True:
+            if isinstance(source, BufferedStreamSource):
+                n += source.pending_round_count()
+                source = source.source
+            elif isinstance(source, LimitedStreamSource):
+                source = source.source
+            elif isinstance(source, TenantFeed):
+                return n + source.available_rounds()
+            else:
+                rem = source.remaining
+                return None if rem is None else n + rem
+
+    def _segment_cap(self, tenant: _Tenant) -> Callable[[int], int]:
+        """Dynamic segment sizing: at every boundary, take what the feed
+        has buffered (≥ 1 so the run can observe exhaustion), capped at
+        the tenant's scheduling quantum."""
+        base = tenant.segment_rounds
+
+        def cap(cursor: int, tenant=tenant, base=base) -> int:
+            avail = self._available(tenant)
+            if avail is None:
+                return base
+            return max(1, min(base, avail))
+
+        return cap
+
+    def _step_tenant(self, tenant: _Tenant) -> Optional[ServedSegment]:
+        # executes OUTSIDE the server lock: one tenant's segment never
+        # blocks admissions, pushes, or other tenants' steps
+        if tenant.run is None and not self._start_tenant(tenant):
+            return None
+        report = tenant.run.step()
+        t_done = time.perf_counter()
+        if report is None:
+            self._finalize(tenant, tenant.run.result())
+            return None
+        seg_len = report.end - report.start
+        latencies = None
+        if tenant.tenant_feed is not None:
+            arrivals = tenant.tenant_feed.pop_consumed_arrivals(seg_len)
+            latencies = [t_done - a for a in arrivals]
+        with self._lock:
+            tenant.rounds_served += seg_len
+            if latencies:
+                tenant.latencies_s.extend(latencies)
+            self.scheduler.charge(tenant.name, seg_len)
+        return ServedSegment(
+            tenant=tenant.name, report=report, round_latencies_s=latencies
+        )
+
+    def _start_tenant(self, tenant: _Tenant) -> bool:
+        """Lazy start: open the steppable run on first ready step (shape
+        inference peeks the feed, so starting earlier could block)."""
+        try:
+            tenant.run = tenant.session.open_stream_run(
+                engine_cache=self.engine_cache,
+                max_rounds=tenant.max_rounds,
+                segment_rounds=self._segment_cap(tenant),
+                supervisor_cfg=tenant.supervisor_cfg,
+            )
+        except ValueError:
+            # an already-exhausted feed with no batch/seq to infer from:
+            # nothing was consumed, nothing can run — finish empty
+            self._finalize(tenant, None)
+            return False
+        return True
+
+    def _finalize(self, tenant: _Tenant, raw: Any) -> None:
+        from repro.api.runners import stream_result_from_elastic
+
+        algo = tenant.session.algorithm.name
+        if raw is not None:
+            result = stream_result_from_elastic(
+                raw, runner="serve", algorithm=algo,
+                model_cfg=tenant.session.model_cfg,
+            )
+        else:
+            result = StreamResult(
+                runner="serve", algorithm=algo, online_acc=0.0,
+                online_acc_curve=np.zeros(0), losses=np.zeros(0), rounds=0,
+                admitted_frac=0.0,
+                memory_bytes=float(tenant.session.model_cfg.param_count()) * 4.0,
+                empirical_rate=0.0, final_params=None,
+            )
+        with self._lock:
+            tenant.done = True
+            self._results[tenant.name] = result
+            self._latencies[tenant.name] = list(tenant.latencies_s)
+            self._tenants.pop(tenant.name, None)
+            if tenant.name in self.pool.tenants:
+                self.pool.leave(tenant.name)
+            self.scheduler.forget(tenant.name)
+            self._rebalance_locked()  # the freed share grows everyone else

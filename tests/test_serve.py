@@ -1,0 +1,351 @@
+"""Multi-tenant serving: shared engine cache, admission, pool, scheduler.
+
+Covers the serving tentpole's guarantees:
+(a) two *threads* driving separately-constructed same-geometry sessions
+    against one ``EngineCache`` compile exactly one engine and do not
+    cross-talk — each concurrent result is bit-identical to its solo run;
+(b) the server consumes every tenant's stream exactly once (counting
+    sources + a push-fed ``TenantFeed``), with engine compiles < tenants;
+(c) pool-rebalance parity: a tenant that was admitted alongside others
+    who then left runs identically to the same tenant admitted alone;
+plus the satellite units: ``TenantFeed`` admission policies, ``MemoryPool``
+share math, scheduler fairness, the single deprecating raw-dict stream
+entry point, and the typed ``StreamResult`` accessors.
+"""
+
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import FerretSession
+from repro.api.results import StreamResult
+from repro.api.streams import ArrayStreamSource, StreamSource, coerce_trainer_stream
+from repro.core.compensation import CompensationConfig
+from repro.core.ferret import EngineCache
+from repro.models.config import ModelConfig
+from repro.ocl.streams import StreamConfig, make_stream
+from repro.serve import (
+    DeficitRoundRobinScheduler,
+    FerretServer,
+    MemoryPool,
+    RoundRobinScheduler,
+    TenantFeed,
+)
+
+BATCH, SEQ, VOCAB = 2, 16, 32
+R_STREAM = 8
+SEGMENT = 4
+
+
+def _model() -> ModelConfig:
+    return ModelConfig(
+        name="serve-test-lm", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+        compute_dtype="float32",
+    )
+
+
+def _stream(length=R_STREAM, seed=0):
+    return make_stream(StreamConfig(
+        kind="drift", modality="tokens", length=length, batch=BATCH,
+        vocab=VOCAB, seq=SEQ, seed=seed,
+    ))
+
+
+def _session(cfg, stream, budget=math.inf, **over):
+    kw = dict(
+        batch=BATCH, seq=SEQ, lr=5e-3, seed=0,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+    kw.update(over)
+    return FerretSession(cfg, budget, "er", stream, **kw)
+
+
+class CountingSource(StreamSource):
+    """Delegating source that counts every round handed out."""
+
+    def __init__(self, arrays):
+        self.inner = ArrayStreamSource(arrays)
+        self.rounds_out = 0
+
+    @property
+    def length(self):
+        return self.inner.length
+
+    @property
+    def remaining(self):
+        return self.inner.remaining
+
+    def take(self, n):
+        got = self.inner.take(n)
+        if got is not None:
+            self.rounds_out += next(iter(got.values())).shape[0]
+        return got
+
+
+# ---------------------------------------------------------------------------
+# (a) concurrent same-geometry sessions share one compiled engine
+# ---------------------------------------------------------------------------
+
+
+def test_shared_cache_two_threads_one_compile_no_crosstalk():
+    cfg = _model()
+    streams = {0: _stream(seed=0), 1: _stream(seed=1)}
+
+    # solo references, each with a private cache
+    solo = {}
+    for i in (0, 1):
+        solo[i] = _session(cfg, streams[i]).run(
+            "elastic", segment_rounds=SEGMENT, engine_cache=EngineCache()
+        )
+
+    shared = EngineCache()
+    out, errs = {}, []
+
+    def drive(i):
+        try:
+            # a separately *constructed* (not shared) session: engine reuse
+            # must come from structural keys, not object identity
+            out[i] = _session(cfg, streams[i]).run(
+                "elastic", segment_rounds=SEGMENT, engine_cache=shared
+            )
+        except Exception as e:  # pragma: no cover - surfaced via errs
+            errs.append(e)
+
+    threads = [threading.Thread(target=drive, args=(i,)) for i in (0, 1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+
+    # one geometry -> one compile across both threads
+    assert shared.misses == 1, shared.stats()
+    assert shared.hits == 2 * (R_STREAM // SEGMENT) - 1, shared.stats()
+    # no cross-talk: concurrent results bit-identical to the solo runs
+    for i in (0, 1):
+        np.testing.assert_array_equal(
+            np.asarray(out[i].losses), np.asarray(solo[i].losses)
+        )
+        np.testing.assert_array_equal(
+            out[i].online_acc_curve, solo[i].online_acc_curve
+        )
+        assert out[i].rounds == R_STREAM
+
+
+# ---------------------------------------------------------------------------
+# (b) the server: exactly-once consumption + engine sharing + latency
+# ---------------------------------------------------------------------------
+
+
+def test_server_exactly_once_sharing_and_latency():
+    cfg = _model()
+    server = FerretServer(budget_bytes=2 * 2**30, segment_rounds=SEGMENT)
+
+    counters = {}
+    for i in ("a", "b"):
+        counters[i] = CountingSource(_stream(seed=ord(i)))
+        server.admit(cfg, "er", counters[i], name=i, batch=BATCH, seq=SEQ,
+                     max_workers=3, max_stages=4)
+    # a third, push-fed tenant of the same geometry
+    c = server.admit(cfg, "er", None, name="c", batch=BATCH, seq=SEQ,
+                     max_workers=3, max_stages=4)
+    rows = _stream(seed=7)
+    assert c.push_many(rows) == R_STREAM
+    c.close_feed()
+
+    results = server.serve(timeout_s=600)
+    assert set(results) == {"a", "b", "c"}
+    for i in ("a", "b"):
+        # every round left the source exactly once and was trained
+        assert counters[i].rounds_out == R_STREAM
+        assert results[i].rounds == R_STREAM
+    assert results["c"].rounds == R_STREAM
+    # same geometry: strictly fewer compiles than tenants (here: one)
+    assert server.compile_count < 3, server.engine_cache.stats()
+    # push-fed tenant: one arrival->completion latency per served round
+    assert len(c.round_latencies_s) == R_STREAM
+    assert all(lat > 0 for lat in c.round_latencies_s)
+    assert not server.active_tenants
+    # results carry the unified typed surface
+    assert results["c"].metrics()["runner"] == "serve"
+
+
+def test_server_supervised_tenant_namespaced_checkpoints(tmp_path):
+    from repro.runtime import SupervisorCfg
+
+    cfg = _model()
+    server = FerretServer(segment_rounds=SEGMENT)
+    sup = SupervisorCfg(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    server.admit(cfg, "er", _stream(seed=5), name="s", batch=BATCH, seq=SEQ,
+                 max_workers=3, max_stages=4, supervisor_cfg=sup)
+    res = server.serve()["s"]
+    assert res.rounds == R_STREAM
+    # checkpoints landed in the tenant's own namespace, not the shared dir
+    assert (tmp_path / "tenant_s").is_dir()
+    assert any((tmp_path / "tenant_s").iterdir())
+
+
+def test_server_leave_midway_keeps_consumed_accounting():
+    cfg = _model()
+    server = FerretServer(segment_rounds=SEGMENT)
+    server.admit(cfg, "er", _stream(length=4 * SEGMENT), name="x",
+                 batch=BATCH, seq=SEQ, max_workers=3, max_stages=4)
+    first = server.step()
+    assert first is not None and first.tenant == "x"
+    res = server.leave("x")
+    # stopped at a segment boundary: exactly the served rounds accounted
+    assert res.rounds == first.report.end - first.report.start
+    assert not server.active_tenants
+    assert server.results()["x"] is res
+
+
+# ---------------------------------------------------------------------------
+# (c) pool-rebalance parity on join/leave
+# ---------------------------------------------------------------------------
+
+
+def test_join_leave_rebalance_parity():
+    cfg = _model()
+    budget = 2 * 2**30
+    stream = _stream(seed=3)
+
+    alone = FerretServer(budget, segment_rounds=SEGMENT)
+    alone.admit(cfg, "er", stream, name="t", batch=BATCH, seq=SEQ,
+                max_workers=3, max_stages=4)
+    ref = alone.serve()["t"]
+
+    crowded = FerretServer(budget, segment_rounds=SEGMENT)
+    crowded.admit(cfg, "er", stream, name="t", batch=BATCH, seq=SEQ,
+                  max_workers=3, max_stages=4)
+    other = crowded.admit(cfg, "er", None, name="other", weight=3.0,
+                          batch=BATCH, seq=SEQ, max_workers=3, max_stages=4)
+    # while `other` holds 3/4 of the pool, `t` plans under a quarter share
+    assert crowded.pool.share("t") == pytest.approx(budget / 4)
+    assert crowded.pool.share("other") == pytest.approx(3 * budget / 4)
+    other.close_feed()  # empty feed: `other` finishes with zero rounds
+    results = crowded.serve()
+    assert results["other"].rounds == 0
+
+    # after the others left, the tenant ran exactly as it would have alone
+    assert crowded.pool.tenants == []
+    got = results["t"]
+    np.testing.assert_array_equal(np.asarray(got.losses), np.asarray(ref.losses))
+    assert got.rounds == ref.rounds == R_STREAM
+    assert got.memory_bytes <= budget
+
+
+# ---------------------------------------------------------------------------
+# satellite units (no device work)
+# ---------------------------------------------------------------------------
+
+
+def _row(v=0):
+    return {"tokens": np.full((BATCH, SEQ), v, np.int32)}
+
+
+def test_tenant_feed_reject_policy():
+    feed = TenantFeed(max_rounds=2, policy="reject")
+    assert feed.push(_row(0)) and feed.push(_row(1))
+    assert not feed.push(_row(2))  # full: rejected, producer backs off
+    assert feed.dropped == 1 and feed.pushed == 2
+    assert feed.available_rounds() == 2
+    got = feed.take(8)
+    assert got["tokens"].shape[0] == 2  # what is available, never blocks
+    assert [int(t[0, 0]) for t in got["tokens"]] == [0, 1]
+    assert len(feed.pop_consumed_arrivals(2)) == 2
+    feed.close()
+    assert feed.take(1) is None and feed.remaining == 0
+    with pytest.raises(RuntimeError):
+        feed.push(_row(3))
+
+
+def test_tenant_feed_drop_policies():
+    old = TenantFeed(max_rounds=2, policy="drop_oldest")
+    assert old.push(_row(0)) and old.push(_row(1))
+    assert old.push(_row(2))  # evicts round 0; the new round got in
+    assert [int(t[0, 0]) for t in old.take(4)["tokens"]] == [1, 2]
+
+    new = TenantFeed(max_rounds=2, policy="drop_newest")
+    new.push(_row(0)), new.push(_row(1))
+    assert not new.push(_row(2))  # incoming dropped, backlog kept
+    assert [int(t[0, 0]) for t in new.take(4)["tokens"]] == [0, 1]
+
+    with pytest.raises(ValueError):
+        TenantFeed(policy="nope")
+
+
+def test_memory_pool_shares():
+    pool = MemoryPool(100.0)
+    assert pool.join("a") == pytest.approx(100.0)
+    assert pool.join("b", weight=3.0) == pytest.approx(75.0)
+    assert pool.share("a") == pytest.approx(25.0)
+    pool.leave("b")
+    assert pool.shares() == {"a": pytest.approx(100.0)}
+    with pytest.raises(ValueError):
+        pool.join("a")  # duplicate
+    assert math.isinf(MemoryPool().join("x"))
+
+
+def test_schedulers():
+    rr = RoundRobinScheduler()
+    picks = [rr.select(["a", "b", "c"], {}) for _ in range(4)]
+    assert picks == ["a", "b", "c", "a"]
+    assert rr.select(["b", "c"], {}) == "b"  # last=a gone: restart cleanly
+
+    drr = DeficitRoundRobinScheduler(quantum=4.0)
+    weights = {"heavy": 3.0, "light": 1.0}
+    served = {"heavy": 0, "light": 0}
+    for _ in range(20):
+        pick = drr.select(["heavy", "light"], weights)
+        served[pick] += 1
+        drr.charge(pick, 4)
+    # 3:1 weights -> ~3:1 service, and the light tenant is never starved
+    assert served["heavy"] == 15 and served["light"] == 5
+    # a late joiner starts at the current virtual time, not at zero: it
+    # does not monopolize the device to "catch up" on service it missed
+    assert drr.select(["heavy", "light", "late"], weights | {"late": 1.0}) != "late"
+    drr.forget("heavy")
+    assert "heavy" not in drr._service
+
+
+def test_raw_dict_stream_deprecation_single_entry_point():
+    arrays = {"tokens": np.zeros((4, BATCH, SEQ), np.int32)}
+    with pytest.warns(DeprecationWarning, match="FerretTrainer.run_stream"):
+        src = coerce_trainer_stream(arrays, "FerretTrainer.run_stream")
+    assert isinstance(src, ArrayStreamSource)
+    # already a StreamSource: passes through silently, identity preserved
+    import warnings as W
+
+    with W.catch_warnings():
+        W.simplefilter("error")
+        assert coerce_trainer_stream(src, "x") is src
+
+
+def test_stream_result_typed_accessors():
+    res = StreamResult(
+        runner="elastic", algorithm="er", online_acc=0.5,
+        online_acc_curve=np.ones(3), losses=np.ones(3), rounds=3,
+        admitted_frac=1.0, memory_bytes=1024.0, empirical_rate=0.9,
+        final_params=None, engine_cache_hits=2, engine_cache_misses=1,
+        extras={"peak_buffered_rounds": 5, "stream_wait_s": 0.25,
+                "lam_curve": [0.1, 0.2]},
+    )
+    assert res.peak_buffered_rounds == 5
+    assert res.stream_wait_s == 0.25
+    np.testing.assert_allclose(res.lam_curve, [0.1, 0.2])
+    assert res.cache_counts == {"hits": 2, "misses": 1}
+    m = res.metrics()
+    assert m["peak_buffered_rounds"] == 5 and m["rounds"] == 3
+    # absent extras read as empty, not KeyError (the point of the accessors)
+    empty = StreamResult(
+        runner="serve", algorithm="vanilla", online_acc=0.0,
+        online_acc_curve=np.zeros(0), losses=np.zeros(0), rounds=0,
+        admitted_frac=0.0, memory_bytes=0.0, empirical_rate=0.0,
+        final_params=None,
+    )
+    assert empty.peak_buffered_rounds == 0
+    assert empty.lam_curve.size == 0
