@@ -183,6 +183,7 @@ def run(write_json: bool = True) -> dict:
     payload = {
         "bench": "hotpath",
         "backend": jax.default_backend(),
+        "host": C.host_env(),
         "compensation": bench_compensation(),
         "elastic_cache": bench_elastic_switch_cache(),
     }

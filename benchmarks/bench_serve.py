@@ -117,6 +117,7 @@ def run(write_json: bool = True) -> dict:
     rows = [_scenario(cfg, params, n) for n in TENANT_COUNTS]
     payload = {
         "bench": "serve",
+        "host": C.host_env(),
         "rounds_per_tenant": ROUNDS_PER_TENANT,
         "segment_rounds": SEGMENT_ROUNDS,
         "budget_bytes": BUDGET_BYTES,

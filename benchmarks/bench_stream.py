@@ -197,6 +197,7 @@ def run(write_json: bool = True) -> dict:
 
     payload = {
         "bench": "stream",
+        "host": C.host_env(),
         "stream_len": STREAM_LEN,
         "segment_rounds": SEGMENT_ROUNDS,
         "round_bytes": round_bytes,

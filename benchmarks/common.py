@@ -10,6 +10,7 @@ in the paper's tables.
 from __future__ import annotations
 
 import math
+import os
 from typing import Dict, Optional, Union
 
 import jax
@@ -103,3 +104,19 @@ def run_admission_baseline(
 
 def model_bytes(cfg: ModelConfig) -> float:
     return cfg.param_count() * 4.0
+
+
+_HOST_ENV_KEYS = (
+    "JAX_PLATFORMS", "XLA_FLAGS", "LD_PRELOAD", "REPRO_HOST_TUNE",
+    "REPRO_USE_PALLAS", "REPRO_PACK", "REPRO_PACK_BLOCK",
+    "REPRO_SEGMENT_BUCKETS", "REPRO_PROFILE_DIR",
+)
+
+
+def host_env() -> Dict[str, str]:
+    """The host-tuning flags active for this process.
+
+    Recorded into every bench artifact so numbers are comparable across
+    runs — a tcmalloc'd ``scripts/bench.sh`` run and a bare ``python -m``
+    run must never be confused for each other."""
+    return {k: os.environ[k] for k in _HOST_ENV_KEYS if k in os.environ}

@@ -136,6 +136,7 @@ def run(write_json: bool = True) -> dict:
 
     payload = {
         "bench": "elastic_switch",
+        "host": C.host_env(),
         "stream_len": STREAM_LEN,
         "switches": list(SWITCHES),
         "budget_fractions": list(FRACTIONS),

@@ -35,7 +35,7 @@ from repro.api.streams import (
 from repro.core import planner as planner_lib
 from repro.core.compensation import CompensationConfig
 from repro.core.ferret import FerretConfig
-from repro.core.profiler import ModelProfile, analytic_profile
+from repro.core.profiler import ModelProfile, profile_for
 from repro.models.config import ModelConfig
 from repro.ocl.algorithms import OCLConfig
 from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
@@ -89,7 +89,8 @@ class FerretSession:
         max_workers: Optional[int] = 8,
         max_stages: Optional[int] = None,
         optimizer: Optional[Optimizer] = None,
-        profile: Optional[ModelProfile] = None,
+        profile: Optional[Union[ModelProfile, str]] = None,
+        profile_feedback: bool = False,
         params: Optional[Pytree] = None,
         smoke: bool = True,
     ):
@@ -118,6 +119,7 @@ class FerretSession:
                 ocl=self.algorithm.cfg,
                 max_workers=max_workers,
                 max_stages=max_stages,
+                profile_feedback=profile_feedback,
             )
         else:
             # explicit FerretConfig wins, but an explicit budget argument
@@ -127,6 +129,8 @@ class FerretSession:
             over = {"ocl": self.algorithm.cfg}
             if budget is not None:
                 over["budget_bytes"] = budget
+            if profile_feedback:
+                over["profile_feedback"] = True
             ferret = dataclasses.replace(ferret, **over)
         self.ferret_cfg = ferret
 
@@ -138,7 +142,20 @@ class FerretSession:
         self.default_runner = runner
         self.seed = seed
         self.optimizer = optimizer or adamw(lr=ferret.lr)
-        self.profile = profile
+        # profile: a ModelProfile, or a resolution preference string
+        # ("analytic" | "auto" | "measured") resolved lazily via the
+        # profile store once batch/seq are known (repro.profile.bridge)
+        if isinstance(profile, str):
+            if profile not in ("analytic", "auto", "measured"):
+                raise ValueError(
+                    "profile= accepts a ModelProfile or one of "
+                    f"'analytic'/'auto'/'measured', got {profile!r}"
+                )
+            self._profile: Optional[ModelProfile] = None
+            self._profile_spec: Optional[str] = profile
+        else:
+            self._profile = profile
+            self._profile_spec = None
         self._params = params
         self._cached_stream: Optional[Dict[str, np.ndarray]] = None
         self._live_stream: Optional[BufferedStreamSource] = None
@@ -157,6 +174,29 @@ class FerretSession:
         self._params = value
 
     @property
+    def profile(self) -> Optional[ModelProfile]:
+        """The session's planner profile.
+
+        An explicit ``ModelProfile`` is returned as-is; a string spec
+        resolves through ``core.profiler.profile_for`` (store-backed, with
+        provenance) once batch/seq are known and is then pinned for the
+        session; ``None`` lets the trainers do their own store-aware
+        default resolution.
+        """
+        if self._profile is None and self._profile_spec is not None:
+            if self.batch is None or self.seq is None:
+                return None  # not yet inferable; trainers resolve later
+            self._profile = profile_for(
+                self.model_cfg, self.batch, self.seq, prefer=self._profile_spec
+            )
+        return self._profile
+
+    @profile.setter
+    def profile(self, value: Optional[ModelProfile]) -> None:
+        self._profile = value
+        self._profile_spec = None
+
+    @property
     def plan(self) -> planner_lib.Plan:
         """The pipelined plan for this session's budget (Alg. 3 ∘ Alg. 2)."""
         if (self.batch is None or self.seq is None) and self.stream is not None:
@@ -173,7 +213,7 @@ class FerretSession:
                 "plan needs batch/seq — pass them to FerretSession or give "
                 "the session a stream they can be inferred from"
             )
-        profile = self.profile or analytic_profile(self.model_cfg, self.batch, self.seq)
+        profile = self.profile or profile_for(self.model_cfg, self.batch, self.seq)
         t_d = self.ferret_cfg.t_d or planner_lib.default_data_interval(profile)
         return planner_lib.plan(
             profile,

@@ -160,6 +160,19 @@ def adaptation_rate(
     return sum(worker_rate(stats, w, c, V_D) for w in config.workers)
 
 
+def expected_round_seconds(stats: StageStats, config: PipelineConfig) -> float:
+    """Steady-state wall-clock the plan predicts per stream round.
+
+    The pipeline admits one round per max-stage traversal: t_f + t_b plus
+    the recompute forward where any active worker enables T1. This is the
+    baseline the online-refinement feedback compares observed segment
+    wall-clock against (``repro.profile.bridge.observe_segment``).
+    """
+    active = config.active_workers()
+    cr = max((w.recompute for w in active), default=0)
+    return stats.t_f + stats.t_b + cr * stats.t_f
+
+
 # ---------------------------------------------------------------------------
 # Eq. 4 — memory footprint
 # ---------------------------------------------------------------------------

@@ -28,6 +28,7 @@ import dataclasses
 import math
 import os
 import threading
+import time
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
@@ -37,7 +38,7 @@ from repro.core import compensation as comp_lib
 from repro.core import planner as planner_lib
 from repro.core import schedule as sched_lib
 from repro.core.pipeline import FerretEngine, staged_from_transformer
-from repro.core.profiler import ModelProfile, analytic_profile
+from repro.core.profiler import ModelProfile, profile_for
 from repro.models.config import ModelConfig
 from repro.ocl.algorithms import OCLConfig
 from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
@@ -59,6 +60,11 @@ class FerretConfig:
         default_factory=comp_lib.CompensationConfig
     )
     ocl: OCLConfig = dataclasses.field(default_factory=OCLConfig)
+    # Online profile refinement: feed observed segment wall-clock back
+    # into the profile store (repro.profile.bridge.observe_segment) so
+    # replans — and future runs — plan from real numbers. Host-side only;
+    # never changes what the engine computes.
+    profile_feedback: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -81,10 +87,20 @@ DEFAULT_SEGMENT_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 
 
 def _buckets_from_env() -> Tuple[int, ...]:
+    """Bucket ladder precedence: REPRO_SEGMENT_BUCKETS env > the backend's
+    autotune record (repro.profile.autotune) > the built-in geometric set."""
     raw = os.environ.get("REPRO_SEGMENT_BUCKETS", "").strip()
-    if not raw:
-        return DEFAULT_SEGMENT_BUCKETS
-    return tuple(sorted(int(tok) for tok in raw.split(",") if tok.strip()))
+    if raw:
+        return tuple(sorted(int(tok) for tok in raw.split(",") if tok.strip()))
+    try:
+        from repro.profile.autotune import tuned_defaults
+
+        tuned = tuned_defaults()
+        if tuned.segment_buckets:
+            return tuple(sorted(tuned.segment_buckets))
+    except Exception:
+        pass
+    return DEFAULT_SEGMENT_BUCKETS
 
 
 class IdentityKey:
@@ -282,7 +298,11 @@ class FerretTrainer:
             if algorithm is not None
             else get_algorithm(ferret_cfg.ocl)
         )
-        self.profile = profile or analytic_profile(model_cfg, batch, seq)
+        # Default resolution is store-aware (Alg. 3 profile(θ)): a persisted
+        # on-device measurement for this geometry wins, the analytic
+        # roofline is the fallback — identical to the old default when no
+        # measurement exists.
+        self.profile = profile or profile_for(model_cfg, batch, seq)
         t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
         self.t_d = t_d
         self.plan = planner_lib.plan(
@@ -371,6 +391,7 @@ class FerretTrainer:
         stages = T.split_stage_params(self.model_cfg, params, self.boundaries)
         rings = deltas = opt_states = comp_states = None
         cursor = 0
+        seg_index = 0
         acc_all: list = []
         loss_all: list = []
         adm_all: list = []
@@ -438,8 +459,25 @@ class FerretTrainer:
                     penalty = split_penalty_extras(
                         self.algorithm, self.model_cfg, self.boundaries
                     )
+                t0 = time.perf_counter()
                 final_state, ys = engine.run(state, seg_stream, penalty)
+                seg_wall = time.perf_counter() - t0
                 feeder.ack()  # segment complete: retained rows consumed
+                if self.cfg.profile_feedback and seg_index > 0 and seg_len > 0:
+                    # skip segment 0: its wall-clock includes the compile.
+                    # The single-plan run never replans, so the refinement
+                    # lands in the store for future runs/replans.
+                    from repro.profile.bridge import observe_segment
+
+                    # the compiled scan executes `seg` rounds (inert padding
+                    # included), so that is the wall-clock's denominator
+                    refined = observe_segment(
+                        self.model_cfg, self.batch, self.seq,
+                        self.profile, self.plan, seg, seg_wall,
+                    )
+                    if refined is not None:
+                        self.profile = refined[0]
+                seg_index += 1
                 ys = {k: v[:seg_len] for k, v in ys.items()}  # drop padding
                 stages = list(final_state[0])
                 rings = tuple(final_state[1])

@@ -30,6 +30,9 @@ class Plan:
     stats: cm.StageStats
     t_c: float  # chosen stage-time cap
     feasible: bool
+    # provenance of the profile this plan was derived from
+    # ("analytic" | "measured" | "online")
+    profile_provenance: str = "analytic"
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +189,10 @@ def plan(
         config, rate, mem, ok = search(
             stats, t_d, budget, c, V_D, base_bytes=base, max_workers=max_workers
         )
-        cand = Plan(part, config, rate, mem, stats, t_c, ok)
+        cand = Plan(
+            part, config, rate, mem, stats, t_c, ok,
+            profile_provenance=getattr(profile, "provenance", "analytic"),
+        )
         if best is None:
             best = cand
             continue

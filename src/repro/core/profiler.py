@@ -12,7 +12,6 @@ small benchmark models and can override the analytic one.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List
 
 from repro.models.config import ModelConfig
@@ -41,6 +40,9 @@ class ModelProfile:
     embed_bytes: int  # embedding + head parameter bytes (stage 0 / last stage)
     batch: int
     seq: int
+    # where the numbers came from: "analytic" (roofline), "measured"
+    # (harness wall-clock), or "online" (measured + segment feedback)
+    provenance: str = "analytic"
 
     @property
     def num_layers(self) -> int:
@@ -145,42 +147,34 @@ def measured_profile(
 ) -> ModelProfile:
     """Wall-clock profile of a single block on the local backend (paper-style).
 
-    Only sensible for small (benchmark-scale) models on CPU.
+    Delegates to the ``repro.profile`` measurement harness — there is one
+    timed-execution code path in the repo. Does not read or write the
+    profile store; use ``profile_for(..., prefer="measured")`` for the
+    cached store-backed resolution.
     """
-    import jax
-    import jax.numpy as jnp
+    from repro.profile.harness import measure_model_profile
 
-    from repro.models import transformer as T
+    profile, _ = measure_model_profile(
+        cfg, batch, seq, repeats=repeats, rng_seed=rng_seed
+    )
+    return profile
 
-    one = dataclasses.replace(cfg, num_layers=1)
-    params = T.init_params(one, jax.random.PRNGKey(rng_seed))
-    block = jax.tree.map(lambda a: a[0], params["blocks"])
-    x = jnp.zeros((batch, seq, cfg.d_model), dtype=jnp.dtype(cfg.compute_dtype))
-    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
-    if cfg.mrope_sections is not None:
-        pos = jnp.broadcast_to(pos[None], (3, batch, seq))
 
-    from repro.models.transformer import _block_train
+def profile_for(
+    cfg: ModelConfig,
+    batch: int,
+    seq: int,
+    prefer: str = "auto",
+    chips: int = 1,
+) -> ModelProfile:
+    """The planner's profile resolution (paper Alg. 3 ``profile(θ)``).
 
-    fwd = jax.jit(lambda p, x: _block_train(cfg, p, x, jnp.int32(0), pos)[0])
-    bwd = jax.jit(jax.grad(
-        lambda p, x: jnp.sum(_block_train(cfg, p, x, jnp.int32(0), pos)[0] ** 2)
-    ))
+    ``prefer="auto"``: a stored on-device measurement for this (backend,
+    model, dtype, geometry) if one exists, else the analytic roofline —
+    never measures. ``"measured"``: store hit, else measure-and-persist.
+    ``"analytic"``: the roofline unconditionally. The returned profile's
+    ``provenance`` records which one happened.
+    """
+    from repro.profile.bridge import resolve_profile
 
-    fwd(block, x).block_until_ready()
-    jax.block_until_ready(bwd(block, x))
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fwd(block, x).block_until_ready()
-    t_f = (time.perf_counter() - t0) / repeats
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        jax.block_until_ready(bwd(block, x))
-    t_b = (time.perf_counter() - t0) / repeats
-
-    w_b = _block_w_bytes(cfg)
-    a_b = _block_a_bytes(cfg, batch, seq)
-    a_int = _block_a_internal_bytes(cfg, batch, seq)
-    layers = [LayerProfile(t_f, t_b, w_b, a_b, a_int) for _ in range(cfg.num_layers)]
-    embed_bytes = cfg.vocab_size * cfg.d_model * 4 * (1 if cfg.tie_embeddings else 2)
-    return ModelProfile(layers=layers, embed_bytes=embed_bytes, batch=batch, seq=seq)
+    return resolve_profile(cfg, batch, seq, prefer=prefer, chips=chips)

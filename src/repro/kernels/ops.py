@@ -86,18 +86,47 @@ def ssd_decode_step(
 # ---------------------------------------------------------------------------
 
 
+def _tuned():
+    """Persisted autotune record for this backend (all-None when absent).
+
+    Lazy + exception-safe: dispatch must keep working with no store on
+    disk, a corrupt store, or during partial imports.
+    """
+    try:
+        from repro.profile.autotune import tuned_defaults
+
+        return tuned_defaults()
+    except Exception:
+        from repro.profile.autotune import TunedDefaults
+
+        return TunedDefaults()
+
+
 def _use_packed() -> bool:
-    # Flat-packed single-launch path (repro.kernels.packing). Default
-    # follows the kernel dispatch: packed whenever the Pallas kernels are
-    # in use (kernel-launch count is what packing optimizes); on the CPU
-    # jnp path the per-leaf loop is fully XLA-fused and the pack/unpack
-    # copies would only add latency. REPRO_PACK=1/0 forces either way.
+    # Flat-packed single-launch path (repro.kernels.packing). Precedence:
+    # REPRO_PACK=1/0 forces either way; else a measured autotune record
+    # for this backend decides; else packed only on real TPU — on CPU
+    # (interpret mode included) the per-leaf path measures ~7× faster
+    # (BENCH_hotpath.json), so guessing "packed" there ships a regression.
     env = os.environ.get("REPRO_PACK", "").strip()
     if env == "1":
         return True
     if env == "0":
         return False
-    return _use_pallas()
+    tuned = _tuned()
+    if tuned.pack is not None:
+        return bool(tuned.pack)
+    return _use_pallas() and _backend() == "tpu"
+
+
+def _pack_block():
+    # PackSpec grid tile: REPRO_PACK_BLOCK env > tuned winner > None
+    # (packing.BLOCK module default).
+    env = os.environ.get("REPRO_PACK_BLOCK", "").strip()
+    if env:
+        return int(env)
+    tuned = _tuned()
+    return int(tuned.pack_block) if tuned.pack_block else None
 
 
 def iter_fisher_compensate(grad: jax.Array, deltas: jax.Array, lam: jax.Array) -> jax.Array:

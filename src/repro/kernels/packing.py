@@ -37,12 +37,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
-from repro.kernels.iter_fisher import BLOCK  # one tile size for all kernels
+from repro.kernels.iter_fisher import BLOCK  # default tile size for all kernels
 
 Pytree = Any
 
 ALIGN = 8 * 128  # fp32 VPU tile: every leaf starts on an (8, 128) boundary
 assert BLOCK % ALIGN == 0, "packed grid tile must cover whole leaf slots"
+
+
+def _resolve_block(block: Optional[int]) -> int:
+    """The grid tile for this call: explicit argument > tuned/env default
+    (``ops._pack_block``) > the module default. Must cover whole
+    ALIGN-aligned leaf slots so a leaf never straddles two grid steps."""
+    if block is None:
+        from repro.kernels import ops
+
+        block = ops._pack_block()
+    if block is None:
+        return BLOCK
+    block = int(block)
+    if block <= 0 or block % ALIGN != 0:
+        raise ValueError(f"pack block must be a positive multiple of {ALIGN}, got {block}")
+    return block
 
 # pl.pallas_call invocations issued by this module (trace-time counter).
 KERNEL_LAUNCHES = 0
@@ -79,12 +95,18 @@ class PackSpec:
 _SPEC_CACHE: Dict[Tuple, PackSpec] = {}
 
 
-def pack_spec(tree: Pytree) -> PackSpec:
-    """The (cached) flat layout for ``tree``'s structure and leaf shapes."""
+def pack_spec(tree: Pytree, block: Optional[int] = None) -> PackSpec:
+    """The (cached) flat layout for ``tree``'s structure and leaf shapes.
+
+    ``block`` is the kernel grid tile the buffer length rounds up to
+    (default: the tuned/module block); specs are cached per block since
+    ``total`` depends on it.
+    """
+    block = _resolve_block(block)
     leaves, treedef = jax.tree.flatten(tree)
     shapes = tuple(tuple(leaf.shape) for leaf in leaves)
     dtypes = tuple(str(jnp.asarray(leaf).dtype) for leaf in leaves)
-    key = (treedef, shapes, dtypes)
+    key = (treedef, shapes, dtypes, block)
     spec = _SPEC_CACHE.get(key)
     if spec is None:
         sizes, slots, offsets = [], [], []
@@ -105,7 +127,7 @@ def pack_spec(tree: Pytree) -> PackSpec:
             offsets=tuple(offsets),
             sizes=tuple(sizes),
             slots=tuple(slots),
-            total=max(_round_up(cursor, BLOCK), BLOCK),
+            total=max(_round_up(cursor, block), block),
         )
         _SPEC_CACHE[key] = spec
     return spec
@@ -154,24 +176,29 @@ def _compensate_kernel(lam_ref, g_ref, d_ref, o_ref, *, tau: int):
 
 
 def compensate_packed(
-    gflat: jax.Array, dflat: jax.Array, lam: jax.Array, interpret: bool = False
+    gflat: jax.Array,
+    dflat: jax.Array,
+    lam: jax.Array,
+    interpret: bool = False,
+    block: Optional[int] = None,
 ) -> jax.Array:
     """Eq. 9 over the packed buffer: one launch for the whole pytree."""
     global KERNEL_LAUNCHES
+    block = _resolve_block(block)
     tau = dflat.shape[0]
     if tau == 0:
         return gflat
-    nb = gflat.shape[0] // BLOCK
+    nb = gflat.shape[0] // block
     KERNEL_LAUNCHES += 1
     return pl.pallas_call(
         functools.partial(_compensate_kernel, tau=tau),
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),  # λ broadcast to every tile
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((tau, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((tau, block), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct(gflat.shape, jnp.float32),
         interpret=interpret,
     )(jnp.asarray(lam).reshape(1).astype(jnp.float32), gflat, dflat)
@@ -197,19 +224,21 @@ def stats_packed(
     vaflat: jax.Array,
     alpha: float,
     interpret: bool = False,
+    block: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Alg. 1 λ-statistics over the packed buffer: one launch, s1/s2
     block-reduced on-device in the same pass. Returns (v_r', v_a', s1, s2)."""
     global KERNEL_LAUNCHES
-    nb = gflat.shape[0] // BLOCK
+    block = _resolve_block(block)
+    nb = gflat.shape[0] // block
     KERNEL_LAUNCHES += 1
     nvr, nva, s1b, s2b = pl.pallas_call(
         functools.partial(_stats_kernel, alpha=alpha),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in range(4)],
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in range(4)],
         out_specs=[
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
-            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
         ],
@@ -235,17 +264,19 @@ def compensate_tree(
     lam: jax.Array,
     use_pallas: bool = False,
     interpret: bool = False,
+    block: Optional[int] = None,
 ) -> Pytree:
     """Whole-pytree Iter-Fisher compensation in a single pass."""
     leaves_d = jax.tree.leaves(deltas)
     tau = leaves_d[0].shape[0] if leaves_d else 0
     if tau == 0:
         return grad
-    spec = pack_spec(grad)
+    block = _resolve_block(block)
+    spec = pack_spec(grad, block)
     gflat = pack(spec, grad)
     dflat = pack(spec, deltas, lead=1)
     if use_pallas:
-        out = compensate_packed(gflat, dflat, lam, interpret=interpret)
+        out = compensate_packed(gflat, dflat, lam, interpret=interpret, block=block)
     else:
         out = _ref.iter_fisher_compensate_ref(gflat, dflat, lam)
     return unpack(spec, out)
@@ -259,19 +290,23 @@ def stats_tree(
     alpha: float,
     use_pallas: bool = False,
     interpret: bool = False,
+    block: Optional[int] = None,
 ) -> Tuple[Pytree, Pytree, jax.Array, jax.Array]:
     """Whole-pytree λ-statistics: (v_r', v_a', Σ s1, Σ s2) in a single pass.
 
     The returned s1/s2 are on-device fp32 scalars — there is no per-leaf
     host accumulation anywhere on this path.
     """
-    spec = pack_spec(grad)
+    block = _resolve_block(block)
+    spec = pack_spec(grad, block)
     gflat = pack(spec, grad)
     dflat = pack(spec, delta)
     vrflat = pack(spec, v_r)
     vaflat = pack(spec, v_a)
     if use_pallas:
-        nvr, nva, s1, s2 = stats_packed(gflat, dflat, vrflat, vaflat, alpha, interpret)
+        nvr, nva, s1, s2 = stats_packed(
+            gflat, dflat, vrflat, vaflat, alpha, interpret, block=block
+        )
     else:
         nvr, nva, s1, s2 = _ref.iter_fisher_leaf_stats_ref(
             gflat, dflat, vrflat, vaflat, alpha

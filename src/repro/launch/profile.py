@@ -1,0 +1,185 @@
+"""Profile-store CLI: measure, tune, inspect, and diff planner inputs.
+
+The planner's numbers come from one of three places — the analytic
+TPU-v5e roofline, a persisted on-device measurement, or an online
+refinement of one — and this tool is how those measurements get made and
+examined outside a training run.
+
+Subcommands:
+  measure     time real fwd/bwd blocks for one model geometry and persist
+              the resulting ModelProfile (re-running is a store hit: no
+              re-measurement)
+  tune        sweep the kernel knobs (packed vs per-leaf, block sizes;
+              --buckets adds the EngineCache segment-bucket ladder) and
+              record the winners for this backend
+  show        list every readable store entry
+  plan-delta  plan the same (model, budget) from the analytic and the
+              measured profile and print what changed
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.profile measure --arch h2o-danube-1.8b \
+      --smoke --batch 2 --seq 32
+  PYTHONPATH=src python -m repro.launch.profile tune --buckets
+  PYTHONPATH=src python -m repro.launch.profile plan-delta --arch mamba2-780m \
+      --smoke --budget-gb 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+from repro.core import planner as planner_lib
+from repro.models.registry import get_config
+from repro.profile import (
+    ProfileStore,
+    autotune,
+    backend_fingerprint,
+    default_store,
+    measurement_runs,
+    resolve_profile,
+)
+
+
+def _store(args) -> ProfileStore:
+    return ProfileStore(args.store) if args.store else default_store()
+
+
+def _config(args):
+    return get_config(args.arch, smoke=args.smoke)
+
+
+def cmd_measure(args) -> None:
+    store = _store(args)
+    before = measurement_runs()
+    profile = resolve_profile(
+        _config(args), args.batch, args.seq,
+        prefer="measured", store=store, repeats=args.repeats,
+    )
+    fresh = measurement_runs() > before
+    print(f"backend: {backend_fingerprint()}")
+    print(f"store:   {store.root}")
+    print(f"entry:   {'measured now' if fresh else 'cache hit (no re-measurement)'}")
+    ly = profile.layers[1] if len(profile.layers) > 1 else profile.layers[0]
+    print(
+        f"profile: provenance={profile.provenance} layers={len(profile.layers)} "
+        f"t_fwd={ly.t_fwd*1e3:.3f}ms t_bwd={ly.t_bwd*1e3:.3f}ms "
+        f"w={ly.w_bytes/2**20:.2f}MiB a={ly.a_bytes/2**20:.2f}MiB"
+    )
+
+
+def cmd_tune(args) -> None:
+    store = _store(args)
+    blocks = tuple(int(b) for b in args.blocks.split(",")) if args.blocks else None
+    kwargs = {"tune_buckets": args.buckets, "repeats": args.repeats}
+    if blocks:
+        kwargs["blocks"] = blocks
+    tuned = autotune(store, **kwargs)
+    print(f"backend: {backend_fingerprint()}")
+    print(f"store:   {store.root}")
+    print(f"pack:    {tuned.pack}" + (f" block={tuned.pack_block}" if tuned.pack else ""))
+    if tuned.segment_buckets is not None:
+        print(f"buckets: {list(tuned.segment_buckets)}")
+    print("(env vars REPRO_PACK / REPRO_PACK_BLOCK / REPRO_SEGMENT_BUCKETS still win)")
+
+
+def cmd_show(args) -> None:
+    store = _store(args)
+    entries = store.entries()
+    print(f"store: {store.root} ({len(entries)} entries)")
+    for record in entries:
+        key = record.get("key", {})
+        payload = record.get("payload", {})
+        kind = record.get("kind", "?")
+        if kind == "layer_profile":
+            detail = (
+                f"model={key.get('model_name')} batch={key.get('batch')} "
+                f"seq={key.get('seq')} provenance={payload.get('provenance')}"
+            )
+        else:
+            detail = f"pack={payload.get('pack')} block={payload.get('pack_block')}"
+            if payload.get("segment_buckets"):
+                detail += f" buckets={payload['segment_buckets']}"
+        print(f"  [{kind} schema={record.get('schema')}] {detail}")
+        if args.json:
+            print(json.dumps(record, indent=2, default=str))
+
+
+def _plan_line(tag: str, plan: planner_lib.Plan) -> str:
+    return (
+        f"  {tag:<9} P={plan.partition.num_stages} "
+        f"N={len(plan.config.active_workers())} R={plan.rate:.4f} "
+        f"M={plan.memory/2**20:.1f}MiB feasible={plan.feasible} "
+        f"provenance={plan.profile_provenance}"
+    )
+
+
+def cmd_plan_delta(args) -> None:
+    store = _store(args)
+    cfg = _config(args)
+    budget = math.inf if args.budget_gb <= 0 else args.budget_gb * 2**30
+    plans = {}
+    for prefer in ("analytic", "measured"):
+        profile = resolve_profile(
+            cfg, args.batch, args.seq, prefer=prefer, store=store,
+            repeats=args.repeats,
+        )
+        t_d = planner_lib.default_data_interval(profile)
+        plans[prefer] = planner_lib.plan(
+            profile, t_d, budget, max_workers=args.max_workers
+        )
+    a, m = plans["analytic"], plans["measured"]
+    print(f"plan-delta for {cfg.name} batch={args.batch} seq={args.seq}:")
+    print(_plan_line("analytic", a))
+    print(_plan_line("measured", m))
+    same = (
+        tuple(a.partition.bounds) == tuple(m.partition.bounds)
+        and len(a.config.active_workers()) == len(m.config.active_workers())
+    )
+    if same:
+        print("  -> identical structure; measured numbers confirm the roofline")
+    else:
+        print("  -> the measured profile changes the chosen pipeline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--store", default=None, help="store root (default REPRO_PROFILE_DIR)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("measure", help="measure + persist one model geometry")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=2)
+    p.add_argument("--seq", type=int, default=32)
+    p.add_argument("--repeats", type=int, default=5)
+    p.set_defaults(fn=cmd_measure)
+
+    p = sub.add_parser("tune", help="sweep kernel knobs, record winners")
+    p.add_argument("--buckets", action="store_true",
+                   help="also tune the EngineCache segment-bucket ladder")
+    p.add_argument("--blocks", default=None, help="comma-separated block candidates")
+    p.add_argument("--repeats", type=int, default=5)
+    p.set_defaults(fn=cmd_tune)
+
+    p = sub.add_parser("show", help="list store entries")
+    p.add_argument("--json", action="store_true", help="dump full records")
+    p.set_defaults(fn=cmd_show)
+
+    p = sub.add_parser("plan-delta", help="analytic vs measured plan, same budget")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=2)
+    p.add_argument("--seq", type=int, default=32)
+    p.add_argument("--budget-gb", type=float, default=0.0, help="0 = unconstrained")
+    p.add_argument("--max-workers", type=int, default=8)
+    p.add_argument("--repeats", type=int, default=3)
+    p.set_defaults(fn=cmd_plan_delta)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

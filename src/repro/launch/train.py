@@ -110,11 +110,13 @@ def run_ferret(args) -> None:
         batch=args.batch, seq=args.seq, lr=args.lr,
         compensation=CompensationConfig(method=args.compensation),
         max_workers=4, max_stages=8, params=params,
+        profile=args.profile, profile_feedback=args.profile_feedback,
     )
     plan = session.plan
     print(
         f"plan: P={plan.partition.num_stages} N={len(plan.config.active_workers())} "
-        f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible}"
+        f"R={plan.rate:.3f} M={plan.memory/2**20:.1f}MiB feasible={plan.feasible} "
+        f"profile={plan.profile_provenance}"
     )
     t0 = time.time()
     if args.budget_schedule:
@@ -234,6 +236,18 @@ def main() -> None:
              "prefetch, peak stream residency O(segment), not O(steps) "
              "(works on the default pipelined runner and, with "
              "--budget-schedule, the elastic runner)",
+    )
+    ap.add_argument(
+        "--profile", default="auto", choices=["auto", "analytic", "measured"],
+        help="planner profile source: 'auto' uses a stored on-device "
+             "measurement when one exists (analytic roofline otherwise), "
+             "'measured' measures-and-persists on a store miss, 'analytic' "
+             "never touches the store (ferret mode)",
+    )
+    ap.add_argument(
+        "--profile-feedback", action="store_true",
+        help="refine the persisted profile from observed segment wall-clock "
+             "(host-side; later replans use the refined numbers)",
     )
     ap.add_argument("--compensation", default="iter_fisher")
     ap.add_argument("--ocl", default="vanilla")

@@ -1,0 +1,62 @@
+"""Measurement-driven profiling & autotuning (paper appendix Alg. 3).
+
+- ``repro.profile.store``: versioned on-disk profile store
+  (``REPRO_PROFILE_DIR``), schema migration + corrupt-entry recovery.
+- ``repro.profile.harness``: the single timed-execution code path
+  (warmup + ``block_until_ready`` repeats + ``cost_analysis`` cross-check).
+- ``repro.profile.autotune``: kernel-knob sweep; winners drive
+  ``kernels.ops`` / ``EngineCache`` defaults (env vars still override).
+- ``repro.profile.bridge``: measured ``ModelProfile`` resolution for the
+  planner + online refinement from observed segment wall-clock.
+"""
+
+from repro.profile.autotune import (
+    TunedDefaults,
+    autotune,
+    choose_buckets,
+    choose_pack,
+    clear_tuned_cache,
+    tuned_defaults,
+)
+from repro.profile.bridge import (
+    measurement_runs,
+    observe_segment,
+    profile_from_payload,
+    profile_to_payload,
+    resolve_profile,
+)
+from repro.profile.harness import Timing, measure_kernel_variants, measure_model_profile, time_jit
+from repro.profile.store import (
+    SCHEMA_VERSION,
+    ProfileStore,
+    backend_fingerprint,
+    default_store,
+    model_config_hash,
+    profile_key,
+    reset_default_stores,
+)
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ProfileStore",
+    "Timing",
+    "TunedDefaults",
+    "autotune",
+    "backend_fingerprint",
+    "choose_buckets",
+    "choose_pack",
+    "clear_tuned_cache",
+    "default_store",
+    "measure_kernel_variants",
+    "measure_model_profile",
+    "measurement_runs",
+    "model_config_hash",
+    "observe_segment",
+    "profile_from_payload",
+    "profile_key",
+    "profile_to_payload",
+    "reset_default_stores",
+    "resolve_profile",
+    "time_jit",
+    "tuned_defaults",
+]

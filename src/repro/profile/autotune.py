@@ -1,0 +1,238 @@
+"""Autotuner: sweep the kernel knobs, persist the winner per backend.
+
+Three knobs are tuned, all previously raw env vars:
+
+- ``pack``: packed megakernel vs per-leaf Iter-Fisher dispatch
+  (``REPRO_PACK``). ``BENCH_hotpath.json`` showed the packed kernel ~7×
+  *slower* on CPU interpret — exactly the case a measured default fixes.
+- ``pack_block``: the ``PackSpec`` grid tile (``REPRO_PACK_BLOCK``).
+- ``segment_buckets``: the ``EngineCache`` segment-length bucket ladder
+  (``REPRO_SEGMENT_BUCKETS``), traded from measured (compile_s,
+  per_round_s).
+
+The *choices* are pure functions of the measurements (same measurements →
+same choice, tested), so records are reproducible and diffable. Winners
+are stored under ``kind="autotune"`` keyed by the backend fingerprint;
+``tuned_defaults()`` is the read side consumed by ``kernels.ops`` and
+``core.ferret.EngineCache``. Precedence everywhere is
+
+    explicit env var  >  tuned record  >  built-in heuristic/default
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+from repro.profile.store import ProfileStore, backend_fingerprint, default_store
+
+TUNE_KIND = "autotune"
+
+# Pack-block candidates: ALIGN-multiples spanning "one tile per launch"
+# to "few big tiles" (8·128 = 1024 is the fp32 VPU tile).
+DEFAULT_BLOCK_CANDIDATES = (1024, 4096, 16384)
+
+# Nominal (segment_rounds, weight) workload for the bucket cost model:
+# pipelined default 32, elastic segments around it, serve-style short
+# slices, and the occasional long materialized run.
+DEFAULT_SEGMENT_DIST: Tuple[Tuple[int, int], ...] = (
+    (8, 2), (16, 2), (24, 1), (32, 6), (48, 2), (64, 3),
+    (96, 1), (128, 2), (192, 1), (256, 1), (512, 1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedDefaults:
+    """Measured default knob values for one backend (None = no opinion)."""
+
+    pack: Optional[bool] = None
+    pack_block: Optional[int] = None
+    segment_buckets: Optional[Tuple[int, ...]] = None
+    source: str = "none"  # "none" | "store"
+
+
+# ---------------------------------------------------------------------------
+# Pure choice functions (measurements in, knob values out — deterministic)
+# ---------------------------------------------------------------------------
+
+
+def choose_pack(measurements: Dict[str, Dict]) -> Tuple[bool, Optional[int]]:
+    """(pack?, block) from ``measure_kernel_variants`` output.
+
+    The winner is the lowest mean latency; ties break toward ``per_leaf``
+    (no packing machinery) and then the smaller block, so equal
+    measurements can never flap the choice between runs.
+    """
+    if "per_leaf" not in measurements:
+        raise ValueError("measurements must include the per_leaf baseline")
+
+    def rank(item):
+        name, m = item
+        is_packed = name != "per_leaf"
+        return (float(m["mean_s"]), is_packed, int(m.get("block", 0)))
+
+    name, m = min(measurements.items(), key=rank)
+    if name == "per_leaf":
+        return False, None
+    return True, int(m["block"])
+
+
+def _bucket_len(buckets: Sequence[int], n: int) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+def bucket_cost(
+    buckets: Sequence[int],
+    compile_s: float,
+    per_round_s: float,
+    dist: Iterable[Tuple[int, int]] = DEFAULT_SEGMENT_DIST,
+) -> float:
+    """Expected cost of a bucket ladder over a segment-length workload:
+    one compile per distinct bucket touched + one step per padded round."""
+    buckets = sorted(buckets)
+    used = set()
+    padded = 0.0
+    for n, weight in dist:
+        b = _bucket_len(buckets, n)
+        used.add(b)
+        padded += (b - n) * weight
+    return len(used) * compile_s + padded * per_round_s
+
+
+def candidate_bucket_ladders() -> Tuple[Tuple[int, ...], ...]:
+    from repro.core.ferret import DEFAULT_SEGMENT_BUCKETS
+
+    full = tuple(DEFAULT_SEGMENT_BUCKETS)
+    sparse = tuple(b for i, b in enumerate(full) if i % 2 == 0)  # ratio ~4
+    dense = tuple(sorted(set(full) | {b + b // 2 for b in full[:-1]}))
+    return (full, sparse, dense)
+
+
+def choose_buckets(
+    compile_s: float,
+    per_round_s: float,
+    candidates: Optional[Sequence[Sequence[int]]] = None,
+    dist: Iterable[Tuple[int, int]] = DEFAULT_SEGMENT_DIST,
+) -> Tuple[int, ...]:
+    """The candidate ladder with the lowest expected cost (ties break
+    toward fewer buckets, then lexicographically — deterministic)."""
+    cands = [tuple(sorted(c)) for c in (candidates or candidate_bucket_ladders())]
+    dist = tuple(dist)
+    return min(cands, key=lambda c: (bucket_cost(c, compile_s, per_round_s, dist), len(c), c))
+
+
+# ---------------------------------------------------------------------------
+# Measure → choose → persist
+# ---------------------------------------------------------------------------
+
+
+def _tiny_tune_config():
+    """Benchmark-scale model for the bucket cost measurement."""
+    from repro.models.config import ModelConfig
+
+    return ModelConfig(
+        name="tune-lm", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=32,
+        compute_dtype="float32",
+    )
+
+
+def autotune(
+    store: Optional[ProfileStore] = None,
+    *,
+    blocks: Sequence[int] = DEFAULT_BLOCK_CANDIDATES,
+    tune_buckets: bool = False,
+    cfg=None,
+    batch: int = 2,
+    seq: int = 16,
+    warmup: int = 2,
+    repeats: int = 5,
+    tau: int = 4,
+) -> TunedDefaults:
+    """Sweep the knobs on the live backend and record the winners.
+
+    ``tune_buckets`` additionally measures scan compile/per-round cost for
+    the bucket ladder choice — it compiles a real segment, so it is off by
+    default (CLI ``launch/profile.py tune --buckets`` turns it on).
+    """
+    from repro.profile import harness
+
+    store = store or default_store()
+    fp = backend_fingerprint()
+    measurements = harness.measure_kernel_variants(
+        tau=tau, blocks=blocks, warmup=warmup, repeats=repeats
+    )
+    pack, pack_block = choose_pack(measurements)
+    payload: Dict = {
+        "pack": pack,
+        "pack_block": pack_block,
+        "kernel_measurements": measurements,
+    }
+    if tune_buckets:
+        compile_s, per_round_s = harness.measure_scan_segment(
+            cfg or _tiny_tune_config(), batch=batch, seq=seq
+        )
+        buckets = choose_buckets(compile_s, per_round_s)
+        payload["segment_buckets"] = list(buckets)
+        payload["bucket_inputs"] = {"compile_s": compile_s, "per_round_s": per_round_s}
+    store.put(TUNE_KIND, {"backend": fp}, payload)
+    clear_tuned_cache()
+    return TunedDefaults(
+        pack=pack,
+        pack_block=pack_block,
+        segment_buckets=tuple(payload["segment_buckets"]) if tune_buckets else None,
+        source="store",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Read side: cached tuned defaults for dispatch call sites
+# ---------------------------------------------------------------------------
+
+_TUNED_CACHE: Dict[Tuple[str, str], TunedDefaults] = {}
+_TUNED_LOCK = threading.Lock()
+_NONE = TunedDefaults()
+
+
+def tuned_defaults(store: Optional[ProfileStore] = None) -> TunedDefaults:
+    """The persisted tuned defaults for the current backend (cheap:
+    cached per (store root, backend fingerprint); ``TunedDefaults()``
+    with all-None fields when nothing was tuned or anything fails)."""
+    try:
+        store = store or default_store()
+        fp = backend_fingerprint()
+    except Exception:
+        return _NONE
+    cache_key = (store.root, fp)
+    with _TUNED_LOCK:
+        hit = _TUNED_CACHE.get(cache_key)
+        if hit is not None:
+            return hit
+    try:
+        payload = store.get(TUNE_KIND, {"backend": fp})
+    except Exception:
+        payload = None
+    if payload is None:
+        tuned = _NONE
+    else:
+        raw_buckets = payload.get("segment_buckets")
+        tuned = TunedDefaults(
+            pack=payload.get("pack"),
+            pack_block=payload.get("pack_block"),
+            segment_buckets=tuple(int(b) for b in raw_buckets) if raw_buckets else None,
+            source="store",
+        )
+    with _TUNED_LOCK:
+        _TUNED_CACHE[cache_key] = tuned
+    return tuned
+
+
+def clear_tuned_cache() -> None:
+    """Invalidate the in-process tuned-defaults cache (tests, re-tunes)."""
+    with _TUNED_LOCK:
+        _TUNED_CACHE.clear()

@@ -1,0 +1,217 @@
+"""Planner bridge: store-backed ``ModelProfile`` resolution + online refinement.
+
+``resolve_profile`` is the one entry point the planner stack uses to get
+per-layer numbers (paper Alg. 3 ``profile(θ)``):
+
+- ``prefer="analytic"`` — the TPU-v5e roofline, always.
+- ``prefer="auto"`` — a stored measurement for this (backend, model,
+  dtype, geometry) key if one exists, else the analytic fallback. Never
+  runs a measurement itself (safe on any planner path).
+- ``prefer="measured"`` — a stored measurement if present (the cache-hit
+  path: *no* re-measurement), else measure now and persist.
+
+Every returned profile carries ``provenance`` ("analytic" / "measured" /
+"online") so plans record what they were derived from.
+
+``observe_segment`` is the feedback half: trainers report observed
+segment wall-clock, the bridge compares it against the plan's expected
+round time (``cost_model.expected_round_seconds``), EMA-scales the
+profile's per-layer times toward the observation, and persists the
+refined profile — the next replan (BudgetEvent, ``Supervisor.on_fatal``)
+plans from it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.profile.store import ProfileStore, default_store, profile_key
+
+PROFILE_KIND = "layer_profile"
+
+# Online-refinement damping: one segment moves the time scale this
+# fraction of the way to the observation.
+FEEDBACK_ALPHA = 0.5
+# Observed/expected clip: one wild segment (GC pause, first-touch) can't
+# destroy the profile.
+SCALE_CLIP = (0.1, 10.0)
+
+_COUNTER_LOCK = threading.Lock()
+_MEASUREMENT_RUNS = 0
+
+
+def measurement_runs() -> int:
+    """Process-wide count of real harness measurements (tests/bench use
+    this to assert a store hit skipped re-measurement)."""
+    return _MEASUREMENT_RUNS
+
+
+def _count_measurement() -> None:
+    global _MEASUREMENT_RUNS
+    with _COUNTER_LOCK:
+        _MEASUREMENT_RUNS += 1
+
+
+# ---------------------------------------------------------------------------
+# ModelProfile <-> JSON payload
+# ---------------------------------------------------------------------------
+
+
+def profile_to_payload(profile, timings: Optional[Dict] = None) -> Dict:
+    payload = {
+        "provenance": profile.provenance,
+        "batch": profile.batch,
+        "seq": profile.seq,
+        "embed_bytes": profile.embed_bytes,
+        "layers": [dataclasses.asdict(ly) for ly in profile.layers],
+    }
+    if timings:
+        payload["timings"] = timings
+    return payload
+
+
+def profile_from_payload(payload: Dict):
+    from repro.core.profiler import LayerProfile, ModelProfile
+
+    layers = [
+        LayerProfile(
+            t_fwd=float(ly["t_fwd"]),
+            t_bwd=float(ly["t_bwd"]),
+            w_bytes=int(ly["w_bytes"]),
+            a_bytes=int(ly["a_bytes"]),
+            a_internal_bytes=int(ly["a_internal_bytes"]),
+        )
+        for ly in payload["layers"]
+    ]
+    return ModelProfile(
+        layers=layers,
+        embed_bytes=int(payload["embed_bytes"]),
+        batch=int(payload["batch"]),
+        seq=int(payload["seq"]),
+        provenance=str(payload.get("provenance", "measured")),
+    )
+
+
+def for_chips(profile, chips: int):
+    """Scale a single-chip profile to ``chips`` data-parallel chips (the
+    same division ``analytic_profile(chips=)`` applies)."""
+    if chips <= 1:
+        return profile
+    layers = [
+        dataclasses.replace(
+            ly,
+            t_fwd=ly.t_fwd / chips,
+            t_bwd=ly.t_bwd / chips,
+            w_bytes=ly.w_bytes // chips,
+            a_bytes=ly.a_bytes // chips,
+            a_internal_bytes=ly.a_internal_bytes // chips,
+        )
+        for ly in profile.layers
+    ]
+    return dataclasses.replace(
+        profile, layers=layers, embed_bytes=profile.embed_bytes // chips
+    )
+
+
+# ---------------------------------------------------------------------------
+# Resolution (Alg. 3 profile(θ) with provenance)
+# ---------------------------------------------------------------------------
+
+
+def resolve_profile(
+    cfg,
+    batch: int,
+    seq: int,
+    *,
+    prefer: str = "auto",
+    store: Optional[ProfileStore] = None,
+    chips: int = 1,
+    warmup: int = 2,
+    repeats: int = 5,
+):
+    """A ``ModelProfile`` for the planner; see module docstring for modes."""
+    from repro.core.profiler import analytic_profile
+
+    if prefer not in ("analytic", "auto", "measured"):
+        raise ValueError(f"unknown profile preference {prefer!r}")
+    if prefer == "analytic":
+        return analytic_profile(cfg, batch, seq, chips=chips)
+    store = store or default_store()
+    key = profile_key(cfg, batch, seq)
+    try:
+        payload = store.get(PROFILE_KIND, key)
+    except Exception:
+        payload = None
+    if payload is not None:
+        return for_chips(profile_from_payload(payload), chips)
+    if prefer == "measured":
+        from repro.profile import harness
+
+        profile, timings = harness.measure_model_profile(
+            cfg, batch, seq, warmup=warmup, repeats=repeats
+        )
+        _count_measurement()
+        store.put(PROFILE_KIND, key, profile_to_payload(profile, timings))
+        return for_chips(profile, chips)
+    return analytic_profile(cfg, batch, seq, chips=chips)
+
+
+# ---------------------------------------------------------------------------
+# Online refinement (observed segment wall-clock -> refreshed store entry)
+# ---------------------------------------------------------------------------
+
+
+def scale_profile(profile, scale: float, provenance: str = "online"):
+    """Per-layer times scaled by ``scale`` (byte facts untouched)."""
+    layers = [
+        dataclasses.replace(ly, t_fwd=ly.t_fwd * scale, t_bwd=ly.t_bwd * scale)
+        for ly in profile.layers
+    ]
+    return dataclasses.replace(profile, layers=layers, provenance=provenance)
+
+
+def observe_segment(
+    cfg,
+    batch: int,
+    seq: int,
+    profile,
+    plan,
+    rounds: int,
+    run_s: float,
+    *,
+    store: Optional[ProfileStore] = None,
+    alpha: float = FEEDBACK_ALPHA,
+) -> Optional[Tuple[object, float]]:
+    """Fold one observed segment into the stored profile.
+
+    Returns ``(refined_profile, observed_scale)`` — the refined profile is
+    also persisted under this geometry's key so subsequent
+    ``resolve_profile(prefer="auto"/"measured")`` calls (and therefore
+    replans) see it. Returns None when the observation carries no signal
+    (zero rounds/time, degenerate plan).
+    """
+    from repro.core.cost_model import expected_round_seconds
+
+    if rounds <= 0 or run_s <= 0.0:
+        return None
+    expected = expected_round_seconds(plan.stats, plan.config) * rounds
+    if expected <= 0.0:
+        return None
+    raw = run_s / expected
+    lo, hi = SCALE_CLIP
+    observed = min(max(raw, lo), hi)
+    # damped move toward the observation; repeated segments converge
+    eff = 1.0 + alpha * (observed - 1.0)
+    refined = scale_profile(profile, eff)
+    store = store or default_store()
+    try:
+        store.put(
+            PROFILE_KIND,
+            profile_key(cfg, batch, seq),
+            profile_to_payload(refined),
+        )
+    except Exception:
+        pass  # read-only store: refinement still applies in-process
+    return refined, observed

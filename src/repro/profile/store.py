@@ -1,0 +1,254 @@
+"""Versioned on-disk profile store.
+
+One JSON file per entry under a root directory (``REPRO_PROFILE_DIR``,
+default ``~/.cache/repro/profile``). Entries are keyed by a *kind*
+(``"layer_profile"`` / ``"autotune"``) plus a key dict — typically the
+backend fingerprint, a ``ModelConfig`` content hash, dtype and the
+batch/seq geometry — hashed into the filename, with the full key echoed
+into the record so entries stay self-describing.
+
+Robustness contract:
+- **Schema versioning.** Every record carries ``schema``; reads migrate
+  older versions forward (``_MIGRATIONS``) and persist the upgraded form.
+  An unknown *newer* schema is ignored (forward compatibility: an old
+  binary never misparses a new record).
+- **Corrupt-entry recovery.** Unparseable or structurally invalid files
+  are quarantined to ``<name>.corrupt`` and treated as missing — one bad
+  write (power loss, concurrent writer on NFS) never poisons the store.
+  Writes are atomic (tmp file + ``os.replace``).
+- **In-process cache.** Repeat reads of one entry hit a dict, not the
+  filesystem; ``put`` refreshes it. The cache is per-``ProfileStore``;
+  ``default_store()`` returns a process-wide instance per root dir.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+
+SCHEMA_VERSION = 2
+
+_ENV_DIR = "REPRO_PROFILE_DIR"
+
+
+def default_root() -> str:
+    env = os.environ.get(_ENV_DIR, "").strip()
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "profile")
+
+
+def backend_fingerprint() -> str:
+    """Identity of the execution backend a measurement is valid for.
+
+    Includes the Pallas-dispatch mode: interpret-mode timings on CPU say
+    nothing about the jnp path and vice versa, so they must never share
+    an entry.
+    """
+    from repro.kernels import ops
+
+    backend = jax.default_backend()
+    try:
+        kind = jax.devices(backend)[0].device_kind
+    except Exception:
+        kind = "unknown"
+    pallas = 1 if ops._use_pallas() else 0
+    return f"{backend}|{kind}|pallas={pallas}|jax={jax.__version__}"
+
+
+def model_config_hash(cfg: Any) -> str:
+    """Content hash of a ``ModelConfig`` (order-independent, by value)."""
+    d = dataclasses.asdict(cfg)
+    blob = json.dumps(d, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def profile_key(cfg: Any, batch: int, seq: int, backend: Optional[str] = None) -> Dict:
+    """The store key for one (backend, model, dtype, geometry) profile."""
+    return {
+        "backend": backend or backend_fingerprint(),
+        "model": model_config_hash(cfg),
+        "model_name": cfg.name,
+        "dtype": cfg.compute_dtype,
+        "batch": int(batch),
+        "seq": int(seq),
+    }
+
+
+def _key_id(kind: str, key: Dict) -> str:
+    blob = json.dumps({"kind": kind, **key}, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:24]
+
+
+# ---------------------------------------------------------------------------
+# Schema migrations (old version -> next version, chained forward)
+# ---------------------------------------------------------------------------
+
+
+def _migrate_v1(record: Dict) -> Dict:
+    """v1 → v2: ``layers`` were bare 5-tuples ``[t_fwd, t_bwd, w, a, a_int]``
+    and records carried no provenance; v2 names the fields and defaults
+    provenance to ``"measured"`` (v1 stores only held measurements)."""
+    payload = record.get("payload", {})
+    layers = payload.get("layers")
+    if isinstance(layers, list) and layers and isinstance(layers[0], (list, tuple)):
+        payload["layers"] = [
+            {
+                "t_fwd": ly[0], "t_bwd": ly[1], "w_bytes": ly[2],
+                "a_bytes": ly[3], "a_internal_bytes": ly[4],
+            }
+            for ly in layers
+        ]
+    payload.setdefault("provenance", "measured")
+    record["payload"] = payload
+    record["schema"] = 2
+    return record
+
+
+_MIGRATIONS = {1: _migrate_v1}
+
+
+class ProfileStore:
+    """Directory of versioned JSON profile/autotune records."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or default_root()
+        self._cache: Dict[str, Dict] = {}
+        self._lock = threading.RLock()
+        self.disk_reads = 0
+        self.cache_hits = 0
+
+    # -- paths -------------------------------------------------------------
+    def _path(self, kind: str, key: Dict) -> str:
+        return os.path.join(self.root, f"{kind}-{_key_id(kind, key)}.json")
+
+    # -- core API ----------------------------------------------------------
+    def get(self, kind: str, key: Dict) -> Optional[Dict]:
+        """The payload stored under (kind, key), or None.
+
+        Migrates old-schema records forward (persisting the upgrade),
+        quarantines corrupt files, ignores records from a newer schema.
+        """
+        path = self._path(kind, key)
+        with self._lock:
+            if path in self._cache:
+                self.cache_hits += 1
+                return self._cache[path]["payload"]
+            record = self._load(path)
+            if record is None:
+                return None
+            self._cache[path] = record
+            return record["payload"]
+
+    def put(self, kind: str, key: Dict, payload: Dict) -> None:
+        """Write (atomically) and refresh the in-process cache."""
+        record = {
+            "schema": SCHEMA_VERSION,
+            "kind": kind,
+            "key": key,
+            "payload": payload,
+        }
+        path = self._path(kind, key)
+        with self._lock:
+            os.makedirs(self.root, exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(record, f, indent=2, default=str)
+            os.replace(tmp, path)
+            self._cache[path] = record
+
+    def delete(self, kind: str, key: Dict) -> bool:
+        path = self._path(kind, key)
+        with self._lock:
+            self._cache.pop(path, None)
+            if os.path.exists(path):
+                os.remove(path)
+                return True
+            return False
+
+    def entries(self) -> List[Dict]:
+        """Every readable record in the store (corrupt files skipped)."""
+        if not os.path.isdir(self.root):
+            return []
+        out = []
+        for name in sorted(os.listdir(self.root)):
+            if not name.endswith(".json"):
+                continue
+            record = self._load(os.path.join(self.root, name))
+            if record is not None:
+                out.append(record)
+        return out
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+
+    # -- internals ---------------------------------------------------------
+    def _load(self, path: str) -> Optional[Dict]:
+        if not os.path.exists(path):
+            return None
+        self.disk_reads += 1
+        try:
+            with open(path) as f:
+                record = json.load(f)
+            if not isinstance(record, dict) or "payload" not in record:
+                raise ValueError("not a profile record")
+            schema = int(record.get("schema", 0))
+        except (json.JSONDecodeError, ValueError, OSError):
+            self._quarantine(path)
+            return None
+        if schema > SCHEMA_VERSION:
+            return None  # written by a newer version: leave it alone
+        migrated = False
+        while schema < SCHEMA_VERSION:
+            fn = _MIGRATIONS.get(schema)
+            if fn is None:
+                self._quarantine(path)
+                return None
+            record = fn(record)
+            schema = int(record["schema"])
+            migrated = True
+        if migrated:
+            # persist the upgraded form so the migration runs once
+            try:
+                tmp = path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(record, f, indent=2, default=str)
+                os.replace(tmp, path)
+            except OSError:
+                pass  # read-only store: serve the migrated record anyway
+        return record
+
+    @staticmethod
+    def _quarantine(path: str) -> None:
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
+
+
+_DEFAULT_STORES: Dict[str, ProfileStore] = {}
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_store() -> ProfileStore:
+    """Process-wide store for the current root (env-sensitive)."""
+    root = default_root()
+    with _DEFAULT_LOCK:
+        store = _DEFAULT_STORES.get(root)
+        if store is None:
+            store = ProfileStore(root)
+            _DEFAULT_STORES[root] = store
+        return store
+
+
+def reset_default_stores() -> None:
+    """Drop process-wide store instances (tests switching REPRO_PROFILE_DIR)."""
+    with _DEFAULT_LOCK:
+        _DEFAULT_STORES.clear()

@@ -16,7 +16,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core import planner as planner_lib
-from repro.core.profiler import ModelProfile, analytic_profile
+from repro.core.profiler import ModelProfile, profile_for
 from repro.models.config import ModelConfig
 
 HBM_PER_CHIP = 16 * 2**30  # TPU v5e
@@ -61,7 +61,13 @@ class ElasticPlanner:
         self.max_workers = max_workers
 
     def profile_for(self, cluster: ClusterSpec) -> ModelProfile:
-        return analytic_profile(self.model_cfg, self.batch, self.seq, chips=cluster.chips)
+        """Store-aware Alg. 3 ``profile(θ)``: a persisted on-device
+        measurement for this geometry (scaled to the cluster's chips) when
+        one exists, the analytic roofline otherwise — so a topology-shrink
+        replan after ``Supervisor.on_fatal`` runs from real numbers."""
+        return profile_for(
+            self.model_cfg, self.batch, self.seq, chips=cluster.chips
+        )
 
     def replan(self, cluster: ClusterSpec) -> planner_lib.Plan:
         profile = self.profile_for(cluster)

@@ -101,7 +101,7 @@ from repro.core.ferret import (
     stage_penalty_fn,
 )
 from repro.core.pipeline import FerretEngine, staged_from_transformer
-from repro.core.profiler import ModelProfile, analytic_profile
+from repro.core.profiler import ModelProfile, profile_for
 from repro.models.config import ModelConfig
 from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
 from repro.optim.optimizers import AdamWState, Optimizer, SGDState, adamw
@@ -418,7 +418,9 @@ class ElasticStreamTrainer:
         self.cfg = ferret_cfg
         self.batch = batch
         self.seq = seq
-        self.profile = profile or analytic_profile(model_cfg, batch, seq)
+        # store-aware default (Alg. 3 profile(θ)): a persisted on-device
+        # measurement for this geometry wins, analytic roofline otherwise
+        self.profile = profile or profile_for(model_cfg, batch, seq)
         self.t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
         self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
         self.algorithm = (
@@ -896,6 +898,21 @@ class ElasticStreamTrainer:
                 opt_states = tuple(final_state[3])
                 comp_states = tuple(final_state[4])
                 prev_plan = plan
+                if self.cfg.profile_feedback and cache_hit:
+                    # online refinement: fold observed wall-clock (cache-hit
+                    # segments only — a compile would swamp the signal) into
+                    # the profile + store; the *next* replan (BudgetEvent,
+                    # request_budget, on_fatal) plans from these numbers
+                    from repro.profile.bridge import observe_segment
+
+                    refined = observe_segment(
+                        self.model_cfg, self.batch, self.seq,
+                        self.profile, plan, bucket_rounds, run_s,
+                    )
+                    if refined is not None:
+                        self.profile = refined[0]
+                        if self.cfg.t_d is None:
+                            self.t_d = planner_lib.default_data_interval(self.profile)
 
                 acc = np.asarray(ys["acc"], dtype=np.float64)
                 admitted = np.asarray(ys["admitted"], dtype=np.float64)

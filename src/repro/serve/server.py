@@ -188,8 +188,12 @@ class FerretServer:
         scheduler: Optional[Scheduler] = None,
         segment_rounds: int = 8,
         smoke: bool = True,
+        profile_feedback: bool = False,
     ):
         self.engine_cache = engine_cache or EngineCache()
+        # host-side: tenants refine their persisted profiles from observed
+        # segment wall-clock (repro.profile.bridge.observe_segment)
+        self.profile_feedback = bool(profile_feedback)
         self.pool = MemoryPool(budget_bytes)
         self.scheduler = scheduler or DeficitRoundRobinScheduler(
             quantum=float(segment_rounds)
@@ -252,6 +256,7 @@ class FerretServer:
                     batch=batch, seq=seq, lr=lr, compensation=compensation,
                     ocl=ocl, max_workers=max_workers, max_stages=max_stages,
                     params=params, seed=seed, smoke=self.smoke,
+                    profile_feedback=self.profile_feedback,
                 )
             except Exception:
                 self.pool.leave(name)

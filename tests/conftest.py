@@ -3,10 +3,21 @@ multi-device sharding tests spawn subprocesses that set the flag first."""
 
 import dataclasses
 import importlib.util
+import os
 import sys
+import tempfile
 
 import jax
 import pytest
+
+# Hermetic profile store: planner/dispatch defaults must come from code,
+# never from whatever ~/.cache/repro/profile happens to hold on this
+# machine. Set before any repro import resolves the store root. Tests
+# that exercise the store point REPRO_PROFILE_DIR at their own tmp_path
+# (and reset_default_stores()/clear_tuned_cache() around it).
+os.environ.setdefault(
+    "REPRO_PROFILE_DIR", tempfile.mkdtemp(prefix="repro-test-profile-")
+)
 
 # The container has no network access: if the real hypothesis isn't
 # installed, register the deterministic fallback before test collection so
