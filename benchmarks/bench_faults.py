@@ -1,0 +1,292 @@
+"""Chaos-soak benchmark: a seeded fault storm against every recovery path.
+
+One ``FaultPlan.storm(seed)`` drives four scenarios — the same storm on
+every run, so this is a *regression* benchmark for fault tolerance, not a
+dice roll:
+
+1. **stream** — injected stalls, a transient take error, and a prefetch
+   feeder death against a ``BufferedStreamSource``: the delivered rounds
+   must be bit-exact vs an uninjected pull and consumed exactly once.
+2. **engine** — a supervised elastic run through an injected transient
+   device error and a NaN-poisoned batch: the run must complete every
+   round with finite losses (retry-in-place + checkpoint rollback).
+3. **checkpoint** — a save sequence through a crash-mid-write (torn tmp)
+   and post-commit payload corruption: ``restore_latest_good`` must fall
+   back to the newest surviving checkpoint and quarantine the corrupt one.
+4. **serve** — three tenants, one crash-injected, plus an injected
+   SIGTERM-style drain mid-serve: the crashed tenant is retried (zero
+   crosstalk), ``drain()`` checkpoints everyone, and a restarted server
+   resumes with **zero rounds lost or re-trained** per tenant.
+
+Every scenario embeds its injector ``summary()`` (fired/recovered counts,
+per-fault recovery latency) into ``BENCH_faults.json`` at the repo root;
+the module *asserts* full recovery — a regression fails the bench run, and
+therefore CI's chaos shard.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro import faults
+from repro.api.streams import ArrayStreamSource, BufferedStreamSource
+from repro.checkpointing.checkpoint import restore_latest_good, save_checkpoint
+from repro.core.ferret import EngineCache
+from repro.faults import FaultError, FaultPlan, FaultSpec
+from repro.runtime import SupervisorCfg
+from repro.serve import FerretServer
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_faults.json"
+)
+
+SEED = 7
+ROUNDS = 16
+SEGMENT = 4
+TENANTS = ("t0", "t1", "t2")
+SERVE_ROUNDS = 8
+
+
+def _assert_recovered(chaos, scenario: str) -> dict:
+    out = chaos.summary()
+    assert out["fired"] > 0, f"{scenario}: storm never fired"
+    assert not chaos.unrecovered(), (
+        f"{scenario}: unrecovered faults: "
+        f"{[r.to_json() for r in chaos.unrecovered()]}"
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+def scenario_stream() -> dict:
+    rows = C.bench_stream(length=ROUNDS, seed=SEED)
+    clean = BufferedStreamSource(ArrayStreamSource(rows), prefetch=False)
+    want = clean.take(ROUNDS)
+
+    plan = FaultPlan.storm(seed=SEED, layers=("stream",))
+    src = BufferedStreamSource(ArrayStreamSource(rows), prefetch=True)
+    got = []
+    with faults.inject(plan) as chaos:
+        try:
+            for _ in range(ROUNDS // 2):
+                src.prefetch(2)
+                got.append(src.take(2))
+            leftover = src.take(1)  # exactly-once: the stream is dry
+        finally:
+            src.close()
+    assert leftover is None
+    cat = {k: np.concatenate([g[k] for g in got]) for k in got[0]}
+    for k in want:
+        np.testing.assert_array_equal(cat[k], want[k])  # bit-exact
+    summary = _assert_recovered(chaos, "stream")
+    return {
+        "rounds": ROUNDS,
+        "bit_exact": True,
+        "exactly_once": True,
+        "take_wait_s": round(src.take_wait_s, 6),
+        "injector": summary,
+    }
+
+
+# ---------------------------------------------------------------------------
+def scenario_engine() -> dict:
+    cfg = C.bench_model(2)
+    stream = C.bench_stream(length=ROUNDS, seed=SEED + 1)
+    params = C.init_params(cfg)
+
+    session = C.bench_session(cfg, params, stream, algorithm="er")
+    ref = session.run("elastic", segment_rounds=SEGMENT, engine_cache=EngineCache())
+
+    plan = FaultPlan.storm(seed=SEED, layers=("engine",), supervised=True)
+    ckpt = tempfile.mkdtemp(prefix="bench_faults_sup_")
+    sup = SupervisorCfg(checkpoint_dir=ckpt, checkpoint_every=1, nan_check_every=1)
+    session = C.bench_session(cfg, params, stream, algorithm="er")
+    with faults.inject(plan) as chaos:
+        res = session.run(
+            "elastic", segment_rounds=SEGMENT, supervisor_cfg=sup,
+            engine_cache=EngineCache(),
+        )
+    assert res.rounds == ref.rounds == ROUNDS
+    assert bool(np.all(np.isfinite(np.asarray(res.losses))))
+    summary = _assert_recovered(chaos, "engine")
+    return {
+        "rounds": ROUNDS,
+        "losses_finite": True,
+        "online_acc_clean": round(float(ref.online_acc), 4),
+        "online_acc_chaos": round(float(res.online_acc), 4),
+        "injector": summary,
+    }
+
+
+# ---------------------------------------------------------------------------
+def scenario_checkpoint() -> dict:
+    rng = np.random.default_rng(SEED)
+    states = {s: {"w": rng.normal(size=(8, 8)).astype(np.float32)} for s in range(1, 7)}
+    d = tempfile.mkdtemp(prefix="bench_faults_ckpt_")
+    plan = FaultPlan.storm(seed=SEED, layers=("checkpoint",))
+    crashes = 0
+    with faults.inject(plan) as chaos:
+        for step, state in states.items():
+            try:
+                save_checkpoint(d, step, state, extras={"cursor": step})
+            except FaultError:
+                crashes += 1  # torn tmp: the previous set is untouched
+        got, step, extras = restore_latest_good(d, {"w": states[1]["w"]})
+        # every remaining outstanding write fault is healed by the same
+        # fallback (one resolved() fires inside restore_latest_good)
+        while chaos.unrecovered():
+            chaos.resolved("checkpoint.write")
+    np.testing.assert_array_equal(got["w"], states[step]["w"])
+    assert extras["cursor"] == step
+    quarantined = [x for x in os.listdir(d) if x.endswith(".corrupt")]
+    summary = _assert_recovered(chaos, "checkpoint")
+    return {
+        "saves_attempted": len(states),
+        "crashes_mid_write": crashes,
+        "quarantined_dirs": len(quarantined),
+        "restored_step": step,
+        "restored_bit_exact": True,
+        "injector": summary,
+    }
+
+
+# ---------------------------------------------------------------------------
+def scenario_serve() -> dict:
+    cfg = C.bench_model(2)
+    streams = {
+        n: C.bench_stream(length=SERVE_ROUNDS, seed=SEED + 10 + i)
+        for i, n in enumerate(TENANTS)
+    }
+
+    def admit_all(server, resume=None):
+        for n, s in streams.items():
+            server.admit(
+                cfg, "er", s, name=n, batch=C.BATCH, seq=C.SEQ,
+                max_workers=3, max_stages=4,
+                resume_from=(resume or {}).get(n),
+            )
+
+    # phase A — crash containment: t1's second step crashes; the retry
+    # must leave every tenant complete, with zero crosstalk or quarantine
+    crash_plan = FaultPlan(specs=(
+        FaultSpec("serve.step", "tenant_crash", after=1, match=(("tenant", "t1"),)),
+    ), seed=SEED)
+    server_a = FerretServer(segment_rounds=SEGMENT)
+    admit_all(server_a)
+    with faults.inject(crash_plan) as chaos_a:
+        results_a = server_a.serve(timeout_s=600)
+    assert not server_a.quarantined_tenants  # retried, not fatal
+    assert all(results_a[n].rounds == SERVE_ROUNDS for n in TENANTS)
+    crash_summary = _assert_recovered(chaos_a, "serve/crash")
+
+    # phase B — injected SIGTERM drain mid-serve, checkpoint, restart
+    drain_plan = FaultPlan(
+        specs=(FaultSpec("serve.loop", "drain", after=4),), seed=SEED
+    )
+    server = FerretServer(segment_rounds=SEGMENT)
+    admit_all(server)
+    ckpt = tempfile.mkdtemp(prefix="bench_faults_drain_")
+    with faults.inject(drain_plan) as chaos_b:
+        server.serve(timeout_s=600)
+        assert server.draining
+        manifest = server.drain(ckpt)
+    drain_summary = _assert_recovered(chaos_b, "serve/drain")
+
+    served_pre = {n: manifest[n]["rounds_served"] for n in TENANTS}
+    server2 = FerretServer(segment_rounds=SEGMENT)
+    admit_all(server2, resume={n: manifest[n]["checkpoint"] for n in TENANTS})
+    final = server2.serve(timeout_s=600)
+    lost = {
+        n: SERVE_ROUNDS - served_pre[n] - final[n].rounds for n in TENANTS
+    }
+    assert all(v == 0 for v in lost.values()), f"rounds lost: {lost}"
+    lat = [
+        s["recovery_latency_max_s"] for s in (crash_summary, drain_summary)
+    ]
+    merged = {
+        "seed": SEED,
+        "planned_kinds": sorted(
+            set(crash_plan.kinds()) | set(drain_plan.kinds())
+        ),
+        "fired": crash_summary["fired"] + drain_summary["fired"],
+        "recovered": crash_summary["recovered"] + drain_summary["recovered"],
+        "recovery_latency_max_s": max(lat),
+        "recovery_latency_mean_s": sum(lat) / len(lat),
+        "records": crash_summary["records"] + drain_summary["records"],
+    }
+    return {
+        "tenants": len(TENANTS),
+        "rounds_per_tenant": SERVE_ROUNDS,
+        "rounds_served_pre_drain": served_pre,
+        "rounds_served_post_restore": {n: final[n].rounds for n in TENANTS},
+        "rounds_lost": lost,
+        "quarantined": server_a.quarantined_tenants,
+        "injector": merged,
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(write_json: bool = True) -> dict:
+    scenarios = {}
+    for name, fn in (
+        ("stream", scenario_stream),
+        ("engine", scenario_engine),
+        ("checkpoint", scenario_checkpoint),
+        ("serve", scenario_serve),
+    ):
+        t0 = time.time()
+        scenarios[name] = fn()
+        scenarios[name]["wall_s"] = round(time.time() - t0, 2)
+        inj = scenarios[name]["injector"]
+        print(
+            f"{name:>10}: fired={inj['fired']} recovered={inj['recovered']} "
+            f"max_latency={inj['recovery_latency_max_s']:.3f}s "
+            f"({scenarios[name]['wall_s']:.1f}s)"
+        )
+
+    kinds = sorted({
+        r["kind"]
+        for s in scenarios.values()
+        for r in s["injector"]["records"]
+    })
+    assert len(kinds) >= 4, f"storm too weak: only {kinds}"
+    payload = {
+        "bench": "faults",
+        "host": C.host_env(),
+        "seed": SEED,
+        "fault_kinds_fired": kinds,
+        "all_recovered": True,  # _assert_recovered gates every scenario
+        "scenarios": scenarios,
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {BENCH_JSON}")
+    return payload
+
+
+def main() -> None:
+    t0 = time.time()
+    payload = run()
+    fired = sum(s["injector"]["fired"] for s in payload["scenarios"].values())
+    lat = max(
+        s["injector"]["recovery_latency_max_s"]
+        for s in payload["scenarios"].values()
+    )
+    print(
+        f"bench_faults,{(time.time() - t0):.1f}s,"
+        f"faults_fired={fired},kinds={len(payload['fault_kinds_fired'])},"
+        f"max_recovery_latency_s={lat:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -27,3 +27,4 @@ python -m benchmarks.bench_hotpath
 python -m benchmarks.bench_stream
 python -m benchmarks.bench_serve
 python -m benchmarks.bench_profile
+python -m benchmarks.bench_faults

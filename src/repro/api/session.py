@@ -270,6 +270,7 @@ class FerretSession:
         supervisor_cfg: Optional[Any] = None,
         engine_cache: Optional[Any] = None,
         prefetch: bool = True,
+        resume_from: Optional[str] = None,
     ):
         """Open the session's stream as a *steppable* elastic run.
 
@@ -282,6 +283,12 @@ class FerretSession:
         shared ``engine_cache`` so same-geometry sessions reuse compiled
         engines. ``segment_rounds`` may be a callable ``cursor -> rounds``
         (dynamic segment sizing).
+
+        ``resume_from`` points at a drain-checkpoint directory written by
+        ``trainer.save_live_checkpoint`` (what ``FerretServer.drain``
+        leaves per tenant): the run restores that state and continues
+        from the saved stream cursor — seekable sources are positioned
+        there, so across the drain/restart no round is lost or re-trained.
         """
         from repro.runtime.elastic_trainer import ElasticStreamTrainer
 
@@ -294,10 +301,15 @@ class FerretSession:
             optimizer=self.optimizer, profile=self.profile,
             algorithm=self.algorithm, engine_cache=engine_cache,
         )
+        resume = (
+            trainer.load_drain_state(run_params, resume_from)
+            if resume_from is not None
+            else None
+        )
         return trainer.open_stream(
             run_params, source, schedule,
             segment_rounds=segment_rounds, supervisor_cfg=supervisor_cfg,
-            prefetch=prefetch,
+            prefetch=prefetch, resume=resume,
         )
 
     # -- internals ---------------------------------------------------------

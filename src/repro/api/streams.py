@@ -34,6 +34,8 @@ from typing import Callable, Dict, Iterable, Iterator, List, Optional, Union
 
 import numpy as np
 
+from repro import faults as faults_lib
+from repro.faults import FeederDeathError, TransientFaultError
 from repro.ocl.streams import StreamConfig, make_stream
 
 Batch = Dict[str, np.ndarray]
@@ -293,11 +295,53 @@ class BufferedStreamSource(StreamSource):
         self._pending.append(chunk)
         self._note_peak()
 
+    def _inner_take(self, n: int) -> Optional[Batch]:
+        """``source.take`` with the ``stream.take`` injection point.
+
+        A ``stall`` fault sleeps (a slow feed — observable in
+        ``take_wait_s``, bit-exact otherwise); an ``error`` fault raises
+        ``TransientFaultError`` *before* touching the source, so a retry
+        consumes nothing twice.
+        """
+        spec = faults_lib.fire("stream.take", n=n)
+        if spec is not None:
+            if spec.kind == "stall":
+                time.sleep(spec.arg)
+                faults_lib.resolved("stream.take")
+            elif spec.kind == "error":
+                raise TransientFaultError("injected stream.take error")
+        return self.source.take(n)
+
+    def _prefetch_take(self, n: int) -> Optional[Batch]:
+        """The background worker's take, with the feeder-death point."""
+        spec = faults_lib.fire("stream.prefetch", n=n)
+        if spec is not None and spec.kind == "feeder_death":
+            raise FeederDeathError("injected prefetch feeder death")
+        return self._inner_take(n)
+
     def _sync(self) -> None:
         if self._future is not None:
-            fut, self._future = self._future, None
+            (fut, n), self._future = self._future, None
             t0 = time.perf_counter()
-            got = fut.result()
+            try:
+                got = fut.result()
+            except FeederDeathError:
+                # the feeder thread died before touching the source: fall
+                # back to a synchronous pull of the same request —
+                # exactly-once holds because the failed take consumed
+                # nothing
+                self.take_wait_s += time.perf_counter() - t0
+                self._pull(n)
+                faults_lib.resolved("stream.prefetch")
+                return
+            except TransientFaultError:
+                # the worker's *take* failed (transient, pre-consumption):
+                # same synchronous fallback, but the outstanding fault is
+                # at the take point, not the prefetch point
+                self.take_wait_s += time.perf_counter() - t0
+                self._pull(n)
+                faults_lib.resolved("stream.take")
+                return
             self.take_wait_s += time.perf_counter() - t0
             self._admit(got)
 
@@ -305,7 +349,13 @@ class BufferedStreamSource(StreamSource):
         if self._exhausted:
             return
         t0 = time.perf_counter()
-        got = self.source.take(n)
+        try:
+            got = self._inner_take(n)
+        except TransientFaultError:
+            # transient by contract (raised before any consumption):
+            # one immediate retry
+            got = self._inner_take(n)
+            faults_lib.resolved("stream.take")
         self.take_wait_s += time.perf_counter() - t0
         self._admit(got)
 
@@ -329,7 +379,9 @@ class BufferedStreamSource(StreamSource):
             self._pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="stream-prefetch"
             )
-        self._future = self._pool.submit(self.source.take, n)
+        # the request size rides with the future so a dead feeder can be
+        # recovered by a synchronous pull of the same n (see _sync)
+        self._future = (self._pool.submit(self._prefetch_take, n), n)
 
     def close(self) -> None:
         """Drain any in-flight prefetch and stop the worker thread.
@@ -342,10 +394,10 @@ class BufferedStreamSource(StreamSource):
         which is where the consumer can act on it. Without the shutdown a
         non-daemon worker blocked on a slow feed outlives the trainer.
         """
-        fut, self._future = self._future, None
-        if fut is not None:
+        entry, self._future = self._future, None
+        if entry is not None:
             try:
-                self._admit(fut.result())
+                self._admit(entry[0].result())
             except Exception:
                 # the consumer is already unwinding its own error; but
                 # KeyboardInterrupt/SystemExit must still get through or

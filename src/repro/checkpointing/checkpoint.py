@@ -3,9 +3,18 @@
 Design (no orbax/tensorstore in the container — self-contained):
 
 - A checkpoint = one ``.npz`` per host shard + a tiny JSON manifest.
-- Writes are **atomic**: payloads land under ``step_XXXX.tmp/`` and the
-  directory is renamed only after everything (incl. manifest) is fsync'd —
-  a crash mid-write can never corrupt the latest checkpoint.
+- Writes are **atomic and durable**: payloads land under
+  ``step_XXXX.tmp/``, every payload file and the manifest are fsync'd,
+  the tmp directory is fsync'd, then renamed into place, and the parent
+  directory is fsync'd — a crash at any point leaves either the previous
+  checkpoint set or the complete new one, never a torn latest.
+- Payloads are **checksummed**: the manifest records per-file sha256 +
+  byte counts, so a restore detects torn or bit-rotted payloads (the
+  failure fsync+rename cannot prevent) instead of loading garbage.
+- Restores **fall back to the previous good checkpoint**: a corrupt
+  latest is quarantined to ``<name>.corrupt`` (the profile store's
+  idiom) and the next newest is tried — one bad write never strands a
+  recovery.
 - Writes are **async** (background thread): training never blocks on I/O;
   the manager keeps at most one in-flight save and coalesces backpressure.
 - Checkpoints are **mesh-shape-agnostic**: arrays are saved in logical
@@ -13,10 +22,17 @@ Design (no orbax/tensorstore in the container — self-contained):
   has — this is what makes elastic restarts (runtime/elastic.py) possible.
 - OCL extras ride along: optimizer state, Iter-Fisher λ statistics, the
   stream cursor (exactly-once), and the replay buffer.
+
+Fault injection (``repro.faults``): the ``checkpoint.write`` point fires
+inside ``save_checkpoint`` — ``crash_mid_write`` kills the process
+mid-payload (torn tmp, no rename), ``corrupt_payload`` flips bytes in the
+committed shard after the rename (bit rot). Both are what the hardening
+above recovers from; the chaos suite asserts it.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -27,9 +43,16 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import faults as faults_lib
+from repro.faults import FaultError
+
 Pytree = Any
 
 _SEP = "|"
+
+
+class CheckpointCorruptError(ValueError):
+    """A checkpoint failed verification (checksum/structure mismatch)."""
 
 
 def _flatten(tree: Pytree) -> Dict[str, np.ndarray]:
@@ -64,13 +87,42 @@ def _unflatten_into(template: Pytree, flat: Dict[str, np.ndarray]) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platform without O_RDONLY dir opens: best-effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _sha256(path: str) -> Tuple[str, int]:
+    h = hashlib.sha256()
+    n = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+            n += len(chunk)
+    return h.hexdigest(), n
+
+
 def save_checkpoint(
     directory: str,
     step: int,
     state: Pytree,
     extras: Optional[Dict[str, Any]] = None,
 ) -> str:
-    """Synchronous atomic save. Returns the final checkpoint path."""
+    """Synchronous atomic+durable save. Returns the final checkpoint path."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -78,48 +130,152 @@ def save_checkpoint(
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     flat = _flatten(state)
-    np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+    shard = os.path.join(tmp, "shard_0.npz")
+    np.savez(shard, **flat)
+
+    spec = faults_lib.fire("checkpoint.write", step=step, directory=directory)
+    if spec is not None and spec.kind == "crash_mid_write":
+        # simulate the process dying mid-payload: truncate the shard (a
+        # torn write) and abort before the rename — the atomicity contract
+        # means the previous checkpoint set is untouched
+        size = os.path.getsize(shard)
+        with open(shard, "r+b") as f:
+            f.truncate(max(1, size // 2))
+        raise FaultError(f"injected crash mid-checkpoint-write at step {step}")
+
+    # durability: the payload is fsync'd *before* it is checksummed into
+    # the manifest, and the manifest before the rename publishes either
+    _fsync_file(shard)
+    digest, nbytes = _sha256(shard)
     manifest = {
         "step": step,
         "time": time.time(),
         "num_leaves": len(flat),
         "extras": extras or {},
+        "files": {"shard_0.npz": {"sha256": digest, "bytes": nbytes}},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_dir(directory)
+
+    if spec is not None and spec.kind == "corrupt_payload":
+        # simulate post-write bit rot in the committed shard: fsync and
+        # rename cannot prevent this — only the checksum verification on
+        # restore can catch it (and fall back to the previous good)
+        committed = os.path.join(final, "shard_0.npz")
+        with open(committed, "r+b") as f:
+            f.seek(os.path.getsize(committed) // 2)
+            f.write(b"\xde\xad\xbe\xef")
     return final
+
+
+def _checkpoint_dirs(directory: str):
+    return sorted(
+        d
+        for d in os.listdir(directory)
+        if d.startswith("step_")
+        and not d.endswith(".tmp")
+        and not d.endswith(".corrupt")
+    )
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:
     if not os.path.isdir(directory):
         return None
-    cands = sorted(
-        d for d in os.listdir(directory) if d.startswith("step_") and not d.endswith(".tmp")
-    )
+    cands = _checkpoint_dirs(directory)
     return os.path.join(directory, cands[-1]) if cands else None
 
 
+def verify_checkpoint(path: str) -> Dict[str, Any]:
+    """Structural + checksum verification; returns the manifest.
+
+    Raises ``CheckpointCorruptError`` on an unreadable manifest, a listed
+    payload that is missing, or a checksum/byte-count mismatch (a torn or
+    bit-rotted payload). Checkpoints from before payload checksumming
+    (no ``files`` key) pass structural checks only.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"unreadable manifest under {path}: {e}") from e
+    if not isinstance(manifest, dict) or "step" not in manifest:
+        raise CheckpointCorruptError(f"malformed manifest under {path}")
+    for name, meta in (manifest.get("files") or {}).items():
+        fpath = os.path.join(path, name)
+        if not os.path.exists(fpath):
+            raise CheckpointCorruptError(f"{path}: payload {name} missing")
+        digest, nbytes = _sha256(fpath)
+        if nbytes != int(meta.get("bytes", -1)) or digest != meta.get("sha256"):
+            raise CheckpointCorruptError(
+                f"{path}: payload {name} failed checksum — torn or corrupt"
+            )
+    return manifest
+
+
 def restore_checkpoint(
-    path_or_dir: str, template: Pytree
+    path_or_dir: str, template: Pytree, verify: bool = True
 ) -> Tuple[Pytree, int, Dict[str, Any]]:
-    """Restore into the shapes/dtypes of ``template`` (re-shard on device_put)."""
+    """Restore into the shapes/dtypes of ``template`` (re-shard on device_put).
+
+    Given a directory of checkpoints, restores the newest *good* one:
+    corrupt candidates are quarantined to ``<name>.corrupt`` and the next
+    newest is tried (see ``restore_latest_good``). Given one checkpoint
+    path, verifies it (``verify=False`` skips checksums) and restores it.
+    """
     path = path_or_dir
     if not os.path.exists(os.path.join(path, "manifest.json")):
-        found = latest_checkpoint(path_or_dir)
-        if found is None:
-            raise FileNotFoundError(f"no checkpoint under {path_or_dir}")
-        path = found
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "shard_0.npz")) as z:
-        flat = {k: z[k] for k in z.files}
+        if os.path.basename(path).startswith("step_"):
+            raise CheckpointCorruptError(f"no manifest under {path}")
+        return restore_latest_good(path_or_dir, template, verify=verify)
+    if verify:
+        manifest = verify_checkpoint(path)
+    else:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    try:
+        with np.load(os.path.join(path, "shard_0.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+    except Exception as e:  # zipfile/OSError/ValueError: torn payload
+        raise CheckpointCorruptError(f"unreadable payload under {path}: {e}") from e
     state = _unflatten_into(template, flat)
     return state, int(manifest["step"]), manifest.get("extras", {})
+
+
+def restore_latest_good(
+    directory: str, template: Pytree, verify: bool = True
+) -> Tuple[Pytree, int, Dict[str, Any]]:
+    """Restore the newest checkpoint that passes verification.
+
+    Corrupt candidates (checksum mismatch, unreadable manifest/payload)
+    are quarantined to ``<name>.corrupt`` — mirroring the profile store's
+    corrupt-entry quarantine — and the scan continues with the next
+    newest. Raises ``FileNotFoundError`` only when no candidate survives.
+    """
+    if not os.path.isdir(directory):
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    for name in reversed(_checkpoint_dirs(directory)):
+        path = os.path.join(directory, name)
+        try:
+            out = restore_checkpoint(path, template, verify=verify)
+        except CheckpointCorruptError:
+            try:
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass
+            continue
+        # a successful restore is the recovery site for any outstanding
+        # write fault (torn tmp, corrupted-then-quarantined latest)
+        faults_lib.resolved("checkpoint.write")
+        return out
+    raise FileNotFoundError(f"no (good) checkpoint under {directory}")
 
 
 def plan_manifest(
@@ -185,12 +341,18 @@ class CheckpointManager:
             raise err
 
     def _gc(self) -> None:
-        cands = sorted(
-            d for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
+        cands = _checkpoint_dirs(self.directory)
         for d in cands[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+        # a crash mid-write leaves a dead step_*.tmp behind; clear any tmp
+        # whose final form never landed so the directory never accretes
+        # torn payloads
+        for d in os.listdir(self.directory):
+            if d.endswith(".tmp"):
+                full = os.path.join(self.directory, d)
+                if not os.path.exists(full[: -len(".tmp")]):
+                    shutil.rmtree(full, ignore_errors=True)
 
     def restore_latest(self, template: Pytree):
-        return restore_checkpoint(self.directory, template)
+        """Newest *good* checkpoint (corrupt ones quarantined + skipped)."""
+        return restore_latest_good(self.directory, template)

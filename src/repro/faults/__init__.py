@@ -1,0 +1,47 @@
+"""repro.faults: deterministic fault injection + the error taxonomy.
+
+See ``repro.faults.plan`` for the model. Quick use:
+
+    from repro import faults
+
+    plan = faults.FaultPlan.storm(seed=7)
+    with faults.inject(plan) as chaos:
+        result = session.run("elastic", supervisor_cfg=sup_cfg)
+    assert not chaos.unrecovered()
+"""
+
+from repro.faults.plan import (
+    POINT_KINDS,
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    FaultRecord,
+    FaultSpec,
+    FeederDeathError,
+    TenantCrashError,
+    TransientFaultError,
+    active,
+    fire,
+    inject,
+    install,
+    resolved,
+    specs_for,
+)
+
+__all__ = [
+    "POINT_KINDS",
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultRecord",
+    "FaultSpec",
+    "FeederDeathError",
+    "TenantCrashError",
+    "TransientFaultError",
+    "active",
+    "fire",
+    "inject",
+    "install",
+    "resolved",
+    "specs_for",
+]

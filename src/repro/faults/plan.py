@@ -1,0 +1,373 @@
+"""Deterministic fault-injection plane: ``FaultPlan`` → ``FaultInjector``.
+
+Every recovery path in the repo — feeder replay, Supervisor retries,
+checkpoint fallback, serve-loop tenant isolation — exists because real
+streams throw stalls, NaNs, torn writes, and dead workers at a system
+that must keep learning. This module makes those failures *first-class
+inputs*: a ``FaultPlan`` is a declarative, seeded list of faults, and a
+``FaultInjector`` fires them at **named injection points** threaded
+through the layers that can fail:
+
+====================  =====================================================
+point                 kinds
+====================  =====================================================
+``stream.take``       ``stall`` (arg = seconds), ``error`` (transient take
+                      failure — raised before any round is consumed)
+``stream.prefetch``   ``feeder_death`` (the background prefetch worker dies
+                      before touching the source)
+``engine.step``       ``transient`` (retryable device error), ``nan``
+                      (poisoned batch → non-finite loss; only observable
+                      under a Supervisor), ``device_loss`` (lost capacity —
+                      escalates to an elastic shrink-replan)
+``checkpoint.write``  ``crash_mid_write`` (process dies with a torn tmp
+                      payload), ``corrupt_payload`` (post-write bit rot in
+                      the committed shard)
+``serve.step``        ``tenant_crash`` (a tenant's serving step dies)
+``serve.loop``        ``drain`` (SIGTERM-style graceful drain request)
+====================  =====================================================
+
+Determinism: a spec fires on hit-counts of its point (``after`` hits are
+skipped, then ``times`` consecutive hits fire), never on wall-clock or
+RNG state at fire time, so a seeded plan replays the same fault sequence
+on every run — chaos tests are regression tests. ``FaultPlan.storm(seed)``
+derives a multi-layer plan from one seed (same seed → same plan).
+
+The injector records every fired fault (``records``) with a monotonic
+timestamp; recovery sites call ``resolved(point)`` when they have healed
+the oldest outstanding fault at that point, giving per-fault recovery
+latency for the chaos-soak benchmark (``BENCH_faults.json``).
+
+Wiring: injection points consult the process-global injector installed by
+``repro.faults.inject(plan)`` (a context manager) — with nothing
+installed every point is a no-op costing one function call. The module
+depends only on the standard library, so any layer may import it without
+cycles.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import random
+import threading
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class FaultError(RuntimeError):
+    """Base class for injected failures."""
+
+
+class TransientFaultError(FaultError):
+    """A retryable failure raised *before* any side effect took place.
+
+    The contract matters for exactly-once: code that raises this (or maps
+    an injected fault to it) guarantees no stream round was consumed and
+    no state was mutated, so a retry from the same position is safe.
+    """
+
+
+class FeederDeathError(TransientFaultError):
+    """The background prefetch worker died before touching the source."""
+
+
+class TenantCrashError(FaultError):
+    """A serve-layer tenant step crashed (scheduling thread, not the run)."""
+
+
+#: every known injection point → the fault kinds it understands
+POINT_KINDS: Dict[str, Tuple[str, ...]] = {
+    "stream.take": ("stall", "error"),
+    "stream.prefetch": ("feeder_death",),
+    "engine.step": ("transient", "nan", "device_loss"),
+    "checkpoint.write": ("crash_mid_write", "corrupt_payload"),
+    "serve.step": ("tenant_crash",),
+    "serve.loop": ("drain",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One declarative fault: fire ``kind`` at ``point``.
+
+    ``after`` hits of the point are skipped, then the next ``times``
+    hits fire (hit = one ``fire()`` call whose context matches ``match``).
+    ``arg`` is kind-specific (stall seconds). ``match`` filters on the
+    fire-time context — e.g. ``(("tenant", "t1"),)`` targets one tenant,
+    ``(("supervised", True),)`` restricts a NaN poisoning to supervised
+    segments where something can actually detect it.
+    """
+
+    point: str
+    kind: str
+    after: int = 0
+    times: int = 1
+    arg: float = 0.0
+    match: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        kinds = POINT_KINDS.get(self.point)
+        if kinds is None:
+            raise ValueError(
+                f"unknown injection point {self.point!r}; known: "
+                f"{sorted(POINT_KINDS)}"
+            )
+        if self.kind not in kinds:
+            raise ValueError(
+                f"point {self.point!r} has no fault kind {self.kind!r}; "
+                f"known: {kinds}"
+            )
+        if self.after < 0 or self.times < 1:
+            raise ValueError(f"need after >= 0 and times >= 1, got {self}")
+
+    def matches(self, ctx: Dict[str, Any]) -> bool:
+        return all(ctx.get(k) == v for k, v in self.match)
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """One fired fault, plus when (if ever) the system recovered from it."""
+
+    point: str
+    kind: str
+    hit: int  # the point's hit index (per matching spec) that fired
+    t_fired: float  # time.perf_counter() at fire time
+    ctx: Dict[str, Any]
+    t_recovered: Optional[float] = None
+
+    @property
+    def recovered(self) -> bool:
+        return self.t_recovered is not None
+
+    @property
+    def recovery_latency_s(self) -> Optional[float]:
+        if self.t_recovered is None:
+            return None
+        return self.t_recovered - self.t_fired
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "point": self.point,
+            "kind": self.kind,
+            "hit": self.hit,
+            "ctx": {k: repr(v) for k, v in self.ctx.items()},
+            "recovered": self.recovered,
+            "recovery_latency_s": self.recovery_latency_s,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, replayable set of fault specs (+ the seed it came from)."""
+
+    specs: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    @classmethod
+    def storm(
+        cls,
+        seed: int = 0,
+        layers: Iterable[str] = ("stream", "engine", "checkpoint", "serve"),
+        intensity: int = 1,
+        supervised: bool = True,
+        tenant: Optional[str] = None,
+    ) -> "FaultPlan":
+        """A seeded multi-layer fault storm: same seed → same plan.
+
+        One fault of every kind per requested layer per unit of
+        ``intensity``, with trigger offsets drawn from the seeded RNG at
+        *plan construction* (never at fire time), so the storm is fully
+        determined before the run starts. ``supervised=False`` drops the
+        NaN poisoning (nothing would detect it); ``tenant`` pins the
+        serve-layer crash to one tenant.
+        """
+        rng = random.Random(seed)
+        layers = tuple(layers)
+        specs: List[FaultSpec] = []
+        t_match = (("tenant", tenant),) if tenant is not None else ()
+        for _ in range(max(1, int(intensity))):
+            if "stream" in layers:
+                specs.append(
+                    FaultSpec("stream.take", "stall", after=rng.randrange(1, 4),
+                              arg=0.01 + 0.02 * rng.random())
+                )
+                specs.append(
+                    FaultSpec("stream.take", "error", after=rng.randrange(4, 7))
+                )
+                specs.append(
+                    FaultSpec("stream.prefetch", "feeder_death",
+                              after=rng.randrange(0, 3))
+                )
+            if "engine" in layers:
+                specs.append(
+                    FaultSpec("engine.step", "transient", after=rng.randrange(1, 3))
+                )
+                if supervised:
+                    specs.append(
+                        FaultSpec("engine.step", "nan", after=rng.randrange(4, 7),
+                                  match=(("supervised", True),))
+                    )
+            if "checkpoint" in layers:
+                specs.append(
+                    FaultSpec("checkpoint.write", "crash_mid_write",
+                              after=rng.randrange(0, 2))
+                )
+                specs.append(
+                    FaultSpec("checkpoint.write", "corrupt_payload",
+                              after=rng.randrange(2, 4))
+                )
+            if "serve" in layers:
+                specs.append(
+                    FaultSpec("serve.step", "tenant_crash",
+                              after=rng.randrange(1, 4), match=t_match)
+                )
+        return cls(specs=tuple(specs), seed=seed)
+
+    def kinds(self) -> List[str]:
+        return sorted({f"{s.point}:{s.kind}" for s in self.specs})
+
+
+class FaultInjector:
+    """Fires a ``FaultPlan`` at named injection points, deterministically.
+
+    Thread-safe: points are hit from the serve loop, trainer threads, and
+    the feeder's prefetch worker concurrently; per-spec hit counters and
+    the record log live behind one lock. ``fire`` returns the first
+    triggered spec (all matching specs still advance their counters) or
+    ``None`` — the call site maps the spec's kind onto its own failure
+    mode (sleep, raise, corrupt, drain).
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None):
+        self.plan = plan or FaultPlan()
+        self._hits: List[int] = [0] * len(self.plan.specs)
+        self._lock = threading.Lock()
+        self.records: List[FaultRecord] = []
+
+    # -- firing ------------------------------------------------------------
+    def fire(self, point: str, **ctx: Any) -> Optional[FaultSpec]:
+        """One hit at ``point``; the triggered spec, or ``None``."""
+        triggered: Optional[Tuple[FaultSpec, int]] = None
+        with self._lock:
+            for i, spec in enumerate(self.plan.specs):
+                if spec.point != point or not spec.matches(ctx):
+                    continue
+                hit = self._hits[i]
+                self._hits[i] = hit + 1
+                if spec.after <= hit < spec.after + spec.times and triggered is None:
+                    triggered = (spec, hit)
+            if triggered is None:
+                return None
+            spec, hit = triggered
+            self.records.append(
+                FaultRecord(
+                    point=point, kind=spec.kind, hit=hit,
+                    t_fired=time.perf_counter(), ctx=dict(ctx),
+                )
+            )
+            return spec
+
+    def resolved(self, point: str) -> Optional[FaultRecord]:
+        """Mark the oldest unrecovered fault at ``point`` as healed now.
+
+        Recovery sites call this after the retry/rollback/fallback that
+        absorbed the failure succeeds; a point with nothing outstanding
+        is a no-op (recovery code cannot tell an injected fault from a
+        genuine one, and should not have to)."""
+        now = time.perf_counter()
+        with self._lock:
+            for rec in self.records:
+                if rec.point == point and rec.t_recovered is None:
+                    rec.t_recovered = now
+                    return rec
+            return None
+
+    # -- observability -----------------------------------------------------
+    @property
+    def fired(self) -> int:
+        with self._lock:
+            return len(self.records)
+
+    def unrecovered(self) -> List[FaultRecord]:
+        with self._lock:
+            return [r for r in self.records if not r.recovered]
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-safe chaos report (what ``BENCH_faults.json`` embeds)."""
+        with self._lock:
+            records = [r.to_json() for r in self.records]
+        lat = [
+            r["recovery_latency_s"] for r in records if r["recovery_latency_s"]
+            is not None
+        ]
+        return {
+            "seed": self.plan.seed,
+            "planned_kinds": self.plan.kinds(),
+            "fired": len(records),
+            "recovered": sum(1 for r in records if r["recovered"]),
+            "recovery_latency_max_s": max(lat) if lat else None,
+            "recovery_latency_mean_s": (sum(lat) / len(lat)) if lat else None,
+            "records": records,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Process-global wiring (what the injection points consult)
+# ---------------------------------------------------------------------------
+
+_ACTIVE: Optional[FaultInjector] = None
+_ACTIVE_LOCK = threading.Lock()
+
+
+def install(injector: Optional[FaultInjector]) -> None:
+    """Install (or, with ``None``, clear) the process-global injector."""
+    global _ACTIVE
+    with _ACTIVE_LOCK:
+        _ACTIVE = injector
+
+
+def active() -> Optional[FaultInjector]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(plan_or_injector):
+    """Run a block under fault injection; always uninstalls on exit.
+
+        with repro.faults.inject(FaultPlan.storm(seed=7)) as chaos:
+            result = session.run("elastic", ...)
+        assert not chaos.unrecovered()
+    """
+    injector = (
+        plan_or_injector
+        if isinstance(plan_or_injector, FaultInjector)
+        else FaultInjector(plan_or_injector)
+    )
+    install(injector)
+    try:
+        yield injector
+    finally:
+        install(None)
+
+
+def fire(point: str, **ctx: Any) -> Optional[FaultSpec]:
+    """Hit ``point`` on the active injector; ``None`` when none installed."""
+    inj = _ACTIVE
+    if inj is None:
+        return None
+    return inj.fire(point, **ctx)
+
+
+def resolved(point: str) -> None:
+    """Report recovery at ``point`` to the active injector (if any)."""
+    inj = _ACTIVE
+    if inj is not None:
+        inj.resolved(point)
+
+
+def specs_for(plan: FaultPlan, point: str) -> Sequence[FaultSpec]:
+    """The plan's specs targeting one point (test/bench convenience)."""
+    return [s for s in plan.specs if s.point == point]

@@ -84,10 +84,15 @@ from repro.api.streams import (
     coerce_trainer_stream,
 )
 from repro.checkpointing.checkpoint import (
+    CheckpointCorruptError,
     latest_checkpoint,
     plan_manifest,
     restore_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
 )
+from repro.faults import TransientFaultError
+from repro import faults as faults_lib
 from repro.core import compensation as comp_lib
 from repro.core import planner as planner_lib
 from repro.core import schedule as sched_lib
@@ -325,12 +330,20 @@ class ElasticRun:
         self._params = params
         self._started = False
         self._finished = False
+        self._broken = False  # an exception escaped the segment generator
         self._result: Optional[ElasticStreamResult] = None
         self.segments: List[SegmentReport] = []
 
     @property
     def finished(self) -> bool:
         return self._finished
+
+    @property
+    def broken(self) -> bool:
+        """Did an exception escape a ``step()``? A broken run cannot step
+        again (the generator is dead) — ``abort()`` salvages a partial
+        result from the segments that did complete."""
+        return self._broken
 
     def buffered_rounds(self) -> int:
         """Rounds pulled into the run's feeder and not yet consumed."""
@@ -348,6 +361,11 @@ class ElasticRun:
             self._finished = True
             self._result = stop.value
             return None
+        except BaseException:
+            # the generator is dead (its finally already closed the
+            # feeder); mark it so abort() can salvage a partial result
+            self._broken = True
+            raise
         self.segments.append(report)
         return report
 
@@ -373,6 +391,68 @@ class ElasticRun:
             raise RuntimeError("elastic run generator ignored the stop request")
         return self._result
 
+    def abort(self) -> ElasticStreamResult:
+        """End the run even after an escaped exception, losing nothing
+        already accounted.
+
+        A healthy run stops at the current boundary (same as ``stop()``).
+        A broken run's generator is dead, so the completed segments are
+        re-assembled into a partial ``ElasticStreamResult`` — the server's
+        tenant-quarantine path uses this so one crashing tenant still
+        returns what it finished instead of poisoning the serve loop.
+        """
+        if self._finished:
+            return self._result
+        if not self._broken:
+            return self.stop()
+        self._finished = True
+        self._gen.close()
+        self._result = self._salvage_result()
+        return self._result
+
+    def _salvage_result(self) -> ElasticStreamResult:
+        segs = self.segments
+        if not segs:
+            return _empty_elastic_result(self._params)
+        # per-segment curves are cumulative within the segment; invert to
+        # raw per-round accuracies, then rebuild the continuous curve
+        accs = []
+        for s in segs:
+            c = np.asarray(s.result.online_acc_curve, dtype=np.float64)
+            n = np.arange(1, c.size + 1)
+            raw = c * n
+            raw[1:] -= c[:-1] * n[:-1]
+            accs.append(raw)
+        acc_cat = np.concatenate(accs)
+        consumed = sum(s.end - s.start for s in segs)
+        rs = self.trainer.live_resume_state()
+        if rs is not None:
+            from repro.models import transformer as T
+
+            final_params = T.merge_stage_params(
+                self.trainer.model_cfg, list(rs.stage_params)
+            )
+        else:
+            final_params = self._params
+        admitted = sum(
+            s.result.admitted_frac * (s.end - s.start) for s in segs
+        ) / max(consumed, 1)
+        rate = sum(
+            s.result.empirical_rate * (s.end - s.start) for s in segs
+        ) / max(consumed, 1)
+        return ElasticStreamResult(
+            segments=list(segs),
+            online_acc=float(acc_cat.mean()),
+            online_acc_curve=np.cumsum(acc_cat) / np.arange(1, acc_cat.size + 1),
+            losses=np.concatenate([np.asarray(s.result.losses) for s in segs]),
+            admitted_frac=admitted,
+            empirical_rate=rate,
+            final_params=final_params,
+            rounds=int(consumed),
+            num_replans=sum(1 for s in segs if s.replanned),
+            num_faults=0,  # fault count lived in the dead generator
+        )
+
     def result(self) -> ElasticStreamResult:
         if not self._finished:
             raise RuntimeError(
@@ -383,7 +463,10 @@ class ElasticRun:
     def close(self) -> None:
         """``stop()`` that is safe to call on an already-finished run."""
         if not self._finished:
-            self.stop()
+            if self._broken:
+                self.abort()
+            else:
+                self.stop()
 
 
 def _empty_elastic_result(params: Pytree) -> ElasticStreamResult:
@@ -467,6 +550,9 @@ class ElasticStreamTrainer:
         # the live run's feeder (set while a run/_run_gen is underway):
         # schedulers peek its pending-round count to size segments
         self._feeder: Optional[BufferedStreamSource] = None
+        # end-of-segment state snapshot for graceful drain (see
+        # live_resume_state / save_live_checkpoint)
+        self._live_resume: Optional[ResumeState] = None
 
     # -- budget control ---------------------------------------------------
     def request_budget(self, budget_bytes: float) -> None:
@@ -659,6 +745,7 @@ class ElasticStreamTrainer:
             source, transform=self._prepare_rows, prefetch=prefetch
         )
         self._feeder = feeder
+        self._live_resume = None  # stale snapshot from a prior run
 
         event_idx = 0
         budget = self.cfg.budget_bytes
@@ -865,21 +952,30 @@ class ElasticStreamTrainer:
                             fault_round, fault_budget_scale, plan, cursor, seg_end,
                             budget, penalty,
                         )
+                        if faults_at_cursor:
+                            # a previously-faulted segment just completed:
+                            # close out its recovery latency
+                            faults_lib.resolved("engine.step")
                         faults_at_cursor = 0
-                    except DeviceLossError as e:
+                    except (DeviceLossError, TransientFaultError) as e:
                         # Re-run this segment from the same cursor — state
                         # is unchanged and the feeder re-serves the retained
                         # rows, so the stream stays exactly-once. Injected
                         # faults fire once; a genuine device loss may not
                         # have gone through a Supervisor, so make sure a
                         # shrink was requested, and bail out if shrinking
-                        # stops making progress.
+                        # stops making progress. A transient error re-runs
+                        # at the *same* budget: lost capacity shrinks the
+                        # plan, a hiccup does not.
                         feeder.rewind()
                         if fault_round is not None:
                             pending_faults.remove(fault_round)
                         num_faults += 1
                         faults_at_cursor += 1
-                        if self._pending_budget is None:
+                        if (
+                            isinstance(e, DeviceLossError)
+                            and self._pending_budget is None
+                        ):
                             self.fatal_handler(fault_budget_scale)(e)
                         if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
                             raise
@@ -940,6 +1036,17 @@ class ElasticStreamTrainer:
                 loss_all.append(np.asarray(ys["loss"]))
                 admitted_all.append(admitted)
                 cursor = seg_end
+                # live end-of-segment snapshot: what a graceful drain
+                # checkpoints (save_live_checkpoint) so a restart resumes
+                # from this exact boundary — exactly-once across restarts
+                self._live_resume = ResumeState(
+                    stage_params=list(stage_params),
+                    opt_states=tuple(opt_states),
+                    comp_states=tuple(comp_states),
+                    bounds=list(bounds),
+                    cursor=cursor,
+                    budget_bytes=budget,
+                )
                 # hand the segment to the driver; a _STOP reply ends the
                 # run at this boundary with everything consumed accounted
                 if (yield segments[-1]) is _STOP:
@@ -975,6 +1082,90 @@ class ElasticStreamTrainer:
             peak_buffered_rounds=feeder.peak_buffered_rounds,
             stream_wait_s=feeder.take_wait_s,
         )
+
+    # -- graceful drain ---------------------------------------------------
+    def live_resume_state(self) -> Optional[ResumeState]:
+        """The last completed segment's end-of-segment state snapshot.
+
+        ``None`` until the open run completes a segment. Unlike the
+        supervised per-segment checkpoints (optional, I/O-bound), this is
+        always maintained — it is what a server drain saves.
+        """
+        return self._live_resume
+
+    def save_live_checkpoint(self, directory: str) -> Optional[str]:
+        """Checkpoint the live snapshot for an exactly-once restart.
+
+        Writes the (stage_params, opt_states, comp_states) trees plus the
+        partition bounds, stream cursor, and budget as extras — everything
+        ``load_drain_state`` needs to resume this run on a fresh process.
+        Returns the checkpoint path, or ``None`` when no segment has
+        completed yet (nothing consumed → a restart starts from scratch,
+        still exactly-once).
+        """
+        rs = self._live_resume
+        if rs is None:
+            return None
+        budget = rs.budget_bytes
+        extras = {
+            "bounds": [int(b) for b in rs.bounds],
+            "cursor": int(rs.cursor),
+            "budget_bytes": float(budget) if math.isfinite(budget) else "inf",
+        }
+        state = (list(rs.stage_params), tuple(rs.opt_states), tuple(rs.comp_states))
+        return save_checkpoint(directory, rs.cursor, state, extras)
+
+    def load_drain_state(self, params_template: Pytree, directory: str) -> ResumeState:
+        """Recover a ``save_live_checkpoint`` snapshot for ``resume=``.
+
+        Corrupt checkpoints are quarantined with fallback-to-previous-good
+        (the directory may hold several drains). ``params_template`` only
+        provides shapes/dtypes; the saved bounds may differ from what this
+        process plans — ``run_stream(resume=...)`` remaps.
+        """
+        from repro.models import transformer as T
+
+        while True:
+            path = latest_checkpoint(directory)
+            if path is None:
+                raise FileNotFoundError(f"no drain checkpoint under {directory!r}")
+            try:
+                manifest = verify_checkpoint(path)
+                extras = manifest["extras"]
+                bounds = [int(b) for b in extras["bounds"]]
+                raw_budget = extras.get("budget_bytes", "inf")
+                budget = math.inf if raw_budget == "inf" else float(raw_budget)
+                staged = self.algorithm.wrap_staged(
+                    staged_from_transformer(self.model_cfg, bounds)
+                )
+                plan = self.plan_for(budget)
+                sched = sched_lib.build_schedule(plan.config, len(bounds) - 1, 1)
+                engine = FerretEngine(
+                    staged, sched, self.optimizer, self.cfg.compensation,
+                    lr=self.cfg.lr,
+                )
+                full = engine.init_state(
+                    T.split_stage_params(self.model_cfg, params_template, bounds)
+                )
+                template = (list(full[0]), tuple(full[3]), tuple(full[4]))
+                state, _step, _extras = restore_checkpoint(path, template)
+            except CheckpointCorruptError:
+                # quarantine and fall back to the previous drain, same as
+                # restore_latest_good — but re-deriving the per-candidate
+                # template (bounds may differ between drains)
+                try:
+                    os.replace(path, path + ".corrupt")
+                except OSError:
+                    pass
+                continue
+            return ResumeState(
+                stage_params=list(state[0]),
+                opt_states=tuple(state[1]),
+                comp_states=tuple(state[2]),
+                bounds=bounds,
+                cursor=int(extras["cursor"]),
+                budget_bytes=budget,
+            )
 
     # -- crash restore ----------------------------------------------------
     def load_resume_state(self, params_template: Pytree, checkpoint_dir: str) -> ResumeState:
@@ -1131,23 +1322,46 @@ class ElasticStreamTrainer:
         """One segment, either direct or as a single supervised step."""
         out: Dict[str, Any] = {}
         seg_len = seg_end - cursor  # engine may run bucket-padded rounds
+        supervised = supervisor_cfg is not None
+
+        def _injected(kind_nan_ok: bool):
+            """The ``engine.step`` injection point (before any state change).
+
+            ``transient`` raises retry-safe, ``device_loss`` raises the
+            escalation path, ``nan`` returns True to poison the monitored
+            loss (only observable under a Supervisor's NaN probe — specs
+            gate on the ``supervised`` ctx key).
+            """
+            spec = faults_lib.fire("engine.step", cursor=cursor, supervised=supervised)
+            if spec is None:
+                return False
+            if spec.kind == "transient":
+                raise TransientFaultError("injected transient engine error")
+            if spec.kind == "device_loss":
+                raise DeviceLossError("injected device loss")
+            return spec.kind == "nan" and kind_nan_ok
 
         def step_fn(st, batch):
             if fault_round is not None:
                 raise DeviceLossError(
                     f"simulated device loss at stream round {fault_round}"
                 )
+            poison = _injected(kind_nan_ok=True)
             new_st, ys = engine.run(st, batch, penalty)
             out["ys"] = ys
             # monitored loss over the real rounds only — bucket-padding
             # rows are zeros and must not dilute NaN checks / thresholds
-            return new_st, {"loss": jnp.mean(ys["loss"][:seg_len])}
+            loss = jnp.mean(ys["loss"][:seg_len])
+            if poison:
+                loss = loss * jnp.nan  # a poisoned batch: NaN probe trips
+            return new_st, {"loss": loss}
 
         if supervisor_cfg is None:
             if fault_round is not None:
                 raise DeviceLossError(
                     f"simulated device loss at stream round {fault_round}"
                 )
+            _injected(kind_nan_ok=False)
             return engine.run(state, seg_stream, penalty)
 
         # Per-segment checkpoint dir: state shapes are partition-dependent,
@@ -1166,10 +1380,14 @@ class ElasticStreamTrainer:
         # Saves happen only after the segment step succeeds, i.e. the saved
         # state is the *end-of-segment* state — the cursor must say so, or a
         # restore would re-consume the whole segment.
-        sup.run_step(
+        rep = sup.run_step(
             seg_stream,
             extras=plan_manifest(plan, cursor=seg_end, budget_bytes=budget),
         )
+        if rep.restarted:
+            # the Supervisor recovered in place (NaN rollback / transient
+            # retry): close out the injected fault's recovery latency
+            faults_lib.resolved("engine.step")
         sup.manager.wait()
         return sup.state, out["ys"]
 

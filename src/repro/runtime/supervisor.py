@@ -30,9 +30,17 @@ import jax
 import numpy as np
 
 from repro.checkpointing.checkpoint import CheckpointManager
+from repro.faults import TransientFaultError
 from repro.runtime.elastic import DeviceLossError
 
 Pytree = Any
+
+# Errors worth retrying in place: numeric blow-ups roll back to the last
+# checkpoint, deadline misses and transient device hiccups just re-run the
+# attempt. Everything else (bar DeviceLossError, which escalates to a
+# shrink-replan) is persistent — a bug or a broken environment that retries
+# cannot fix — and is surfaced immediately with no retry burn-down.
+_TRANSIENT = (FloatingPointError, TimeoutError, TransientFaultError)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +51,8 @@ class SupervisorCfg:
     step_timeout_s: float = 300.0
     max_retries: int = 3
     nan_check_every: int = 10  # device->host sync cadence for the NaN probe
+    backoff_base_s: float = 0.0  # 0 disables sleeping between retries
+    backoff_cap_s: float = 30.0
 
 
 @dataclasses.dataclass
@@ -61,11 +71,16 @@ class Supervisor:
         step_fn: Callable,  # (state, batch) -> (state, metrics dict with 'loss')
         init_state: Pytree,
         on_fatal: Optional[Callable] = None,  # escalate to elastic re-plan
+        extras_hook: Optional[Callable[[Dict], None]] = None,
     ):
         self.cfg = cfg
         self.step_fn = step_fn
         self.state = init_state
         self.on_fatal = on_fatal
+        # receives checkpoint extras (stream cursor, replay buffer) on every
+        # restore — including mid-run rollbacks, where dropping them would
+        # silently double-train items and break exactly-once
+        self.extras_hook = extras_hook
         self.manager = CheckpointManager(
             cfg.checkpoint_dir, keep=cfg.keep, every_steps=cfg.checkpoint_every
         )
@@ -80,15 +95,24 @@ class Supervisor:
             return False
         self.state = state
         self.step = step
-        if extras_hook:
-            extras_hook(extras)
+        hook = extras_hook or self.extras_hook
+        if hook:
+            hook(extras)
         return True
 
     # ------------------------------------------------------------------
+    def _backoff(self) -> None:
+        if self.cfg.backoff_base_s <= 0:
+            return
+        delay = self.cfg.backoff_base_s * (2 ** max(0, self.failures - 1))
+        time.sleep(min(delay, self.cfg.backoff_cap_s))
+
     def run_step(self, batch: Dict, extras: Optional[Dict] = None, dropped: int = 0) -> StepReport:
-        t0 = time.time()
         restarted = False
         for attempt in range(self.cfg.max_retries + 1):
+            # per-attempt deadline: a retry must not inherit the failed
+            # attempt's elapsed time, or it spuriously re-times-out
+            t0 = time.time()
             try:
                 new_state, metrics = self.step_fn(self.state, batch)
                 loss = metrics["loss"]
@@ -117,18 +141,34 @@ class Supervisor:
                 if self.on_fatal is not None:
                     self.on_fatal(e)
                 raise
-            except (FloatingPointError, TimeoutError) as e:
+            except _TRANSIENT as e:
                 self.failures += 1
                 restarted = True
                 if self.failures > self.cfg.max_retries:
                     if self.on_fatal is not None:
                         self.on_fatal(e)
                     raise
-                # rollback: restore last good checkpoint (or keep state if none)
+                if isinstance(e, TransientFaultError):
+                    # raised before any side effect (the error taxonomy's
+                    # contract): the current state is clean, just re-attempt
+                    self._backoff()
+                    continue
+                # numeric poison / deadline miss: roll back to the last good
+                # checkpoint, handing extras (stream cursor, replay buffer)
+                # back through the same hook as try_restore — exactly-once
                 try:
-                    self.state, self.step, _ = self.manager.restore_latest(self.state)
+                    self.state, self.step, rb_extras = self.manager.restore_latest(self.state)
+                    if self.extras_hook:
+                        self.extras_hook(rb_extras)
                 except FileNotFoundError:
                     pass  # no checkpoint yet: retry from current state
+                self._backoff()
+            except Exception as e:
+                # persistent failure (bug, broken env): retries cannot fix
+                # it — surface immediately without burning the retry budget
+                if self.on_fatal is not None:
+                    self.on_fatal(e)
+                raise
         raise RuntimeError("unreachable")
 
     # ------------------------------------------------------------------

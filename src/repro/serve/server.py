@@ -27,15 +27,19 @@ timestamps.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import os
+import signal
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro import faults as faults_lib
 from repro.api.results import StreamResult
+from repro.faults import TenantCrashError
 from repro.api.session import FerretSession
 from repro.api.streams import BufferedStreamSource, LimitedStreamSource, StreamSource
 from repro.core.ferret import EngineCache
@@ -61,7 +65,7 @@ class _Tenant:
 
     def __init__(
         self, name, weight, session, tenant_feed, segment_rounds, max_rounds,
-        supervisor_cfg,
+        supervisor_cfg, resume_from=None,
     ):
         self.name = name
         self.weight = weight
@@ -70,10 +74,12 @@ class _Tenant:
         self.segment_rounds = segment_rounds
         self.max_rounds = max_rounds
         self.supervisor_cfg = supervisor_cfg
+        self.resume_from = resume_from  # drain-checkpoint dir to resume from
         self.run = None  # ElasticRun once started (lazily, on first ready step)
         self.stepping = False  # a segment is executing outside the server lock
         self.done = False
         self.rounds_served = 0
+        self.crash_count = 0  # consecutive failed steps (reset on success)
         self.latencies_s: List[float] = []
 
 
@@ -189,6 +195,7 @@ class FerretServer:
         segment_rounds: int = 8,
         smoke: bool = True,
         profile_feedback: bool = False,
+        max_tenant_crashes: int = 3,
     ):
         self.engine_cache = engine_cache or EngineCache()
         # host-side: tenants refine their persisted profiles from observed
@@ -200,12 +207,18 @@ class FerretServer:
         )
         self.segment_rounds = int(segment_rounds)
         self.smoke = smoke
+        # a tenant failing this many *consecutive* steps is quarantined:
+        # finalized with whatever it completed, so it cannot starve or
+        # kill the serve loop for its siblings
+        self.max_tenant_crashes = int(max_tenant_crashes)
         self._tenants: Dict[str, _Tenant] = {}  # insertion = admission order
         self._results: Dict[str, StreamResult] = {}
         self._latencies: Dict[str, List[float]] = {}
+        self._quarantined: Dict[str, str] = {}  # name -> reason
         self._model_cache: Dict[Any, ModelConfig] = {}
         self._lock = threading.RLock()
         self._counter = 0
+        self._draining = False
 
     # -- admission ---------------------------------------------------------
     def admit(
@@ -228,6 +241,7 @@ class FerretServer:
         supervisor_cfg: Any = None,
         params: Any = None,
         seed: int = 0,
+        resume_from: Optional[str] = None,
     ) -> TenantHandle:
         """Admit one tenant session; the pool re-divides immediately.
 
@@ -236,7 +250,10 @@ class FerretServer:
         bounds the tenant's run; ``segment_rounds`` overrides the server's
         scheduling quantum for this tenant. ``supervisor_cfg`` runs the
         tenant's segments supervised (checkpoints, NaN rollback) in its
-        own per-tenant checkpoint namespace.
+        own per-tenant checkpoint namespace. ``resume_from`` points at the
+        tenant's drain-checkpoint directory from a previous server's
+        ``drain()`` — the run resumes that state exactly where the drain
+        stopped it (seekable sources are positioned at the saved cursor).
         """
         with self._lock:
             if name is None:
@@ -275,6 +292,7 @@ class FerretServer:
                 tenant_feed=tenant_feed,
                 segment_rounds=int(segment_rounds or self.segment_rounds),
                 max_rounds=max_rounds, supervisor_cfg=supervisor_cfg,
+                resume_from=resume_from,
             )
             self._tenants[name] = tenant
             self._rebalance_locked()
@@ -340,11 +358,98 @@ class FerretServer:
                 break
             if timeout_s is not None and time.perf_counter() - t0 > timeout_s:
                 break
+            spec = faults_lib.fire("serve.loop")
+            if spec is not None and spec.kind == "drain":
+                self.request_drain()  # an injected SIGTERM
+            if self._draining:
+                break  # the caller drains (drain()) or restarts
             if self.step() is not None:
                 served += 1
             elif self._tenants:
                 time.sleep(poll_s)  # everyone is waiting on an open feed
         return self.results()
+
+    # -- graceful drain ----------------------------------------------------
+    def request_drain(self) -> None:
+        """Ask the serve loop to stop at the next segment boundary.
+
+        Safe from any thread (and from a signal handler): nothing is
+        interrupted mid-segment; ``serve()`` returns once the in-flight
+        decision completes, and ``drain()`` then checkpoints every tenant.
+        """
+        self._draining = True
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def install_signal_handler(self, signum: int = signal.SIGTERM) -> None:
+        """Route ``SIGTERM`` (or another signal) into ``request_drain``.
+
+        Main thread only (CPython restriction). The previous handler is
+        not chained — install last.
+        """
+        signal.signal(signum, lambda _sig, _frame: self.request_drain())
+
+    def drain(self, checkpoint_dir: str) -> Dict[str, Dict[str, Any]]:
+        """Stop every live tenant at its segment boundary and checkpoint it.
+
+        Each tenant's end-of-segment state (weights, optimizer moments,
+        Iter-Fisher statistics, partition bounds, stream cursor, budget)
+        is saved under ``checkpoint_dir/tenant_<name>`` via the trainer's
+        live snapshot; an atomic ``drain_manifest.json`` records the
+        admission metadata a restart needs. A new server re-admits with
+        ``admit(..., resume_from=<tenant dir>)`` and every stream resumes
+        exactly where it stopped — zero rounds lost, zero re-trained.
+
+        Tenants that never started (nothing consumed) get no checkpoint
+        (``"checkpoint": None``): a restart starts them from scratch,
+        which is still exactly-once. Returns the manifest.
+        """
+        self.request_drain()
+        # let in-flight segments (other serving threads) reach a boundary
+        while True:
+            with self._lock:
+                if not any(t.stepping for t in self._tenants.values()):
+                    break
+            time.sleep(0.001)
+        with self._lock:
+            tenants = list(self._tenants.values())
+        os.makedirs(checkpoint_dir, exist_ok=True)
+        manifest: Dict[str, Dict[str, Any]] = {}
+        for tenant in tenants:
+            entry: Dict[str, Any] = {
+                "weight": tenant.weight,
+                "rounds_served": tenant.rounds_served,
+                "algorithm": tenant.session.algorithm.name,
+                "checkpoint": None,
+                "cursor": 0,
+            }
+            raw = None
+            if tenant.run is not None:
+                raw = tenant.run.abort()  # stop() for healthy runs
+                tenant_dir = os.path.join(checkpoint_dir, f"tenant_{tenant.name}")
+                path = tenant.run.trainer.save_live_checkpoint(tenant_dir)
+                rs = tenant.run.trainer.live_resume_state()
+                if path is not None:
+                    entry["checkpoint"] = tenant_dir
+                    entry["cursor"] = int(rs.cursor)
+            self._finalize(tenant, raw)
+            manifest[tenant.name] = entry
+        tmp = os.path.join(checkpoint_dir, "drain_manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(checkpoint_dir, "drain_manifest.json"))
+        faults_lib.resolved("serve.loop")  # an injected drain is now healed
+        return manifest
+
+    @staticmethod
+    def load_drain_manifest(checkpoint_dir: str) -> Dict[str, Dict[str, Any]]:
+        """Read a ``drain()`` manifest (what to re-admit, and from where)."""
+        with open(os.path.join(checkpoint_dir, "drain_manifest.json")) as f:
+            return json.load(f)
 
     # -- observability -----------------------------------------------------
     def results(self) -> Dict[str, StreamResult]:
@@ -356,6 +461,12 @@ class FerretServer:
     def active_tenants(self) -> List[str]:
         with self._lock:
             return list(self._tenants)
+
+    @property
+    def quarantined_tenants(self) -> Dict[str, str]:
+        """Tenants removed after repeated crashes: name → last error."""
+        with self._lock:
+            return dict(self._quarantined)
 
     @property
     def compile_count(self) -> int:
@@ -453,7 +564,20 @@ class FerretServer:
         # blocks admissions, pushes, or other tenants' steps
         if tenant.run is None and not self._start_tenant(tenant):
             return None
-        report = tenant.run.step()
+        try:
+            spec = faults_lib.fire("serve.step", tenant=tenant.name)
+            if spec is not None and spec.kind == "tenant_crash":
+                # fired *before* run.step(): the run stays healthy, so a
+                # later scheduling decision can retry it
+                raise TenantCrashError(
+                    f"injected crash in tenant {tenant.name!r}"
+                )
+            report = tenant.run.step()
+        except Exception as e:  # one tenant's failure must not kill the loop
+            return self._tenant_crashed(tenant, e)
+        if tenant.crash_count:
+            tenant.crash_count = 0
+            faults_lib.resolved("serve.step")
         t_done = time.perf_counter()
         if report is None:
             self._finalize(tenant, tenant.run.result())
@@ -481,6 +605,7 @@ class FerretServer:
                 max_rounds=tenant.max_rounds,
                 segment_rounds=self._segment_cap(tenant),
                 supervisor_cfg=tenant.supervisor_cfg,
+                resume_from=tenant.resume_from,
             )
         except ValueError:
             # an already-exhausted feed with no batch/seq to infer from:
@@ -488,6 +613,32 @@ class FerretServer:
             self._finalize(tenant, None)
             return False
         return True
+
+    def _tenant_crashed(
+        self, tenant: _Tenant, exc: BaseException
+    ) -> Optional[ServedSegment]:
+        """Contain one tenant's failed step: retry, then quarantine.
+
+        Consecutive failures under ``max_tenant_crashes`` with a healthy
+        run are left for a later scheduling decision to retry (the stream
+        stays exactly-once: a failed step consumed nothing, or its
+        generator rewound). A broken run (the exception escaped the
+        segment generator) or a tenant over the limit is quarantined:
+        aborted with the segments it completed salvaged into its final
+        result, so siblings and the shared ``EngineCache`` are untouched.
+        """
+        with self._lock:
+            tenant.crash_count += 1
+            broken = tenant.run is not None and tenant.run.broken
+            retry = tenant.crash_count < self.max_tenant_crashes and not broken
+        if retry:
+            return None
+        raw = tenant.run.abort() if tenant.run is not None else None
+        with self._lock:
+            self._quarantined[tenant.name] = f"{type(exc).__name__}: {exc}"
+        self._finalize(tenant, raw)
+        faults_lib.resolved("serve.step")
+        return None
 
     def _finalize(self, tenant: _Tenant, raw: Any) -> None:
         from repro.api.runners import stream_result_from_elastic

@@ -1,0 +1,333 @@
+"""Deterministic fault injection + the recovery paths it exercises.
+
+Unit coverage of the ``repro.faults`` plane itself (spec validation,
+hit-count determinism, thread safety, recovery-latency records, seeded
+storms), then one test per hardened layer:
+
+- stream: injected stalls and transient take errors are absorbed by the
+  feeder bit-exactly; a dead prefetch worker falls back to a synchronous
+  pull — every round still delivered exactly once;
+- checkpoint: a crash mid-write never clobbers the previous checkpoint, a
+  corrupt/torn payload is detected by checksum, quarantined, and restore
+  falls back to the previous good one;
+- engine: a transient device error rewinds and re-runs the segment from
+  the retained rows (bit-exact vs a clean run); a NaN-poisoned batch
+  under a Supervisor rolls back and completes.
+
+Serve-layer fault isolation (tenant crash, quarantine, drain→restore)
+lives in ``tests/test_serve.py`` next to the other server tests.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api.streams import ArrayStreamSource, BufferedStreamSource
+from repro.checkpointing.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    latest_checkpoint,
+    restore_checkpoint,
+    restore_latest_good,
+    save_checkpoint,
+    verify_checkpoint,
+)
+from repro.faults import (
+    FaultError,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    TransientFaultError,
+)
+
+# ---------------------------------------------------------------------------
+# the injection plane itself
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("no.such.point", "stall")
+    with pytest.raises(ValueError):
+        FaultSpec("stream.take", "no_such_kind")
+    with pytest.raises(ValueError):
+        FaultSpec("stream.take", "stall", times=0)
+
+
+def test_injector_after_times_and_match():
+    plan = FaultPlan(specs=(
+        FaultSpec("stream.take", "error", after=2, times=2),
+        FaultSpec("serve.step", "tenant_crash", match=(("tenant", "t1"),)),
+    ))
+    inj = FaultInjector(plan)
+    # hits 0 and 1 are skipped, 2 and 3 fire, 4 is past the window
+    fired = [inj.fire("stream.take") is not None for _ in range(5)]
+    assert fired == [False, False, True, True, False]
+    # context filter: only the matching tenant advances (and fires)
+    assert inj.fire("serve.step", tenant="t0") is None
+    assert inj.fire("serve.step", tenant="t1") is not None
+    assert inj.fire("serve.step", tenant="t1") is None  # times=1 spent
+
+
+def test_injector_thread_safe_hit_counts():
+    plan = FaultPlan(specs=(FaultSpec("stream.take", "error", after=50, times=7),))
+    inj = FaultInjector(plan)
+    hits = []
+
+    def hammer():
+        for _ in range(25):
+            hits.append(inj.fire("stream.take"))
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # 100 hits over a [50, 57) window: exactly 7 fired, regardless of schedule
+    assert sum(1 for h in hits if h is not None) == 7
+    assert inj.fired == 7
+
+
+def test_records_and_resolved_latency():
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("stream.take", "stall"),)))
+    assert inj.resolved("stream.take") is None  # nothing outstanding: no-op
+    assert inj.fire("stream.take", n=4) is not None
+    assert [r.recovered for r in inj.records] == [False]
+    rec = inj.resolved("stream.take")
+    assert rec is not None and rec.recovery_latency_s >= 0.0
+    assert not inj.unrecovered()
+    s = inj.summary()
+    assert s["fired"] == 1 and s["recovered"] == 1
+    assert s["recovery_latency_max_s"] is not None
+    assert s["records"][0]["ctx"] == {"n": "4"}
+
+
+def test_storm_is_seed_deterministic():
+    a, b = FaultPlan.storm(seed=7), FaultPlan.storm(seed=7)
+    assert a.specs == b.specs and a.kinds() == b.kinds()
+    assert FaultPlan.storm(seed=8).specs != a.specs
+    # ≥ 4 distinct kinds across the 4 layers (the bench's storm contract)
+    assert len(a.kinds()) >= 4
+    assert not any(
+        s.kind == "nan" for s in FaultPlan.storm(seed=7, supervised=False).specs
+    )
+    pinned = FaultPlan.storm(seed=7, tenant="x")
+    assert all(
+        s.match == (("tenant", "x"),)
+        for s in pinned.specs if s.point == "serve.step"
+    )
+
+
+def test_inject_context_installs_and_clears():
+    assert faults.fire("stream.take") is None  # nothing installed: no-op
+    with faults.inject(FaultPlan(specs=(FaultSpec("stream.take", "error"),))) as chaos:
+        assert faults.active() is chaos
+        assert faults.fire("stream.take") is not None
+    assert faults.active() is None
+    assert chaos.fired == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer: crash mid-write, corruption, fallback-to-previous-good
+# ---------------------------------------------------------------------------
+
+
+def _ckpt_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 8)).astype(np.float32)}
+
+
+def test_crash_mid_write_preserves_previous_checkpoint(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _ckpt_state(1), extras={"cursor": 10})
+    plan = FaultPlan(specs=(FaultSpec("checkpoint.write", "crash_mid_write"),))
+    with faults.inject(plan):
+        with pytest.raises(FaultError):
+            save_checkpoint(d, 2, _ckpt_state(2), extras={"cursor": 20})
+    # the torn write never renamed: previous checkpoint set is untouched
+    assert latest_checkpoint(d).endswith("step_0000000001")
+    _, step, extras = restore_checkpoint(d, _ckpt_state())
+    assert step == 1 and extras["cursor"] == 10
+    # the crash artifact (a .tmp dir with a torn shard) is left behind, and
+    # the manager's gc clears it once a later save lands
+    assert any(x.endswith(".tmp") for x in os.listdir(d))
+    mgr = CheckpointManager(d, keep=3, every_steps=1)
+    mgr.save_async(3, _ckpt_state(3))
+    mgr.wait()
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_corrupt_payload_quarantined_and_fallback(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _ckpt_state(1), extras={"cursor": 10})
+    plan = FaultPlan(specs=(FaultSpec("checkpoint.write", "corrupt_payload"),))
+    with faults.inject(plan):
+        save_checkpoint(d, 2, _ckpt_state(2), extras={"cursor": 20})
+    # the corrupted latest fails its checksum...
+    with pytest.raises(CheckpointCorruptError):
+        verify_checkpoint(os.path.join(d, "step_0000000002"))
+    # ...so restore falls back to the previous good one and quarantines it
+    state, step, extras = restore_latest_good(d, _ckpt_state())
+    assert step == 1 and extras["cursor"] == 10
+    np.testing.assert_array_equal(state["w"], _ckpt_state(1)["w"])
+    assert any(x.endswith(".corrupt") for x in os.listdir(d))
+    assert latest_checkpoint(d).endswith("step_0000000001")
+
+
+def test_torn_payload_detected_by_checksum(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _ckpt_state(1))
+    save_checkpoint(d, 2, _ckpt_state(2))
+    shard = os.path.join(d, "step_0000000002", "shard_0.npz")
+    size = os.path.getsize(shard)
+    with open(shard, "r+b") as f:  # torn write: half the payload gone
+        f.truncate(size // 2)
+    state, step, _ = restore_checkpoint(d, _ckpt_state())
+    assert step == 1
+    np.testing.assert_array_equal(state["w"], _ckpt_state(1)["w"])
+
+
+def test_manager_surfaces_injected_write_error_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, every_steps=1)
+    plan = FaultPlan(specs=(FaultSpec("checkpoint.write", "crash_mid_write"),))
+    with faults.inject(plan):
+        mgr.save_async(1, _ckpt_state())
+        with pytest.raises(FaultError):
+            mgr.wait()
+
+
+# ---------------------------------------------------------------------------
+# stream layer: stalls, transient take errors, feeder death
+# ---------------------------------------------------------------------------
+
+_R = 8
+
+
+def _rows(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": rng.integers(0, 32, size=(_R, 2, 4)).astype(np.int32)}
+
+
+def test_stream_stall_and_error_bit_exact_exactly_once():
+    rows = _rows()
+    clean = BufferedStreamSource(ArrayStreamSource(rows), prefetch=False)
+    want = clean.take(_R)
+    plan = FaultPlan(specs=(
+        FaultSpec("stream.take", "stall", after=0, arg=0.01),
+        FaultSpec("stream.take", "error", after=1),
+    ))
+    src = BufferedStreamSource(ArrayStreamSource(rows), prefetch=False)
+    with faults.inject(plan) as chaos:
+        got = [src.take(3), src.take(3), src.take(2)]
+    cat = {k: np.concatenate([g[k] for g in got]) for k in got[0]}
+    np.testing.assert_array_equal(cat["tokens"], want["tokens"])  # bit-exact
+    assert src.take(1) is None  # nothing re-served: exactly-once
+    assert chaos.fired == 2 and not chaos.unrecovered()
+    assert src.take_wait_s >= 0.01  # the stall is visible, not hidden
+
+
+def test_feeder_death_falls_back_to_sync_pull():
+    rows = _rows(seed=3)
+    plan = FaultPlan(specs=(FaultSpec("stream.prefetch", "feeder_death"),))
+    src = BufferedStreamSource(ArrayStreamSource(rows), prefetch=True)
+    with faults.inject(plan) as chaos:
+        src.prefetch(4)
+        first = src.take(4)  # syncs on the dead worker, re-pulls inline
+        rest = src.take(_R)
+    try:
+        np.testing.assert_array_equal(first["tokens"], rows["tokens"][:4])
+        np.testing.assert_array_equal(rest["tokens"], rows["tokens"][4:])
+        assert src.take(1) is None
+        assert chaos.fired == 1 and not chaos.unrecovered()
+    finally:
+        src.close()
+
+
+def test_transient_take_error_escapes_after_retry():
+    # two consecutive injected errors exhaust the feeder's single retry —
+    # the error surfaces as the transient it is (callers rewind + re-take)
+    plan = FaultPlan(specs=(FaultSpec("stream.take", "error", times=2),))
+    src = BufferedStreamSource(ArrayStreamSource(_rows()), prefetch=False)
+    with faults.inject(plan):
+        with pytest.raises(TransientFaultError):
+            src.take(2)
+        got = src.take(2)  # next attempt is clean; nothing was consumed
+    np.testing.assert_array_equal(got["tokens"], _rows()["tokens"][:2])
+
+
+# ---------------------------------------------------------------------------
+# engine layer: transient rewind/re-run (bit-exact), NaN under a Supervisor
+# ---------------------------------------------------------------------------
+
+
+def _tiny_session(stream_arrays, **over):
+    import math as _math
+
+    from repro.api import FerretSession
+    from repro.core.compensation import CompensationConfig
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="faults-test-lm", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=32,
+        compute_dtype="float32",
+    )
+    kw = dict(
+        batch=2, seq=16, lr=5e-3, seed=0,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+    kw.update(over)
+    return FerretSession(cfg, _math.inf, "er", stream_arrays, **kw)
+
+
+def _lm_stream(length=8, seed=0):
+    from repro.ocl.streams import StreamConfig, make_stream
+
+    return make_stream(StreamConfig(
+        kind="drift", modality="tokens", length=length, batch=2,
+        vocab=32, seq=16, seed=seed,
+    ))
+
+
+def test_elastic_transient_rewind_bit_exact():
+    from repro.core.ferret import EngineCache
+
+    stream = _lm_stream()
+    ref = _tiny_session(stream).run(
+        "elastic", segment_rounds=4, engine_cache=EngineCache()
+    )
+    plan = FaultPlan(specs=(FaultSpec("engine.step", "transient", after=1),))
+    with faults.inject(plan) as chaos:
+        got = _tiny_session(stream).run(
+            "elastic", segment_rounds=4, engine_cache=EngineCache()
+        )
+    # the faulted segment re-ran from the retained rows with unchanged
+    # state: the whole run is bit-exact vs the clean one, nothing skipped
+    np.testing.assert_array_equal(np.asarray(got.losses), np.asarray(ref.losses))
+    np.testing.assert_array_equal(got.online_acc_curve, ref.online_acc_curve)
+    assert got.rounds == ref.rounds == 8
+    assert chaos.fired == 1 and not chaos.unrecovered()
+
+
+def test_elastic_nan_under_supervisor_recovers(tmp_path):
+    from repro.core.ferret import EngineCache
+    from repro.runtime import SupervisorCfg
+
+    plan = FaultPlan(specs=(
+        FaultSpec("engine.step", "nan", match=(("supervised", True),)),
+    ))
+    sup = SupervisorCfg(
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, nan_check_every=1
+    )
+    with faults.inject(plan) as chaos:
+        res = _tiny_session(_lm_stream(seed=2)).run(
+            "elastic", segment_rounds=4, supervisor_cfg=sup,
+            engine_cache=EngineCache(),
+        )
+    assert res.rounds == 8  # the poisoned segment rolled back and re-ran
+    assert chaos.fired == 1 and not chaos.unrecovered()
+    assert all(np.isfinite(np.asarray(res.losses)))

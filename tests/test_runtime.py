@@ -130,3 +130,115 @@ def test_data_pipeline_exactly_once_cursor(tmp_path):
     s2.seek(3)
     b3 = s2.next_batch()
     np.testing.assert_array_equal(b3["tokens"], batches[3]["tokens"])
+
+
+def test_supervisor_retry_deadline_is_per_attempt(tmp_path):
+    """Regression: the step deadline must reset on every retry.
+
+    Each attempt takes ~0.07s against a 0.1s timeout. The first attempt
+    fails with a poisoned loss; with a *cumulative* timer (the old bug,
+    ``t0`` set once outside the attempt loop) the clean retry would
+    inherit the failed attempt's elapsed time and spuriously time out.
+    """
+    import time as _time
+
+    flaky = {"fail_next": False}
+
+    def step_fn(state, batch):
+        _time.sleep(0.07)
+        if flaky["fail_next"]:
+            flaky["fail_next"] = False
+            return state, {"loss": jnp.asarray(float("nan"))}
+        return {"w": state["w"] + 1}, {"loss": jnp.sum(state["w"])}
+
+    sup = Supervisor(
+        SupervisorCfg(
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            nan_check_every=1, step_timeout_s=0.1,
+        ),
+        step_fn,
+        {"w": jnp.zeros(2)},
+    )
+    sup.run_step({})
+    sup.manager.wait()
+    flaky["fail_next"] = True
+    rep = sup.run_step({})  # NaN, rollback, retry — must NOT TimeoutError
+    assert rep.restarted and rep.step == 2
+
+
+def test_supervisor_rollback_restores_extras(tmp_path):
+    """Regression: a mid-run rollback must hand checkpoint extras (stream
+    cursor, replay state) back through the same hook as ``try_restore`` —
+    dropping them silently double-trains rounds after the rollback."""
+    seen = {}
+    flaky = {"fail_next": False}
+
+    def step_fn(state, batch):
+        if flaky["fail_next"]:
+            flaky["fail_next"] = False
+            return state, {"loss": jnp.asarray(float("nan"))}
+        return {"w": state["w"] + 1}, {"loss": jnp.sum(state["w"])}
+
+    sup = Supervisor(
+        SupervisorCfg(checkpoint_dir=str(tmp_path), checkpoint_every=1, nan_check_every=1),
+        step_fn,
+        {"w": jnp.zeros(2)},
+        extras_hook=seen.update,
+    )
+    sup.run_step({}, extras={"cursor": 4})
+    sup.manager.wait()
+    flaky["fail_next"] = True
+    rep = sup.run_step({}, extras={"cursor": 5})
+    assert rep.restarted
+    assert seen["cursor"] == 4  # the rolled-back-to checkpoint's extras
+
+
+def test_supervisor_persistent_error_not_retried(tmp_path):
+    """A non-transient exception is a bug: surface it immediately, do not
+    burn the retry budget re-running something retries cannot fix."""
+    calls = {"n": 0}
+    fatals = []
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        raise ValueError("shape mismatch: a bug, not a fault")
+
+    sup = Supervisor(
+        SupervisorCfg(checkpoint_dir=str(tmp_path), max_retries=3),
+        step_fn,
+        {"w": jnp.zeros(2)},
+        on_fatal=fatals.append,
+    )
+    with pytest.raises(ValueError):
+        sup.run_step({})
+    assert calls["n"] == 1  # exactly one attempt
+    assert len(fatals) == 1 and isinstance(fatals[0], ValueError)
+
+
+def test_supervisor_transient_fault_retried_in_place(tmp_path):
+    """``TransientFaultError`` is raised before any side effect, so the
+    supervisor re-attempts without rolling back (state stays current)."""
+    from repro.faults import TransientFaultError
+
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise TransientFaultError("injected device hiccup")
+        return {"w": state["w"] + 1}, {"loss": jnp.sum(state["w"])}
+
+    sup = Supervisor(
+        SupervisorCfg(
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            nan_check_every=1, backoff_base_s=0.001, backoff_cap_s=0.01,
+        ),
+        step_fn,
+        {"w": jnp.zeros(2)},
+    )
+    sup.run_step({})
+    sup.manager.wait()
+    rep = sup.run_step({})  # transient on attempt 1, clean on attempt 2
+    assert rep.restarted and rep.step == 2 and calls["n"] == 3
+    # no rollback happened: state advanced past the checkpointed step 1
+    np.testing.assert_array_equal(np.asarray(sup.state["w"]), np.full(2, 2.0))

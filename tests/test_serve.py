@@ -349,3 +349,149 @@ def test_stream_result_typed_accessors():
     )
     assert empty.peak_buffered_rounds == 0
     assert empty.lam_curve.size == 0
+
+
+# ---------------------------------------------------------------------------
+# fault isolation: crash containment, quarantine, graceful drain -> restore
+# ---------------------------------------------------------------------------
+
+
+def _chaos_server(streams, **over):
+    import repro.serve as _serve
+
+    kw = dict(segment_rounds=SEGMENT)
+    kw.update(over)
+    resume = kw.pop("_resume", {})
+    server = _serve.FerretServer(**kw)
+    for name, s in streams.items():
+        server.admit(_model(), "er", s, name=name, batch=BATCH, seq=SEQ,
+                     max_workers=3, max_stages=4,
+                     resume_from=resume.get(name))
+    return server
+
+
+def test_tenant_crash_retried_no_crosstalk():
+    """A transient tenant crash (< max_tenant_crashes) is retried at a
+    later scheduling decision: the injected crash fires before the step
+    consumed anything, so the tenant — and its siblings — finish all
+    rounds bit-identically to an uninjected server."""
+    from repro import faults
+    from repro.faults import FaultPlan, FaultSpec
+
+    streams = {"a": _stream(seed=0), "b": _stream(seed=1)}
+    ref = _chaos_server(streams).serve(timeout_s=600)
+
+    plan = FaultPlan(specs=(
+        FaultSpec("serve.step", "tenant_crash", after=1, match=(("tenant", "a"),)),
+    ))
+    server = _chaos_server(streams)
+    with faults.inject(plan) as chaos:
+        got = server.serve(timeout_s=600)
+
+    assert chaos.fired == 1 and not chaos.unrecovered()
+    assert not server.quarantined_tenants
+    for n in ("a", "b"):
+        assert got[n].rounds == ref[n].rounds == R_STREAM
+        np.testing.assert_array_equal(
+            np.asarray(got[n].losses), np.asarray(ref[n].losses)
+        )
+        np.testing.assert_array_equal(
+            got[n].online_acc_curve, ref[n].online_acc_curve
+        )
+
+
+def test_tenant_quarantine_isolates_siblings():
+    """A persistently crashing tenant is quarantined after
+    ``max_tenant_crashes`` consecutive failures; the sibling sharing the
+    server (and ``EngineCache``) is untouched and bit-exact vs solo."""
+    from repro import faults
+    from repro.faults import FaultPlan, FaultSpec
+
+    ok_stream = _stream(seed=2)
+    solo = _chaos_server({"ok": ok_stream}).serve(timeout_s=600)["ok"]
+
+    plan = FaultPlan(specs=(
+        FaultSpec("serve.step", "tenant_crash", times=99, match=(("tenant", "bad"),)),
+    ))
+    server = _chaos_server(
+        {"ok": ok_stream, "bad": _stream(seed=9)}, max_tenant_crashes=2
+    )
+    with faults.inject(plan) as chaos:
+        results = server.serve(timeout_s=600)
+
+    assert list(server.quarantined_tenants) == ["bad"]
+    assert "TenantCrashError" in server.quarantined_tenants["bad"]
+    assert chaos.fired == 2  # one retry, then quarantine
+    assert results["bad"].rounds == 0  # crashed before consuming anything
+    assert results["ok"].rounds == R_STREAM
+    np.testing.assert_array_equal(
+        np.asarray(results["ok"].losses), np.asarray(solo.losses)
+    )
+    np.testing.assert_array_equal(
+        results["ok"].online_acc_curve, solo.online_acc_curve
+    )
+
+
+def test_injected_drain_then_restore_loses_zero_rounds(tmp_path):
+    """An injected SIGTERM-style drain stops serving at a segment
+    boundary; ``drain()`` checkpoints every tenant; a fresh server
+    re-admits with ``resume_from`` and finishes — per tenant, rounds
+    served before + after the restart sum to exactly the stream length
+    (nothing lost, nothing re-trained)."""
+    from repro import faults
+    from repro.faults import FaultPlan, FaultSpec
+    from repro.serve import FerretServer
+
+    streams = {"a": _stream(seed=3), "b": _stream(seed=4)}
+    ckpt = str(tmp_path / "drainpoint")
+
+    plan = FaultPlan(specs=(FaultSpec("serve.loop", "drain", after=2),))
+    server = _chaos_server(streams)
+    with faults.inject(plan) as chaos:
+        finished = server.serve(timeout_s=600)
+        assert not finished  # nobody finished: the drain stopped the loop
+        assert server.draining
+        manifest = server.drain(ckpt)
+    assert chaos.fired == 1 and not chaos.unrecovered()
+    partial = server.results()  # drain finalized every tenant's partial run
+
+    served_pre = sum(e["rounds_served"] for e in manifest.values())
+    assert 0 < served_pre < 2 * R_STREAM  # genuinely mid-flight
+    for name, entry in manifest.items():
+        assert entry["cursor"] == entry["rounds_served"]
+        assert partial[name].rounds == entry["rounds_served"]
+        if entry["rounds_served"]:
+            assert entry["checkpoint"] is not None
+
+    # restart: a brand-new server over fresh (seekable) copies of the
+    # same streams, positioned by the drain manifest
+    reloaded = FerretServer.load_drain_manifest(ckpt)
+    assert reloaded == manifest
+    server2 = _chaos_server(
+        streams, _resume={n: e["checkpoint"] for n, e in reloaded.items()}
+    )
+    final = server2.serve(timeout_s=600)
+    for name, entry in reloaded.items():
+        # exactly-once across the restart: pre + post == stream length
+        assert entry["rounds_served"] + final[name].rounds == R_STREAM
+
+
+def test_sigterm_handler_requests_drain():
+    import os
+    import signal
+    import time as _time
+
+    from repro.serve import FerretServer
+
+    server = FerretServer()
+    prev = signal.getsignal(signal.SIGTERM)
+    server.install_signal_handler()
+    try:
+        os.kill(os.getpid(), signal.SIGTERM)
+        for _ in range(200):
+            if server.draining:
+                break
+            _time.sleep(0.005)
+        assert server.draining
+    finally:
+        signal.signal(signal.SIGTERM, prev)
