@@ -15,8 +15,10 @@ dice roll:
    back to the newest surviving checkpoint and quarantine the corrupt one.
 4. **serve** — three tenants, one crash-injected, plus an injected
    SIGTERM-style drain mid-serve: the crashed tenant is retried (zero
-   crosstalk), ``drain()`` checkpoints everyone, and a restarted server
-   resumes with **zero rounds lost or re-trained** per tenant.
+   crosstalk), ``drain()`` checkpoints everyone (rings included), and a
+   restarted server resumes with **zero rounds lost or re-trained** per
+   tenant — and, witnessed by a vanilla tenant, **bit-exact** losses vs
+   an uninterrupted run.
 
 Every scenario embeds its injector ``summary()`` (fired/recovered counts,
 per-fault recovery latency) into ``BENCH_faults.json`` at the repo root;
@@ -187,12 +189,29 @@ def scenario_serve() -> dict:
     assert all(results_a[n].rounds == SERVE_ROUNDS for n in TENANTS)
     crash_summary = _assert_recovered(chaos_a, "serve/crash")
 
-    # phase B — injected SIGTERM drain mid-serve, checkpoint, restart
+    # phase B — injected SIGTERM drain mid-serve, checkpoint, restart.
+    # A vanilla tenant rides along to witness *bit-exactness*: drain
+    # checkpoints carry the in-flight accumulation/Δθ rings, so its
+    # drained+restored loss sequence must equal an uninterrupted run's
+    # bit for bit. (The "er" tenants stay round-exact but not loss-exact:
+    # their host-side replay reservoir resets across the restart.)
+    stream_v = C.bench_stream(length=SERVE_ROUNDS, seed=SEED + 20)
+    solo = FerretServer(segment_rounds=SEGMENT)
+    solo.admit(
+        cfg, "vanilla", stream_v, name="tv", batch=C.BATCH, seq=C.SEQ,
+        max_workers=3, max_stages=4,
+    )
+    ref_v = solo.serve(timeout_s=600)["tv"]
+
     drain_plan = FaultPlan(
         specs=(FaultSpec("serve.loop", "drain", after=4),), seed=SEED
     )
     server = FerretServer(segment_rounds=SEGMENT)
     admit_all(server)
+    server.admit(
+        cfg, "vanilla", stream_v, name="tv", batch=C.BATCH, seq=C.SEQ,
+        max_workers=3, max_stages=4,
+    )
     ckpt = tempfile.mkdtemp(prefix="bench_faults_drain_")
     with faults.inject(drain_plan) as chaos_b:
         server.serve(timeout_s=600)
@@ -201,13 +220,27 @@ def scenario_serve() -> dict:
     drain_summary = _assert_recovered(chaos_b, "serve/drain")
 
     served_pre = {n: manifest[n]["rounds_served"] for n in TENANTS}
+    v_losses = [np.asarray(server.results()["tv"].losses)]
     server2 = FerretServer(segment_rounds=SEGMENT)
     admit_all(server2, resume={n: manifest[n]["checkpoint"] for n in TENANTS})
+    v_entry = manifest.get("tv", {})
+    v_restored = v_entry.get("checkpoint") is not None
+    if v_restored:
+        server2.admit(
+            cfg, "vanilla", stream_v, name="tv", batch=C.BATCH, seq=C.SEQ,
+            max_workers=3, max_stages=4, resume_from=v_entry["checkpoint"],
+        )
     final = server2.serve(timeout_s=600)
+    if v_restored:
+        v_losses.append(np.asarray(final["tv"].losses))
     lost = {
         n: SERVE_ROUNDS - served_pre[n] - final[n].rounds for n in TENANTS
     }
     assert all(v == 0 for v in lost.values()), f"rounds lost: {lost}"
+    # drain→restore is bit-exact, not merely round-exact
+    np.testing.assert_array_equal(
+        np.concatenate(v_losses), np.asarray(ref_v.losses)
+    )
     lat = [
         s["recovery_latency_max_s"] for s in (crash_summary, drain_summary)
     ]
@@ -228,6 +261,8 @@ def scenario_serve() -> dict:
         "rounds_served_pre_drain": served_pre,
         "rounds_served_post_restore": {n: final[n].rounds for n in TENANTS},
         "rounds_lost": lost,
+        "drain_restore_bit_exact": True,  # asserted above (vanilla tenant)
+        "drain_interrupted_witness": v_restored,
         "quarantined": server_a.quarantined_tenants,
         "injector": merged,
     }

@@ -57,6 +57,55 @@ def _ferret_cfg(budget: float = math.inf) -> FerretConfig:
     )
 
 
+def _aba_roundtrip_bit_exact(cfg, params, profile, full_plan) -> bool:
+    """Bit-exactness of the A→B→A cross-partition remap round-trip.
+
+    Splits the weights on the unconstrained plan's bounds (A), remaps
+    params + synthetic ring contents onto the 40%-budget bounds (B) and
+    back, and checks every leaf is bit-identical — slot contents are
+    permuted between stages, never recomputed or zeroed.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import transformer as T
+    from repro.runtime import ElasticStreamTrainer
+    from repro.state import remap_ring_trees, remap_stage_params
+
+    trainer = ElasticStreamTrainer(
+        cfg, _ferret_cfg(), C.BATCH, C.SEQ, profile=profile
+    )
+    bounds_a = list(full_plan.partition.bounds)
+    bounds_b = list(
+        trainer.plan_for(full_plan.memory * FRACTIONS[1]).partition.bounds
+    )
+    sp_a = T.split_stage_params(cfg, params, bounds_a)
+    rng = np.random.default_rng(0)
+    num_slots = 3
+    rings_a = tuple(
+        jax.tree.map(
+            lambda p: jnp.asarray(
+                rng.standard_normal((num_slots, *p.shape)), jnp.float32
+            ),
+            sp,
+        )
+        for sp in sp_a
+    )
+    sp_b = remap_stage_params(cfg, sp_a, bounds_b)
+    rings_b = remap_ring_trees(cfg, rings_a, bounds_b, num_slots)
+    sp_rt = remap_stage_params(cfg, sp_b, bounds_a)
+    rings_rt = remap_ring_trees(cfg, rings_b, bounds_a, num_slots)
+
+    def _eq(t1, t2) -> bool:
+        l1, l2 = jax.tree.leaves(t1), jax.tree.leaves(t2)
+        return len(l1) == len(l2) and all(
+            np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(l1, l2)
+        )
+
+    return _eq(sp_a, sp_rt) and _eq(rings_a, rings_rt)
+
+
 def run(write_json: bool = True) -> dict:
     cfg = C.bench_model()
     params = C.init_params(cfg)
@@ -119,7 +168,21 @@ def run(write_json: bool = True) -> dict:
             "cache_hit": s.cache_hit,
             "rounds_compiled": s.rounds_compiled,
             "online_acc": s.result.online_acc,
+            "rounds_lost": s.rounds_lost,
         })
+
+    # every switch must be lossless: the in-flight accumulation/Δθ rings
+    # are carried (same-schedule switches) or flushed into the weights
+    # (schedule-restarting switches), never silently dropped
+    assert res.rounds_lost_per_switch == 0, (
+        f"budget switches dropped in-flight rounds: {res.rounds_lost_per_switch}"
+    )
+
+    # merge∘re-split round-trip identity: moving live state A→B→A across
+    # partitions returns bit-identical params and ring contents — the
+    # property that makes cross-partition switches lossless
+    switch_bit_exact = _aba_roundtrip_bit_exact(cfg, params, profile, full)
+    assert switch_bit_exact, "A→B→A state remap round-trip is not bit-exact"
 
     switch_cost = sum(s.replan_s + s.remap_s for s in res.segments if s.replanned)
     print(f"\ntotal switch overhead: {1e3*switch_cost:.1f} ms "
@@ -156,6 +219,8 @@ def run(write_json: bool = True) -> dict:
         },
         "retention_vs_unconstrained": retention,
         "elastic_minus_cold_restart": res.online_acc - cold_oacc,
+        "rounds_lost_per_switch": res.rounds_lost_per_switch,
+        "switch_bit_exact": switch_bit_exact,
         "segments": seg_rows,
     }
     if write_json:

@@ -64,6 +64,15 @@ class StreamResult:
         """Engine-compile cache accounting for this run."""
         return {"hits": self.engine_cache_hits, "misses": self.engine_cache_misses}
 
+    @property
+    def rounds_lost_per_switch(self) -> int:
+        """Max in-flight backward rounds dropped at any budget switch.
+
+        0 on the default lossless path (the elastic trainer carries or
+        flushes the accumulation rings at every re-plan); non-zero only
+        under the explicit ``carry_rings=False`` escape hatch."""
+        return int(self.extras.get("rounds_lost_per_switch", 0))
+
     def metrics(self) -> Dict[str, Any]:
         """The scalar observability surface as one flat typed dict — what
         benchmark writers serialize and the server reports per tenant."""
@@ -80,6 +89,7 @@ class StreamResult:
             "engine_cache_misses": int(self.engine_cache_misses),
             "peak_buffered_rounds": self.peak_buffered_rounds,
             "stream_wait_s": self.stream_wait_s,
+            "rounds_lost_per_switch": self.rounds_lost_per_switch,
         }
 
     def summary(self) -> str:

@@ -238,6 +238,9 @@ def stream_result_from_elastic(
             "num_faults": raw.num_faults,
             "peak_buffered_rounds": raw.peak_buffered_rounds,
             "stream_wait_s": raw.stream_wait_s,
+            # 0 ⇔ every budget switch this run made was lossless (in-flight
+            # accumulation rings carried or flushed, never dropped)
+            "rounds_lost_per_switch": raw.rounds_lost_per_switch,
             # stream-wide λ trajectory, same key the pipelined runner
             # reports (stitched across segments here)
             "lam_curve": (

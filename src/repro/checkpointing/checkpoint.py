@@ -50,6 +50,22 @@ Pytree = Any
 
 _SEP = "|"
 
+# Manifest schema history:
+#   1 (implicit — manifests without a "schema" key): engine state saved
+#     without the gradient-accumulation/Δθ rings or ring-geometry metadata.
+#   2: rings ride in the payload and the extras carry the ring geometry
+#     (ring_size/delta_ring) + schedule origin, so a restore is bit-exact
+#     instead of re-warming compensation. v1 checkpoints still load via
+#     forward migration (rings re-zeroed, with a warning reporting the
+#     re-warm horizon) — see ElasticStreamTrainer.load_drain_state /
+#     load_resume_state.
+CHECKPOINT_SCHEMA_VERSION = 2
+
+
+def checkpoint_schema(manifest: Dict[str, Any]) -> int:
+    """Schema version of a manifest (1 for pre-versioning checkpoints)."""
+    return int(manifest.get("schema", 1))
+
 
 class CheckpointCorruptError(ValueError):
     """A checkpoint failed verification (checksum/structure mismatch)."""
@@ -149,6 +165,7 @@ def save_checkpoint(
     digest, nbytes = _sha256(shard)
     manifest = {
         "step": step,
+        "schema": CHECKPOINT_SCHEMA_VERSION,
         "time": time.time(),
         "num_leaves": len(flat),
         "extras": extras or {},
@@ -279,7 +296,12 @@ def restore_latest_good(
 
 
 def plan_manifest(
-    plan, cursor: Optional[int] = None, budget_bytes: Optional[float] = None
+    plan,
+    cursor: Optional[int] = None,
+    budget_bytes: Optional[float] = None,
+    sched_origin: Optional[int] = None,
+    ring_size: Optional[int] = None,
+    delta_ring: Optional[int] = None,
 ) -> Dict[str, Any]:
     """JSON-safe checkpoint extras describing a live pipeline plan.
 
@@ -287,6 +309,9 @@ def plan_manifest(
     can resume the stream exactly where it stopped (``cursor``) and knows
     which partition the saved per-stage state was split on (``bounds``) —
     the restorer remaps to the new plan's bounds before resuming.
+    ``sched_origin`` / ``ring_size`` / ``delta_ring`` (schema ≥ 2) describe
+    the geometry the saved rings are shaped for, so a resume with matching
+    geometry continues the schedule bit-exactly instead of re-warming.
     """
     out: Dict[str, Any] = {
         "bounds": [int(b) for b in plan.partition.bounds],
@@ -302,6 +327,12 @@ def plan_manifest(
         out["budget_bytes"] = (
             float(budget_bytes) if budget_bytes != float("inf") else "inf"
         )
+    if sched_origin is not None:
+        out["sched_origin"] = int(sched_origin)
+    if ring_size is not None:
+        out["ring_size"] = int(ring_size)
+    if delta_ring is not None:
+        out["delta_ring"] = int(delta_ring)
     return out
 
 

@@ -436,7 +436,8 @@ class FerretTrainer:
                 else:
                     engine.set_schedule(engine_sched)
                 state = engine.init_state(
-                    stages, opt_states, comp_states, rings=rings, deltas=deltas
+                    stages, opt_states, comp_states, rings=rings, deltas=deltas,
+                    bounds=self.boundaries, sched_origin=0,
                 )
                 # only this segment's rounds ever reach the device
                 seg_stream = {k: jnp.asarray(v) for k, v in rows.items()}
@@ -479,11 +480,11 @@ class FerretTrainer:
                         self.profile = refined[0]
                 seg_index += 1
                 ys = {k: v[:seg_len] for k, v in ys.items()}  # drop padding
-                stages = list(final_state[0])
-                rings = tuple(final_state[1])
-                deltas = tuple(final_state[2])
-                opt_states = tuple(final_state[3])
-                comp_states = tuple(final_state[4])
+                stages = list(final_state.stage_params)
+                rings = tuple(final_state.rings)
+                deltas = tuple(final_state.deltas)
+                opt_states = tuple(final_state.opt_states)
+                comp_states = tuple(final_state.comp_states)
                 acc_all.append(np.asarray(ys["acc"], dtype=np.float64))
                 loss_all.append(np.asarray(ys["loss"]))
                 adm_all.append(np.asarray(ys["admitted"], dtype=np.float64))
@@ -574,5 +575,7 @@ def sequential_oracle_run(
     return {
         "acc": np.asarray(ys["acc"]),
         "loss": np.asarray(ys["loss"]),
-        "final_params": T.merge_stage_params(model_cfg, list(final_state[0])),
+        "final_params": T.merge_stage_params(
+            model_cfg, list(final_state.stage_params)
+        ),
     }

@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compensation as comp_lib
-from repro.core.schedule import EngineSchedule
+from repro.core.schedule import EngineSchedule, RingGeometry
 from repro.optim.optimizers import Optimizer
+from repro.state.engine_state import EngineState
 
 Pytree = Any
 
@@ -132,6 +133,14 @@ class FerretEngine:
         → the already-compiled scan is reused; different shapes retrace."""
         self.sched = schedule
 
+    @property
+    def ring_geometry(self) -> RingGeometry:
+        """Ring depths the live schedule shapes engine state for — what
+        ``repro.state.StateRemapper`` re-time-indexes rings against."""
+        return RingGeometry(
+            ring_size=self.sched.ring_size, delta_ring=self.sched.delta_ring
+        )
+
     # -- state ------------------------------------------------------------
     def init_state(
         self,
@@ -140,16 +149,20 @@ class FerretEngine:
         comp_states=None,
         rings=None,
         deltas=None,
-    ):
-        """Engine state for ``stage_params``.
+        *,
+        bounds=None,
+        sched_origin=None,
+    ) -> EngineState:
+        """Typed ``EngineState`` for ``stage_params``.
 
         ``opt_states`` / ``comp_states`` carry per-stage optimizer and
         compensation state across a re-plan (runtime/elastic_trainer.py);
         when omitted they are freshly initialized. ``rings`` / ``deltas``
         carry in-flight gradient-accumulation groups and the Δθ history
-        across a *same-structure* segment boundary (their shapes are
-        schedule-dependent, so they cannot survive a partition change and
-        are re-zeroed when omitted).
+        across segment boundaries — a cross-partition switch remaps them
+        through ``repro.state.StateRemapper`` (they are zero-filled only
+        when omitted, i.e. genuinely fresh). ``bounds`` / ``sched_origin``
+        are recorded as state metadata for the remapper and checkpoints.
         """
         Rsz, K = self.sched.ring_size, self.sched.delta_ring
         f32 = jnp.float32
@@ -169,9 +182,15 @@ class FerretEngine:
             comp_states = tuple(
                 comp_lib.init_state(sp, self.comp_cfg) for sp in stage_params
             )
-        return (
-            tuple(stage_params), tuple(rings), tuple(deltas),
-            tuple(opt_states), tuple(comp_states),
+        return EngineState(
+            stage_params=tuple(stage_params),
+            rings=tuple(rings),
+            deltas=tuple(deltas),
+            opt_states=tuple(opt_states),
+            comp_states=tuple(comp_states),
+            bounds=None if bounds is None else tuple(int(b) for b in bounds),
+            geometry=self.ring_geometry,
+            sched_origin=None if sched_origin is None else int(sched_origin),
         )
 
     # -- schedule arrays as scan xs ----------------------------------------
@@ -313,6 +332,13 @@ class FerretEngine:
         the engine was built with one); it rides through the jitted scan as
         an argument, so a same-shape refresh never retraces.
 
+        ``state`` may be an ``EngineState`` (preferred — the returned final
+        state keeps its bounds/geometry/schedule-origin metadata) or the
+        legacy plain 5-tuple. Either way the *jitted scan* carries the
+        plain tuple: the conversion happens here, outside the compiled
+        function, so metadata changes (a new ``sched_origin`` every
+        segment) never key the compile cache or force a retrace.
+
         Returns (final_state, ys dict of per-round metrics)."""
         if (self.penalty_fn is not None) and penalty is None:
             raise ValueError(
@@ -322,7 +348,15 @@ class FerretEngine:
             )
         xs = dict(self._schedule_xs())
         xs["batch"] = stream
-        return self._compiled(state, xs, penalty)
+        meta = state if isinstance(state, EngineState) else None
+        carry = state.as_tuple() if meta is not None else state
+        final, ys = self._compiled(carry, xs, penalty)
+        if meta is not None:
+            final = EngineState.from_tuple(
+                final, bounds=meta.bounds, geometry=meta.geometry,
+                sched_origin=meta.sched_origin,
+            )
+        return final, ys
 
 
 # ---------------------------------------------------------------------------

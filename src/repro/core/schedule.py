@@ -25,6 +25,42 @@ from repro.core.cost_model import PipelineConfig
 RING = "ring"  # sentinel docs
 
 
+@dataclasses.dataclass(frozen=True)
+class RingGeometry:
+    """Per-stage ring depths a schedule's engine state is shaped for.
+
+    Depends only on the pipeline config and stage count — *not* on the
+    partition bounds or the number of rounds — which is what makes
+    cross-partition ring remapping well-defined: two plans with equal
+    ``(config, num_stages)`` share one geometry (and one schedule), so
+    ring contents can move between their partitions slot-for-slot
+    (``repro.state.StateRemapper``).
+    """
+
+    ring_size: int  # gradient-accumulation ring slots per stage
+    delta_ring: int  # Δθ ring depth per stage (max staleness window)
+
+
+def ring_geometry(
+    config: PipelineConfig, num_stages: int, sync_period: Optional[int] = None
+) -> RingGeometry:
+    """Ring geometry for ``(config, num_stages)`` — the single source of
+    truth ``build_schedule`` (and every remap/checkpoint/drain path)
+    shapes ring arrays from."""
+    if sync_period is not None:
+        return RingGeometry(ring_size=1, delta_ring=1)
+    P = num_stages
+    tau_max = P - 1  # τ_j = P-1-j, maximized at stage 0
+    max_accum = max(
+        (s.accum for w in config.workers for s in w.stages), default=1
+    )
+    # gradient stays in its ring slot for ≤ N·(c_a-1) rounds of filling plus
+    # N·τ_j rounds of delay; slots are recycled round-robin per stage.
+    ring_size = int(2 + (tau_max if P > 1 else 0) + max_accum)
+    delta_ring = int(max(tau_max + 1, 1))
+    return RingGeometry(ring_size=ring_size, delta_ring=delta_ring)
+
+
 @dataclasses.dataclass
 class EngineSchedule:
     """All arrays indexed [round] or [round, stage]."""
@@ -111,8 +147,8 @@ def build_schedule(
 
     if sync_period is not None:
         K = max(int(sync_period), 1)
-        ring_size = 1
-        delta_ring = 1
+        geom = ring_geometry(config, P, sync_period)
+        ring_size, delta_ring = geom.ring_size, geom.delta_ring
         for m in range(R):
             process[m] = True
             backward[m, :] = True
@@ -129,13 +165,8 @@ def build_schedule(
         )
 
     # ---- asynchronous fine-grained schedule (Ferret) ----
-    max_accum = max(
-        (s.accum for w in workers for s in w.stages), default=1
-    )
-    # gradient stays in its ring slot for ≤ N·(c_a-1) rounds of filling plus
-    # N·τ_j rounds of delay; slots are recycled round-robin per stage.
-    ring_size = int(2 + (taus.max() if P > 1 else 0) + max_accum)
-    delta_ring = int(max(taus.max() + 1, 1))
+    geom = ring_geometry(config, P)
+    ring_size, delta_ring = geom.ring_size, geom.delta_ring
 
     # Per-(worker, stage) running state during construction.
     seen = np.zeros((N, P), dtype=np.int64)  # worker-local item count

@@ -9,21 +9,23 @@ loss escalated through ``Supervisor.on_fatal`` — it
   1. re-enters the planner for the new budget (Alg. 3 ∘ Alg. 2),
   2. rebuilds the ``EngineSchedule``/``FerretEngine`` for the new partition
      (the worker-interleave ``phase`` continues from the stream cursor), and
-  3. **remaps live state across partition boundaries**: stage params are
-     merged (``T.merge_stage_params``) and re-split on the new
-     ``plan.partition.bounds``; per-parameter optimizer moments and
-     Iter-Fisher λ statistics travel the same merge/re-split path, so no
-     learned state is thrown away. Across *same-structure* boundaries
-     (partition and pipeline config unchanged — segment caps, callable
-     polls, A→A switches) even the gradient-accumulation and Δθ rings are
-     carried: each segment runs a slice of one per-structure schedule
-     build (``slice_schedule``; construction is causal, so slicing one
-     big build *is* the continuation — ``build_schedule(warmup=...)``
-     computes the same rows when the stream end is unknown), so in-flight
-     accumulation groups survive. Only a *cross-partition*
-     switch re-initializes the rings — their shapes are
-     schedule-dependent and do not survive a partition change
-     (documented drop).
+  3. **remaps live state across partition boundaries** through
+     ``repro.state.StateRemapper``: stage params are merged
+     (``T.merge_stage_params``) and re-split on the new
+     ``plan.partition.bounds``; per-parameter optimizer moments,
+     Iter-Fisher λ statistics, *and the gradient-accumulation/Δθ rings*
+     all travel with them — no learned or in-flight state is thrown
+     away. Across *same-schedule* boundaries (stage count and pipeline
+     config unchanged — segment caps, callable polls, A→A switches, and
+     bounds-only re-partitions) each segment runs a slice of one
+     per-structure schedule build (``slice_schedule``; construction is
+     causal, so slicing one big build *is* the continuation) and the
+     rings continue — remapped slot-wise when the bounds moved. A
+     schedule-*restarting* switch (stage count or config changed)
+     flushes every in-flight accumulation group into the weights before
+     the remap, so ``rounds_lost_per_switch == 0`` either way; the only
+     way to drop in-flight rounds is the explicit
+     ``carry_rings=False`` escape hatch, which reports what it dropped.
 
 Compile-once hot path: engines are cached in an ``EngineCache`` keyed on
 ``(partition bounds, ring geometry, bucketed segment length)``. Segment
@@ -68,12 +70,15 @@ of ``repro.api.FerretSession`` — prefer the session layer for new code.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -85,6 +90,7 @@ from repro.api.streams import (
 )
 from repro.checkpointing.checkpoint import (
     CheckpointCorruptError,
+    checkpoint_schema,
     latest_checkpoint,
     plan_manifest,
     restore_checkpoint,
@@ -107,11 +113,15 @@ from repro.core.ferret import (
 )
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, profile_for
+from repro.core.schedule import RingGeometry
 from repro.models.config import ModelConfig
 from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
-from repro.optim.optimizers import AdamWState, Optimizer, SGDState, adamw
+from repro.optim.optimizers import Optimizer, adamw
 from repro.runtime.elastic import DeviceLossError
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
+from repro.state import StateRemapper
+from repro.state import remap as state_remap
+from repro.state.engine_state import EngineState
 
 Pytree = Any
 BudgetSchedule = Union[Sequence["BudgetEvent"], Callable[[int], Optional[float]]]
@@ -142,6 +152,11 @@ class SegmentReport:
     cache_hit: bool = False  # compiled scan reused from the engine cache
     rounds_compiled: int = 0  # bucketed scan length this segment ran under
     take_s: float = 0.0  # wall time blocked pulling this segment's rounds
+    # in-flight accumulated backward rounds discarded entering this segment
+    # (0 on the default lossless path: rings are carried or flushed; only
+    # the carry_rings=False escape hatch, or a geometry-mismatched resume,
+    # can make this non-zero)
+    rounds_lost: int = 0
 
 
 @dataclasses.dataclass
@@ -160,106 +175,43 @@ class ElasticStreamResult:
     engine_cache_misses: int = 0  # fresh compiles during this run
     peak_buffered_rounds: int = 0  # max stream rounds resident in the feeder
     stream_wait_s: float = 0.0  # total un-overlapped time blocked on the source
+    # max over segments of SegmentReport.rounds_lost: 0 means every switch
+    # this run made was lossless (in-flight rings carried or flushed)
+    rounds_lost_per_switch: int = 0
 
 
 # ---------------------------------------------------------------------------
-# State remap across partition boundaries
+# State remap across partition boundaries — moved to repro.state.
+# The old import paths below keep working but warn; new code should use
+# repro.state.StateRemapper / repro.state.remap_* directly.
 # ---------------------------------------------------------------------------
 
 
-def _merge_resplit(
-    model_cfg: ModelConfig, stage_trees: Sequence[Pytree], new_bounds
-) -> List[Pytree]:
-    """Merge stage-params-shaped trees and re-split on ``new_bounds``.
-
-    Works for anything that mirrors the stage-param structure: the params
-    themselves, optimizer moments, and Iter-Fisher EMA statistics.
-    """
-    from repro.models import transformer as T
-
-    merged = T.merge_stage_params(model_cfg, list(stage_trees))
-    return T.split_stage_params(model_cfg, merged, new_bounds)
-
-
-def _overlaps(old_bounds, lo: int, hi: int) -> List[Tuple[int, int]]:
-    """(old stage index, #overlapping layers) for new-stage span [lo, hi)."""
-    out = []
-    for i in range(len(old_bounds) - 1):
-        n = min(hi, old_bounds[i + 1]) - max(lo, old_bounds[i])
-        if n > 0:
-            out.append((i, n))
-    return out
-
-
-def remap_stage_params(
-    model_cfg: ModelConfig, stage_params: Sequence[Pytree], new_bounds
-) -> List[Pytree]:
-    return _merge_resplit(model_cfg, stage_params, new_bounds)
-
-
-def remap_opt_states(
-    model_cfg: ModelConfig,
-    opt_states: Sequence[Any],
-    old_bounds,
-    new_bounds,
-    optimizer: Optimizer,
-    new_stage_params: Sequence[Pytree],
-) -> Tuple[Any, ...]:
-    """Carry per-parameter optimizer moments through a partition change.
-
-    Moments mirror the stage-param tree, so they take the same
-    merge/re-split path as the weights. Per-stage scalars that cannot be
-    split per-layer (the Adam bias-correction count) take the conservative
-    minimum over the old stages a new stage overlaps. Optimizers this
-    module does not know structurally are re-initialized.
-    """
-    first = opt_states[0]
-    P_new = len(new_bounds) - 1
-    if isinstance(first, AdamWState):
-        mu = _merge_resplit(model_cfg, [s.mu for s in opt_states], new_bounds)
-        nu = _merge_resplit(model_cfg, [s.nu for s in opt_states], new_bounds)
-        out = []
-        for j in range(P_new):
-            ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
-            count = jnp.min(jnp.stack([opt_states[i].count for i, _ in ov]))
-            out.append(AdamWState(mu=mu[j], nu=nu[j], count=count))
-        return tuple(out)
-    if isinstance(first, SGDState):
-        mom = _merge_resplit(model_cfg, [s.momentum for s in opt_states], new_bounds)
-        return tuple(SGDState(momentum=m) for m in mom)
-    return tuple(optimizer.init(sp) for sp in new_stage_params)
-
-
-def remap_comp_states(
-    model_cfg: ModelConfig,
-    comp_states: Sequence[comp_lib.CompensationState],
-    old_bounds,
-    new_bounds,
-) -> Tuple[comp_lib.CompensationState, ...]:
-    """Carry Iter-Fisher λ and its EMA statistics through a partition change.
-
-    v_r/v_a mirror the stage params (merge/re-split; the fixed-λ mode's
-    empty placeholders pass through unchanged). λ is a per-stage scalar:
-    a new stage takes the layer-overlap-weighted mean of the old stages it
-    covers; ``steps`` takes the overlap maximum (EMA warm-up state).
-    """
-    v_r = _merge_resplit(model_cfg, [s.v_r for s in comp_states], new_bounds)
-    v_a = _merge_resplit(model_cfg, [s.v_a for s in comp_states], new_bounds)
-    out = []
-    for j in range(len(new_bounds) - 1):
-        ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
-        w = jnp.asarray([n for _, n in ov], jnp.float32)
-        lams = jnp.stack([comp_states[i].lam for i, _ in ov])
-        steps = jnp.max(jnp.stack([comp_states[i].steps for i, _ in ov]))
-        out.append(
-            comp_lib.CompensationState(
-                lam=jnp.sum(w * lams) / jnp.sum(w),
-                v_r=v_r[j],
-                v_a=v_a[j],
-                steps=steps,
-            )
+def _deprecated_remap(name: str, target: Callable) -> Callable:
+    @functools.wraps(target)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"repro.runtime.elastic_trainer.{name} moved to "
+            f"repro.state.{name}; this alias will be removed",
+            DeprecationWarning,
+            stacklevel=2,
         )
-    return tuple(out)
+        return target(*args, **kwargs)
+
+    wrapper.__name__ = name
+    wrapper.__qualname__ = name
+    return wrapper
+
+
+remap_stage_params = _deprecated_remap(
+    "remap_stage_params", state_remap.remap_stage_params
+)
+remap_opt_states = _deprecated_remap(
+    "remap_opt_states", state_remap.remap_opt_states
+)
+remap_comp_states = _deprecated_remap(
+    "remap_comp_states", state_remap.remap_comp_states
+)
 
 
 def remap_engine_state(
@@ -269,16 +221,31 @@ def remap_engine_state(
     new_bounds,
     optimizer: Optimizer,
 ):
-    """Remap a live ``FerretEngine`` state tuple onto a new partition.
+    """Deprecated: use ``repro.state.StateRemapper`` instead.
 
-    Returns (stage_params, opt_states, comp_states) for ``new_bounds``; the
-    rings are intentionally dropped (see module docstring) and rebuilt by
-    ``FerretEngine.init_state``.
+    This legacy helper keeps its historical contract — it returns only
+    ``(stage_params, opt_states, comp_states)`` and **drops the rings** —
+    but no longer does so silently: the warning below names the lossless
+    replacement. ``StateRemapper.remap`` carries (or flushes) the rings
+    and reports ``rounds_lost``; ``carry_rings=False`` is its documented
+    escape hatch for the old behavior.
     """
+    warnings.warn(
+        "repro.runtime.elastic_trainer.remap_engine_state drops the "
+        "gradient-accumulation/Δθ rings; use repro.state.StateRemapper "
+        "for a lossless remap (carry_rings=False reproduces this "
+        "behavior explicitly)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     stages, _rings, _deltas, opts, comps = engine_state
-    new_sp = remap_stage_params(model_cfg, list(stages), new_bounds)
-    new_opts = remap_opt_states(model_cfg, opts, old_bounds, new_bounds, optimizer, new_sp)
-    new_comps = remap_comp_states(model_cfg, comps, old_bounds, new_bounds)
+    new_sp = state_remap.remap_stage_params(model_cfg, list(stages), new_bounds)
+    new_opts = state_remap.remap_opt_states(
+        model_cfg, opts, old_bounds, new_bounds, optimizer, new_sp
+    )
+    new_comps = state_remap.remap_comp_states(
+        model_cfg, comps, old_bounds, new_bounds
+    )
     return new_sp, new_opts, new_comps
 
 
@@ -302,6 +269,14 @@ class ResumeState:
     bounds: List[int]
     cursor: int
     budget_bytes: float
+    # ring plane (schema-2 checkpoints): the gradient-accumulation and Δθ
+    # rings plus the schedule coordinates they are valid under. ``None``
+    # rings (schema-1 checkpoints, or a geometry mismatch at resume) mean
+    # the restart re-warms its accumulation from zero.
+    rings: Optional[Tuple] = None
+    deltas: Optional[Tuple] = None
+    sched_origin: Optional[int] = None
+    geometry: Optional[RingGeometry] = None
 
 
 # ---------------------------------------------------------------------------
@@ -451,6 +426,9 @@ class ElasticRun:
             rounds=int(consumed),
             num_replans=sum(1 for s in segs if s.replanned),
             num_faults=0,  # fault count lived in the dead generator
+            rounds_lost_per_switch=max(
+                (s.rounds_lost for s in segs), default=0
+            ),
         )
 
     def result(self) -> ElasticStreamResult:
@@ -496,6 +474,7 @@ class ElasticStreamTrainer:
         profile: Optional[ModelProfile] = None,
         algorithm: Optional[Union[str, OCLAlgorithm]] = None,
         engine_cache: Optional[EngineCache] = None,
+        carry_rings: bool = True,
     ):
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
@@ -511,6 +490,13 @@ class ElasticStreamTrainer:
             if algorithm is not None
             else get_algorithm(ferret_cfg.ocl)
         )
+        # carry_rings=False is the documented escape hatch back to the
+        # pre-refactor behavior: every re-plan drops the in-flight
+        # gradient-accumulation/Δθ rings instead of carrying or flushing
+        # them, and the discarded backward rounds are reported per segment
+        # as SegmentReport.rounds_lost. Default True: lossless switches.
+        self.carry_rings = bool(carry_rings)
+        self._remapper = StateRemapper(model_cfg, self.optimizer)
         # Compiled engines survive across run_stream calls on one trainer;
         # pass a shared EngineCache to also share across trainers, or
         # EngineCache(enabled=False) to disable bucketing + reuse.
@@ -762,29 +748,6 @@ class ElasticStreamTrainer:
         opt_states: Optional[Tuple] = None  # None → engine initializes fresh
         comp_states: Optional[Tuple] = None
         cursor = origin
-        if resume is not None:
-            old_bounds = list(resume.bounds)
-            if old_bounds != bounds:
-                state_tuple = (
-                    list(resume.stage_params), None, None,
-                    tuple(resume.opt_states), tuple(resume.comp_states),
-                )
-                stage_params, opt_states, comp_states = remap_engine_state(
-                    self.model_cfg, state_tuple, old_bounds, bounds, self.optimizer
-                )
-            else:
-                stage_params = list(resume.stage_params)
-                opt_states = tuple(resume.opt_states)
-                comp_states = tuple(resume.comp_states)
-        else:
-            stage_params = T.split_stage_params(self.model_cfg, params, bounds)
-
-        segments: List[SegmentReport] = []
-        acc_all: List[np.ndarray] = []
-        loss_all: List[np.ndarray] = []
-        admitted_all: List[np.ndarray] = []
-        num_faults = 0
-        faults_at_cursor = 0
         # Same-structure continuation state: ``prev_plan`` is the plan the
         # carried rings are valid under, ``sched_origin`` the round its
         # schedule structure started at, and ``full_sched`` the one O(R)
@@ -795,6 +758,71 @@ class ElasticStreamTrainer:
         sched_origin = cursor
         full_sched: Optional[sched_lib.EngineSchedule] = None
         rings = deltas = None
+        if resume is not None:
+            old_bounds = list(resume.bounds)
+            geom_now = sched_lib.ring_geometry(
+                plan.config, plan.partition.num_stages
+            )
+            if old_bounds != bounds:
+                # Cross-partition restore: the checkpointed run's schedule
+                # cannot be reconstructed here, so the rings do not survive
+                # — params, moments and λ statistics remap; gradient
+                # accumulation re-warms from zero.
+                if resume.rings is not None:
+                    warnings.warn(
+                        "resume partition differs from the restart's plan: "
+                        "checkpointed accumulation/Δθ rings were dropped; "
+                        "gradient accumulation re-warms over the next "
+                        f"~{geom_now.ring_size} rounds",
+                        stacklevel=2,
+                    )
+                stage_params = state_remap.remap_stage_params(
+                    self.model_cfg, list(resume.stage_params), bounds
+                )
+                opt_states = state_remap.remap_opt_states(
+                    self.model_cfg, tuple(resume.opt_states), old_bounds,
+                    bounds, self.optimizer, stage_params,
+                )
+                comp_states = state_remap.remap_comp_states(
+                    self.model_cfg, tuple(resume.comp_states), old_bounds, bounds
+                )
+            else:
+                stage_params = list(resume.stage_params)
+                opt_states = tuple(resume.opt_states)
+                comp_states = tuple(resume.comp_states)
+                if (
+                    resume.rings is not None
+                    and resume.sched_origin is not None
+                    and resume.geometry == geom_now
+                ):
+                    # Drain→restore continuation: same partition and ring
+                    # geometry, so this run re-enters the *same* causal
+                    # schedule at the saved origin — rings and Δθ history
+                    # carry, making the restarted stream bit-exact with
+                    # the uninterrupted one.
+                    rings = tuple(resume.rings)
+                    deltas = (
+                        None if resume.deltas is None else tuple(resume.deltas)
+                    )
+                    sched_origin = int(resume.sched_origin)
+                    prev_plan = plan  # prime the same-structure check
+                elif resume.rings is not None:
+                    warnings.warn(
+                        "checkpointed rings do not match the restart's ring "
+                        "geometry (or lack a schedule origin): dropped; "
+                        "gradient accumulation re-warms over the next "
+                        f"~{geom_now.ring_size} rounds",
+                        stacklevel=2,
+                    )
+        else:
+            stage_params = T.split_stage_params(self.model_cfg, params, bounds)
+
+        segments: List[SegmentReport] = []
+        acc_all: List[np.ndarray] = []
+        loss_all: List[np.ndarray] = []
+        admitted_all: List[np.ndarray] = []
+        num_faults = 0
+        faults_at_cursor = 0
         cache_hits0 = self.engine_cache.hits
         cache_misses0 = self.engine_cache.misses
 
@@ -815,23 +843,68 @@ class ElasticStreamTrainer:
                 if self._pending_budget is not None:
                     target, self._pending_budget = self._pending_budget, None
                 replanned, replan_s, remap_s = False, 0.0, 0.0
+                seg_rounds_lost = 0
                 if target != budget:
                     t0 = time.perf_counter()
                     new_plan = self.plan_for(target)
                     replan_s = time.perf_counter() - t0
                     new_bounds = list(new_plan.partition.bounds)
+                    P_new = new_plan.partition.num_stages
+                    # the schedule depends only on (config, stage count,
+                    # phase) — when those survive the switch, the carried
+                    # rings stay valid slot-for-slot even across a bounds
+                    # change; otherwise the remapper flushes them
+                    same_sched = (
+                        prev_plan is not None
+                        and prev_plan.partition.num_stages == P_new
+                        and prev_plan.config == new_plan.config
+                    )
                     t0 = time.perf_counter()
-                    if new_bounds != bounds:
-                        if opt_states is None:
+                    if opt_states is None:
+                        if new_bounds != bounds:
                             # no segment ran yet: only params exist to remap
-                            stage_params = remap_stage_params(
+                            stage_params = state_remap.remap_stage_params(
                                 self.model_cfg, stage_params, new_bounds
                             )
-                        else:
-                            state_tuple = (stage_params, None, None, opt_states, comp_states)
-                            stage_params, opt_states, comp_states = remap_engine_state(
-                                self.model_cfg, state_tuple, bounds, new_bounds, self.optimizer
+                    elif new_bounds != bounds or not same_sched:
+                        old_sched = full_sched
+                        if old_sched is None and rings is not None:
+                            # resumed rings whose schedule was never built
+                            # this run (a replan before the first segment):
+                            # rebuild the causal prefix they were filled
+                            # under so the remapper can flush/account
+                            old_sched = sched_lib.build_schedule(
+                                plan.config, plan.partition.num_stages,
+                                max(cursor - sched_origin, 1),
+                                phase=sched_origin,
                             )
+                        remapped, seg_rounds_lost = self._remapper.remap(
+                            EngineState(
+                                stage_params=tuple(stage_params),
+                                rings=rings,
+                                deltas=deltas,
+                                opt_states=tuple(opt_states),
+                                comp_states=tuple(comp_states),
+                                bounds=tuple(bounds),
+                                geometry=sched_lib.ring_geometry(
+                                    plan.config, plan.partition.num_stages
+                                ),
+                                sched_origin=sched_origin,
+                            ),
+                            new_bounds,
+                            new_geometry=sched_lib.ring_geometry(
+                                new_plan.config, P_new
+                            ),
+                            same_schedule=same_sched,
+                            old_schedule=old_sched,
+                            rounds_into_schedule=cursor - sched_origin,
+                            carry_rings=self.carry_rings,
+                        )
+                        stage_params = list(remapped.stage_params)
+                        opt_states = remapped.opt_states
+                        comp_states = remapped.comp_states
+                        rings = remapped.rings
+                        deltas = remapped.deltas
                     remap_s = time.perf_counter() - t0
                     budget, plan, bounds, replanned = target, new_plan, new_bounds, True
                     self._current_budget = budget
@@ -861,15 +934,17 @@ class ElasticStreamTrainer:
                 P = plan.partition.num_stages
                 same_struct = (
                     prev_plan is not None
-                    and list(prev_plan.partition.bounds) == bounds
+                    and prev_plan.partition.num_stages == P
                     and prev_plan.config == plan.config
                 )
                 if not same_struct:
-                    # structure changed (or first segment): the schedule
-                    # restarts here and ring shapes/contents no longer apply
+                    # The schedule restarts here (first segment, or a
+                    # stage-count/config change). Ring contents were
+                    # already handled by the remapper — flushed into the
+                    # weights, Δθ history re-timed — so only the schedule
+                    # coordinates reset.
                     sched_origin = cursor
                     full_sched = None
-                    rings = deltas = None
                 need = seg_end - sched_origin
                 if full_sched is None or full_sched.num_rounds < need:
                     # one causal build per structure; segments slice it. A
@@ -919,7 +994,9 @@ class ElasticStreamTrainer:
                     cache_hit = self.engine_cache.seen(compile_key)
                     engine.set_schedule(engine_sched)
                     state = engine.init_state(
-                        stage_params, opt_states, comp_states, rings=rings, deltas=deltas
+                        stage_params, opt_states, comp_states,
+                        rings=rings, deltas=deltas,
+                        bounds=bounds, sched_origin=sched_origin,
                     )
                     # only this segment's rounds ever reach the device:
                     # stream residency stays O(segment), not O(R)
@@ -950,7 +1027,7 @@ class ElasticStreamTrainer:
                         final_state, ys = self._execute_segment(
                             engine, state, seg_stream, supervisor_cfg,
                             fault_round, fault_budget_scale, plan, cursor, seg_end,
-                            budget, penalty,
+                            budget, penalty, sched_origin=sched_origin,
                         )
                         if faults_at_cursor:
                             # a previously-faulted segment just completed:
@@ -988,11 +1065,11 @@ class ElasticStreamTrainer:
                     self.engine_cache.record(compile_key, cache_hit)
 
                 ys = {k: v[:seg_len] for k, v in ys.items()}  # drop bucket padding
-                stage_params = list(final_state[0])
-                rings = tuple(final_state[1])
-                deltas = tuple(final_state[2])
-                opt_states = tuple(final_state[3])
-                comp_states = tuple(final_state[4])
+                stage_params = list(final_state.stage_params)
+                rings = tuple(final_state.rings)
+                deltas = tuple(final_state.deltas)
+                opt_states = tuple(final_state.opt_states)
+                comp_states = tuple(final_state.comp_states)
                 prev_plan = plan
                 if self.cfg.profile_feedback and cache_hit:
                     # online refinement: fold observed wall-clock (cache-hit
@@ -1029,7 +1106,7 @@ class ElasticStreamTrainer:
                         replanned=replanned, replan_s=replan_s, remap_s=remap_s,
                         run_s=run_s, result=result,
                         cache_hit=cache_hit, rounds_compiled=bucket_rounds,
-                        take_s=take_s,
+                        take_s=take_s, rounds_lost=seg_rounds_lost,
                     )
                 )
                 acc_all.append(acc)
@@ -1046,6 +1123,13 @@ class ElasticStreamTrainer:
                     bounds=list(bounds),
                     cursor=cursor,
                     budget_bytes=budget,
+                    rings=tuple(rings),
+                    deltas=tuple(deltas),
+                    sched_origin=int(sched_origin),
+                    geometry=RingGeometry(
+                        ring_size=int(engine_sched.ring_size),
+                        delta_ring=int(engine_sched.delta_ring),
+                    ),
                 )
                 # hand the segment to the driver; a _STOP reply ends the
                 # run at this boundary with everything consumed accounted
@@ -1081,6 +1165,9 @@ class ElasticStreamTrainer:
             engine_cache_misses=self.engine_cache.misses - cache_misses0,
             peak_buffered_rounds=feeder.peak_buffered_rounds,
             stream_wait_s=feeder.take_wait_s,
+            rounds_lost_per_switch=max(
+                (s.rounds_lost for s in segments), default=0
+            ),
         )
 
     # -- graceful drain ---------------------------------------------------
@@ -1096,9 +1183,12 @@ class ElasticStreamTrainer:
     def save_live_checkpoint(self, directory: str) -> Optional[str]:
         """Checkpoint the live snapshot for an exactly-once restart.
 
-        Writes the (stage_params, opt_states, comp_states) trees plus the
-        partition bounds, stream cursor, and budget as extras — everything
-        ``load_drain_state`` needs to resume this run on a fresh process.
+        Writes the full engine-state tuple — stage params, the in-flight
+        gradient-accumulation and Δθ rings, optimizer moments and
+        compensation state — plus the partition bounds, stream cursor,
+        budget, and the ring/schedule coordinates as extras: everything
+        ``load_drain_state`` needs to resume this run on a fresh process
+        *bit-exactly* (schema 2; schema-1 drains lacked the rings).
         Returns the checkpoint path, or ``None`` when no segment has
         completed yet (nothing consumed → a restart starts from scratch,
         still exactly-once).
@@ -1112,7 +1202,27 @@ class ElasticStreamTrainer:
             "cursor": int(rs.cursor),
             "budget_bytes": float(budget) if math.isfinite(budget) else "inf",
         }
-        state = (list(rs.stage_params), tuple(rs.opt_states), tuple(rs.comp_states))
+        if rs.sched_origin is not None:
+            extras["sched_origin"] = int(rs.sched_origin)
+        if rs.geometry is not None:
+            extras["ring_size"] = int(rs.geometry.ring_size)
+            extras["delta_ring"] = int(rs.geometry.delta_ring)
+        if rs.rings is not None and rs.geometry is not None:
+            state = (
+                list(rs.stage_params),
+                tuple(rs.rings),
+                tuple(rs.deltas),
+                tuple(rs.opt_states),
+                tuple(rs.comp_states),
+            )
+        else:  # ring-less snapshot: fall back to the schema-1 payload shape
+            extras.pop("ring_size", None)
+            extras.pop("delta_ring", None)
+            state = (
+                list(rs.stage_params),
+                tuple(rs.opt_states),
+                tuple(rs.comp_states),
+            )
         return save_checkpoint(directory, rs.cursor, state, extras)
 
     def load_drain_state(self, params_template: Pytree, directory: str) -> ResumeState:
@@ -1122,6 +1232,12 @@ class ElasticStreamTrainer:
         (the directory may hold several drains). ``params_template`` only
         provides shapes/dtypes; the saved bounds may differ from what this
         process plans — ``run_stream(resume=...)`` remaps.
+
+        Schema 2 drains carry the accumulation/Δθ rings and the schedule
+        coordinates they are valid under, so a same-plan restart continues
+        bit-exactly. Schema 1 drains (pre-ring) still load — forward
+        migration fills ``rings=None`` and the restart re-warms its
+        accumulation, with a warning naming the horizon.
         """
         from repro.models import transformer as T
 
@@ -1131,23 +1247,38 @@ class ElasticStreamTrainer:
                 raise FileNotFoundError(f"no drain checkpoint under {directory!r}")
             try:
                 manifest = verify_checkpoint(path)
+                schema = checkpoint_schema(manifest)
                 extras = manifest["extras"]
                 bounds = [int(b) for b in extras["bounds"]]
                 raw_budget = extras.get("budget_bytes", "inf")
                 budget = math.inf if raw_budget == "inf" else float(raw_budget)
-                staged = self.algorithm.wrap_staged(
-                    staged_from_transformer(self.model_cfg, bounds)
+                split = T.split_stage_params(self.model_cfg, params_template, bounds)
+                opts_t = tuple(self.optimizer.init(sp) for sp in split)
+                comps_t = tuple(
+                    comp_lib.init_state(sp, self.cfg.compensation) for sp in split
                 )
-                plan = self.plan_for(budget)
-                sched = sched_lib.build_schedule(plan.config, len(bounds) - 1, 1)
-                engine = FerretEngine(
-                    staged, sched, self.optimizer, self.cfg.compensation,
-                    lr=self.cfg.lr,
-                )
-                full = engine.init_state(
-                    T.split_stage_params(self.model_cfg, params_template, bounds)
-                )
-                template = (list(full[0]), tuple(full[3]), tuple(full[4]))
+                with_rings = schema >= 2 and "ring_size" in extras
+                if with_rings:
+                    # ring shapes come from the saved geometry — no engine
+                    # or schedule rebuild needed to shape the template
+                    ring_size = int(extras["ring_size"])
+                    delta_ring = int(extras["delta_ring"])
+                    f32 = jnp.float32
+                    rings_t = tuple(
+                        jax.tree.map(
+                            lambda p: jnp.zeros((ring_size, *p.shape), f32), sp
+                        )
+                        for sp in split
+                    )
+                    deltas_t = tuple(
+                        jax.tree.map(
+                            lambda p: jnp.zeros((delta_ring, *p.shape), f32), sp
+                        )
+                        for sp in split
+                    )
+                    template = (list(split), rings_t, deltas_t, opts_t, comps_t)
+                else:
+                    template = (list(split), opts_t, comps_t)
                 state, _step, _extras = restore_checkpoint(path, template)
             except CheckpointCorruptError:
                 # quarantine and fall back to the previous drain, same as
@@ -1158,6 +1289,31 @@ class ElasticStreamTrainer:
                 except OSError:
                     pass
                 continue
+            if with_rings:
+                return ResumeState(
+                    stage_params=list(state[0]),
+                    opt_states=tuple(state[3]),
+                    comp_states=tuple(state[4]),
+                    bounds=bounds,
+                    cursor=int(extras["cursor"]),
+                    budget_bytes=budget,
+                    rings=tuple(state[1]),
+                    deltas=tuple(state[2]),
+                    sched_origin=(
+                        int(extras["sched_origin"])
+                        if "sched_origin" in extras else None
+                    ),
+                    geometry=RingGeometry(
+                        ring_size=int(extras["ring_size"]),
+                        delta_ring=int(extras["delta_ring"]),
+                    ),
+                )
+            warnings.warn(
+                f"schema-{schema} drain checkpoint has no accumulation/Δθ "
+                "rings: the restart re-warms its accumulation from zero "
+                "(a few rounds of in-flight gradients are not replayed)",
+                stacklevel=2,
+            )
             return ResumeState(
                 stage_params=list(state[0]),
                 opt_states=tuple(state[1]),
@@ -1191,7 +1347,9 @@ class ElasticStreamTrainer:
                 f"no segment checkpoint under {checkpoint_dir!r}"
             )
         with open(os.path.join(path, "manifest.json")) as f:
-            extras = json.load(f)["extras"]
+            manifest = json.load(f)
+        schema = checkpoint_schema(manifest)
+        extras = manifest["extras"]
         bounds = [int(b) for b in extras["bounds"]]
         cursor = int(extras["cursor"])
         raw_budget = extras.get("budget_bytes", "inf")
@@ -1217,14 +1375,49 @@ class ElasticStreamTrainer:
         template = engine.init_state(
             T.split_stage_params(self.model_cfg, params_template, bounds)
         )
+        if schema < 2:
+            # schema-1 supervised checkpoints stored the positional
+            # 5-tuple (index key paths); restore into the tuple view and
+            # migrate forward. Rings are present in the payload but carry
+            # no schedule origin, so the restart cannot re-enter the
+            # schedule they were filled under — drop them and re-warm.
+            state, _step, _extras = restore_checkpoint(path, template.as_tuple())
+            warnings.warn(
+                f"schema-{schema} segment checkpoint: accumulation/Δθ rings "
+                "have no schedule origin and were dropped; gradient "
+                "accumulation re-warms over the next "
+                f"~{engine.sched.ring_size} rounds",
+                stacklevel=2,
+            )
+            return ResumeState(
+                stage_params=list(state[0]),
+                opt_states=tuple(state[3]),
+                comp_states=tuple(state[4]),
+                bounds=bounds,
+                cursor=cursor,
+                budget_bytes=budget,
+            )
         state, _step, _extras = restore_checkpoint(path, template)
+        sched_origin = (
+            int(extras["sched_origin"]) if "sched_origin" in extras else None
+        )
+        geometry = None
+        if "ring_size" in extras:
+            geometry = RingGeometry(
+                ring_size=int(extras["ring_size"]),
+                delta_ring=int(extras["delta_ring"]),
+            )
         return ResumeState(
-            stage_params=list(state[0]),
-            opt_states=tuple(state[3]),
-            comp_states=tuple(state[4]),
+            stage_params=list(state.stage_params),
+            opt_states=tuple(state.opt_states),
+            comp_states=tuple(state.comp_states),
             bounds=bounds,
             cursor=cursor,
             budget_bytes=budget,
+            rings=tuple(state.rings),
+            deltas=tuple(state.deltas),
+            sched_origin=sched_origin,
+            geometry=geometry,
         )
 
     # -- internals --------------------------------------------------------
@@ -1318,6 +1511,8 @@ class ElasticStreamTrainer:
         seg_end: int,
         budget: float,
         penalty=None,
+        *,
+        sched_origin: Optional[int] = None,
     ):
         """One segment, either direct or as a single supervised step."""
         out: Dict[str, Any] = {}
@@ -1382,7 +1577,12 @@ class ElasticStreamTrainer:
         # restore would re-consume the whole segment.
         rep = sup.run_step(
             seg_stream,
-            extras=plan_manifest(plan, cursor=seg_end, budget_bytes=budget),
+            extras=plan_manifest(
+                plan, cursor=seg_end, budget_bytes=budget,
+                sched_origin=sched_origin,
+                ring_size=engine.sched.ring_size,
+                delta_ring=engine.sched.delta_ring,
+            ),
         )
         if rep.restarted:
             # the Supervisor recovered in place (NaN rollback / transient

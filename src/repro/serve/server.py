@@ -395,12 +395,16 @@ class FerretServer:
         """Stop every live tenant at its segment boundary and checkpoint it.
 
         Each tenant's end-of-segment state (weights, optimizer moments,
-        Iter-Fisher statistics, partition bounds, stream cursor, budget)
-        is saved under ``checkpoint_dir/tenant_<name>`` via the trainer's
-        live snapshot; an atomic ``drain_manifest.json`` records the
-        admission metadata a restart needs. A new server re-admits with
+        Iter-Fisher statistics, the in-flight gradient-accumulation and
+        Δθ rings, partition bounds, stream cursor, budget) is saved under
+        ``checkpoint_dir/tenant_<name>`` via the trainer's live snapshot;
+        an atomic ``drain_manifest.json`` records the admission metadata
+        a restart needs. A new server re-admits with
         ``admit(..., resume_from=<tenant dir>)`` and every stream resumes
-        exactly where it stopped — zero rounds lost, zero re-trained.
+        exactly where it stopped — zero rounds lost, zero re-trained, and
+        (when the restart plans the same partition) **bit-exact** with the
+        uninterrupted run: the rings carry, so the restarted engine
+        re-enters the same schedule with identical state.
 
         Tenants that never started (nothing consumed) get no checkpoint
         (``"checkpoint": None``): a restart starts them from scratch,

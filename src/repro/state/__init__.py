@@ -1,0 +1,40 @@
+"""Unified engine-state plane.
+
+``EngineState`` is the typed container for live ``FerretEngine`` state
+(stage params, grad-accum rings, Δθ rings, optimizer moments, Iter-Fisher
+λ statistics) plus the metadata — partition bounds, ring geometry,
+schedule origin — that remapping, checkpointing and drain/restore need to
+interpret it. ``StateRemapper`` moves an ``EngineState`` across partition
+boundaries losslessly (slot-wise ring remap on same-schedule switches,
+in-flight flush on schedule-restarting ones).
+
+The loose ``remap_*`` functions moved here from
+``repro.runtime.elastic_trainer``; the old import paths still work with a
+``DeprecationWarning``.
+"""
+
+from repro.state.engine_state import EngineState
+from repro.state.remap import (
+    StateRemapper,
+    applied_updates,
+    pending_groups,
+    remap_comp_states,
+    remap_opt_states,
+    remap_ring_trees,
+    remap_stage_params,
+    retime_deltas,
+    rounds_in_flight,
+)
+
+__all__ = [
+    "EngineState",
+    "StateRemapper",
+    "applied_updates",
+    "pending_groups",
+    "remap_comp_states",
+    "remap_opt_states",
+    "remap_ring_trees",
+    "remap_stage_params",
+    "retime_deltas",
+    "rounds_in_flight",
+]

@@ -1,0 +1,153 @@
+"""Typed engine-state plane: the one container for live pipeline state.
+
+``FerretEngine`` state used to be a positional 5-tuple
+``(stage_params, rings, deltas, opt_states, comp_states)`` threaded through
+``core/ferret.py`` and ``runtime/elastic_trainer.py`` — easy to unpack in
+the wrong order, and easy to *silently drop* pieces of (the old
+``remap_engine_state`` discarded the rings without any signal).
+``EngineState`` names the five components and carries the metadata a
+remap/checkpoint/drain needs to interpret them:
+
+- ``bounds``      — the partition the per-stage trees are split on
+- ``geometry``    — the grad-accum/Δθ ring depths the ring arrays are shaped
+                    for (``repro.core.schedule.RingGeometry``)
+- ``sched_origin``— the global stream round the rings' schedule build
+                    started at (continuation slices re-anchor here)
+
+The metadata rides as pytree *aux data* (static, hashable), the five
+components as keyed children — so ``jax.tree.map``, checkpoint
+flatten/unflatten (``n:<field>`` key paths), and the Supervisor's host
+snapshot all treat an ``EngineState`` as a first-class pytree. The jitted
+scan itself still carries the plain tuple: ``FerretEngine.run`` unwraps at
+the jit boundary (``as_tuple``) and re-wraps the result, so metadata
+changes (a new ``sched_origin`` every segment) never retrace the compiled
+executable.
+
+Tuple compatibility: ``state[0]`` … ``state[4]``, ``len(state)`` and 5-way
+unpacking all keep working, so existing call sites migrate incrementally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Iterator, Optional, Tuple
+
+import jax
+
+Pytree = Any
+
+# child order is the legacy positional-tuple order — as_tuple/from_tuple
+# and the pytree flatten below all rely on it
+_CHILDREN = ("stage_params", "rings", "deltas", "opt_states", "comp_states")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Live state of a ``FerretEngine`` run, plus where it came from.
+
+    ``rings``/``deltas``/``opt_states``/``comp_states`` may be ``None``
+    before the first segment runs — ``FerretEngine.init_state`` fills the
+    gaps (zero rings, fresh optimizer/compensation state).
+    """
+
+    stage_params: Tuple[Pytree, ...]
+    rings: Optional[Tuple[Pytree, ...]] = None
+    deltas: Optional[Tuple[Pytree, ...]] = None
+    opt_states: Optional[Tuple[Any, ...]] = None
+    comp_states: Optional[Tuple[Any, ...]] = None
+    # -- static metadata (pytree aux data, never traced) --
+    bounds: Optional[Tuple[int, ...]] = None
+    geometry: Optional[Any] = None  # repro.core.schedule.RingGeometry
+    sched_origin: Optional[int] = None
+
+    NUM_COMPONENTS: ClassVar[int] = len(_CHILDREN)
+
+    # -- positional-tuple compatibility ----------------------------------
+    def as_tuple(self) -> Tuple:
+        """The legacy ``(stage_params, rings, deltas, opts, comps)`` tuple.
+
+        This is also the exact structure the jitted scan carries — see
+        ``FerretEngine.run`` for the boundary conversion.
+        """
+        return tuple(getattr(self, name) for name in _CHILDREN)
+
+    @classmethod
+    def from_tuple(
+        cls,
+        state: Tuple,
+        *,
+        bounds: Optional[Tuple[int, ...]] = None,
+        geometry: Optional[Any] = None,
+        sched_origin: Optional[int] = None,
+    ) -> "EngineState":
+        """Wrap a legacy 5-tuple (or another ``EngineState``)."""
+        if isinstance(state, EngineState):
+            return dataclasses.replace(
+                state, bounds=bounds if bounds is not None else state.bounds,
+                geometry=geometry if geometry is not None else state.geometry,
+                sched_origin=(
+                    sched_origin if sched_origin is not None else state.sched_origin
+                ),
+            )
+        sp, rings, deltas, opts, comps = state
+        return cls(
+            stage_params=tuple(sp),
+            rings=None if rings is None else tuple(rings),
+            deltas=None if deltas is None else tuple(deltas),
+            opt_states=None if opts is None else tuple(opts),
+            comp_states=None if comps is None else tuple(comps),
+            bounds=None if bounds is None else tuple(int(b) for b in bounds),
+            geometry=geometry,
+            sched_origin=None if sched_origin is None else int(sched_origin),
+        )
+
+    def __iter__(self) -> Iterator:
+        return iter(self.as_tuple())
+
+    def __len__(self) -> int:
+        return self.NUM_COMPONENTS
+
+    def __getitem__(self, idx):
+        return self.as_tuple()[idx]
+
+    # -- convenience ------------------------------------------------------
+    def replace(self, **changes) -> "EngineState":
+        return dataclasses.replace(self, **changes)
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stage_params)
+
+    @property
+    def has_rings(self) -> bool:
+        return self.rings is not None
+
+
+def _flatten_with_keys(state: EngineState):
+    children = tuple(
+        (jax.tree_util.GetAttrKey(name), getattr(state, name))
+        for name in _CHILDREN
+    )
+    aux = (state.bounds, state.geometry, state.sched_origin)
+    return children, aux
+
+
+def _flatten(state: EngineState):
+    children = tuple(getattr(state, name) for name in _CHILDREN)
+    aux = (state.bounds, state.geometry, state.sched_origin)
+    return children, aux
+
+
+def _unflatten(aux, children) -> EngineState:
+    bounds, geometry, sched_origin = aux
+    sp, rings, deltas, opts, comps = children
+    return EngineState(
+        stage_params=sp, rings=rings, deltas=deltas,
+        opt_states=opts, comp_states=comps,
+        bounds=bounds, geometry=geometry, sched_origin=sched_origin,
+    )
+
+
+jax.tree_util.register_pytree_with_keys(
+    EngineState, _flatten_with_keys, _unflatten, _flatten
+)

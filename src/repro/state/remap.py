@@ -1,0 +1,450 @@
+"""Lossless engine-state remapping across partition boundaries.
+
+The merge/re-split machinery that carries live state through an elastic
+re-plan (paper §5.2) used to live as loose functions in
+``runtime/elastic_trainer.py`` and covered stage params, optimizer moments
+and Iter-Fisher λ statistics — but **not** the gradient-accumulation and
+Δθ rings, which were silently re-zeroed at every cross-partition switch
+(the in-flight compensation state the paper's Alg. 1 exists to maintain).
+
+``StateRemapper`` closes that gap. At a partition boundary it distinguishes
+two cases by what happens to the *schedule*:
+
+1. **Same-schedule switch** (pipeline config and stage count unchanged,
+   only the layer→stage bounds moved): the schedule — and therefore every
+   stage's push/pop/ring-slot pattern — continues unchanged, so the rings
+   are remapped **slot-wise**: each ring slot is a stage-params-shaped
+   tree, merged into the whole-model view under the old bounds and
+   re-split under the new ones, then re-stacked. No gradient information
+   is discarded; layers that stay on their stage continue bit-exactly.
+
+2. **Schedule-restarting switch** (stage count or pipeline config
+   changed): the ring geometry and slot accounting no longer apply, so
+   carrying ring *contents* would be inert — the restarted schedule
+   overwrites every slot (``push_reset``) before reading it. Instead the
+   remapper **flushes**: it walks the old schedule prefix to find every
+   in-flight accumulation group (slot + accumulated count per stage) and
+   applies each pending mean gradient through the optimizer before the
+   merge/re-split, so every backward round computed before the switch
+   reaches the weights. The flush is applied without Iter-Fisher
+   compensation — at the boundary the gradient is applied to the weights
+   it was computed against (τ=0), which is exactly the case compensation
+   is a no-op for. Δθ history is re-time-indexed onto the new ring depth
+   (newest ``min(K_old, K_new)`` entries land in the slots the new
+   schedule treats as "previous updates"; genuinely-new slots are
+   zero-padded).
+
+Either way ``rounds_lost == 0``: nothing in flight is discarded. The only
+way to lose rounds is the documented escape hatch ``carry_rings=False``,
+which drops the rings and *reports* how many accumulated backward rounds
+that discarded.
+
+These functions were previously importable from
+``repro.runtime.elastic_trainer``; those names still work but emit a
+``DeprecationWarning``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compensation as comp_lib
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import AdamWState, Optimizer, SGDState
+from repro.state.engine_state import EngineState
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Merge/re-split primitives (moved from runtime/elastic_trainer.py)
+# ---------------------------------------------------------------------------
+
+
+def _merge_resplit(
+    model_cfg: ModelConfig, stage_trees: Sequence[Pytree], new_bounds
+) -> List[Pytree]:
+    """Merge stage-params-shaped trees and re-split on ``new_bounds``.
+
+    Works for anything that mirrors the stage-param structure: the params
+    themselves, optimizer moments, and Iter-Fisher EMA statistics.
+    """
+    from repro.models import transformer as T
+
+    merged = T.merge_stage_params(model_cfg, list(stage_trees))
+    return T.split_stage_params(model_cfg, merged, new_bounds)
+
+
+def _overlaps(old_bounds, lo: int, hi: int) -> List[Tuple[int, int]]:
+    """(old stage index, #overlapping layers) for new-stage span [lo, hi)."""
+    out = []
+    for i in range(len(old_bounds) - 1):
+        n = min(hi, old_bounds[i + 1]) - max(lo, old_bounds[i])
+        if n > 0:
+            out.append((i, n))
+    return out
+
+
+def remap_stage_params(
+    model_cfg: ModelConfig, stage_params: Sequence[Pytree], new_bounds
+) -> List[Pytree]:
+    return _merge_resplit(model_cfg, stage_params, new_bounds)
+
+
+def remap_opt_states(
+    model_cfg: ModelConfig,
+    opt_states: Sequence[Any],
+    old_bounds,
+    new_bounds,
+    optimizer: Optimizer,
+    new_stage_params: Sequence[Pytree],
+) -> Tuple[Any, ...]:
+    """Carry per-parameter optimizer moments through a partition change.
+
+    Moments mirror the stage-param tree, so they take the same
+    merge/re-split path as the weights. Per-stage scalars that cannot be
+    split per-layer (the Adam bias-correction count) take the conservative
+    minimum over the old stages a new stage overlaps. Optimizers this
+    module does not know structurally are re-initialized.
+    """
+    first = opt_states[0]
+    P_new = len(new_bounds) - 1
+    if isinstance(first, AdamWState):
+        mu = _merge_resplit(model_cfg, [s.mu for s in opt_states], new_bounds)
+        nu = _merge_resplit(model_cfg, [s.nu for s in opt_states], new_bounds)
+        out = []
+        for j in range(P_new):
+            ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
+            count = jnp.min(jnp.stack([opt_states[i].count for i, _ in ov]))
+            out.append(AdamWState(mu=mu[j], nu=nu[j], count=count))
+        return tuple(out)
+    if isinstance(first, SGDState):
+        mom = _merge_resplit(model_cfg, [s.momentum for s in opt_states], new_bounds)
+        return tuple(SGDState(momentum=m) for m in mom)
+    return tuple(optimizer.init(sp) for sp in new_stage_params)
+
+
+def remap_comp_states(
+    model_cfg: ModelConfig,
+    comp_states: Sequence[comp_lib.CompensationState],
+    old_bounds,
+    new_bounds,
+) -> Tuple[comp_lib.CompensationState, ...]:
+    """Carry Iter-Fisher λ and its EMA statistics through a partition change.
+
+    v_r/v_a mirror the stage params (merge/re-split; the fixed-λ mode's
+    empty placeholders pass through unchanged). λ is a per-stage scalar:
+    a new stage takes the layer-overlap-weighted mean of the old stages it
+    covers; ``steps`` takes the overlap maximum (EMA warm-up state).
+    """
+    v_r = _merge_resplit(model_cfg, [s.v_r for s in comp_states], new_bounds)
+    v_a = _merge_resplit(model_cfg, [s.v_a for s in comp_states], new_bounds)
+    out = []
+    for j in range(len(new_bounds) - 1):
+        ov = _overlaps(old_bounds, new_bounds[j], new_bounds[j + 1])
+        w = jnp.asarray([n for _, n in ov], jnp.float32)
+        lams = jnp.stack([comp_states[i].lam for i, _ in ov])
+        steps = jnp.max(jnp.stack([comp_states[i].steps for i, _ in ov]))
+        out.append(
+            comp_lib.CompensationState(
+                lam=jnp.sum(w * lams) / jnp.sum(w),
+                v_r=v_r[j],
+                v_a=v_a[j],
+                steps=steps,
+            )
+        )
+    return tuple(out)
+
+
+def remap_ring_trees(
+    model_cfg: ModelConfig,
+    rings: Sequence[Pytree],
+    new_bounds,
+    num_slots: int,
+) -> Tuple[Pytree, ...]:
+    """Slot-wise merge/re-split of per-stage ring arrays.
+
+    Ring leaves carry a leading slot axis ``(num_slots, *param_shape)``
+    while the partitioner slices leaf axis 0 (the layer axis), so the
+    merge/re-split cannot apply to the ring tree directly. Instead each
+    slot — a stage-params-shaped tree — is extracted, merged under the old
+    bounds, re-split under the new ones, and the per-stage results are
+    re-stacked along the slot axis. Lossless: slot contents are permuted
+    between stages, never recomputed or zeroed.
+    """
+    per_slot = []
+    for s in range(num_slots):
+        slot_trees = [
+            jax.tree.map(lambda a, s=s: a[s], ring) for ring in rings
+        ]
+        per_slot.append(_merge_resplit(model_cfg, slot_trees, new_bounds))
+    P_new = len(new_bounds) - 1
+    return tuple(
+        jax.tree.map(
+            lambda *leaves: jnp.stack(list(leaves)),
+            *[per_slot[s][j] for s in range(num_slots)],
+        )
+        for j in range(P_new)
+    )
+
+
+# ---------------------------------------------------------------------------
+# In-flight accounting against a schedule prefix
+# ---------------------------------------------------------------------------
+
+
+def pending_groups(schedule, upto: int) -> List[Dict[int, int]]:
+    """In-flight accumulation groups after ``upto`` rounds of ``schedule``.
+
+    Returns, per stage, an insertion-ordered ``{ring_slot: accumulated
+    count}`` of every group that was pushed into but whose pop has not
+    fired within the first ``upto`` rounds — both still-filling groups and
+    completed groups whose delayed apply lands beyond the prefix. O(upto·P)
+    host work on the numpy schedule arrays.
+    """
+    P = schedule.num_stages
+    pending: List[Dict[int, int]] = [{} for _ in range(P)]
+    push_slot = schedule.push_slot
+    push_reset = schedule.push_reset
+    pop_slot = schedule.pop_slot
+    for m in range(min(upto, schedule.num_rounds)):
+        for j in range(P):
+            ps = int(push_slot[m, j])
+            if ps >= 0:
+                if bool(push_reset[m, j]):
+                    # slot recycled: any stale entry is overwritten, and the
+                    # group re-enters in start order
+                    pending[j].pop(ps, None)
+                    pending[j][ps] = 0
+                pending[j][ps] = pending[j].get(ps, 0) + 1
+            pp = int(pop_slot[m, j])
+            if pp >= 0:
+                pending[j].pop(pp, None)
+    return pending
+
+
+def rounds_in_flight(schedule, upto: int) -> int:
+    """Accumulated-but-unapplied backward rounds after ``upto`` rounds.
+
+    The max over stages (stages run the same stream, so the max — not the
+    sum — is the number of stream rounds whose contribution would be lost
+    if the rings were dropped here).
+    """
+    pending = pending_groups(schedule, upto)
+    return max((sum(g.values()) for g in pending), default=0)
+
+
+def applied_updates(schedule, upto: int) -> List[int]:
+    """Per-stage count of optimizer updates applied in the first ``upto``
+    rounds (positions the Δθ ring's newest slot for re-time-indexing)."""
+    import numpy as np
+
+    upto = min(upto, schedule.num_rounds)
+    return [
+        int(np.sum(schedule.pop_slot[:upto, j] >= 0))
+        for j in range(schedule.num_stages)
+    ]
+
+
+def retime_deltas(
+    deltas: Sequence[Pytree],
+    upd_counts: Sequence[int],
+    k_old: int,
+    k_new: int,
+) -> Tuple[Pytree, ...]:
+    """Re-time-index Δθ rings from depth ``k_old`` to ``k_new``.
+
+    Old update ``u`` lives at slot ``u % k_old``; under the new ring the
+    pre-boundary updates are conceptually updates ``-1, -2, …``, i.e. the
+    newest carried entry lands at slot ``k_new - 1`` and older ones walk
+    backwards. Only entries actually written (``upd_counts``) are carried
+    — genuinely-new slots stay zero.
+    """
+    out = []
+    for j, dring in enumerate(deltas):
+        keep = min(k_old, k_new, int(upd_counts[j]))
+
+        def _retime(a, keep=keep, upd=int(upd_counts[j])):
+            new = jnp.zeros((k_new, *a.shape[1:]), a.dtype)
+            for i in range(keep):
+                src = (upd - 1 - i) % k_old
+                new = new.at[k_new - 1 - i].set(a[src])
+            return new
+
+        out.append(jax.tree.map(_retime, dring))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# The remapper
+# ---------------------------------------------------------------------------
+
+
+class StateRemapper:
+    """Moves a live ``EngineState`` onto a new partition, losslessly.
+
+    One remapper per (model config, optimizer) pair; see the module
+    docstring for the same-schedule vs schedule-restarting taxonomy.
+    ``carry_rings=False`` is the explicit escape hatch: rings are dropped
+    (the pre-refactor behavior) and the returned ``rounds_lost`` reports
+    the in-flight backward rounds that discarded.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, optimizer: Optimizer):
+        self.model_cfg = model_cfg
+        self.optimizer = optimizer
+
+    def remap(
+        self,
+        state: EngineState,
+        new_bounds: Sequence[int],
+        *,
+        new_geometry=None,
+        same_schedule: bool = False,
+        old_schedule=None,
+        rounds_into_schedule: int = 0,
+        carry_rings: bool = True,
+    ) -> Tuple[EngineState, int]:
+        """Remap ``state`` onto ``new_bounds``.
+
+        new_geometry: the ``RingGeometry`` of the destination schedule
+        (required when the schedule restarts and Δθ history is carried).
+        same_schedule: the destination continues the *same* schedule
+        (stage count and pipeline config unchanged) — rings remap
+        slot-wise and the schedule origin survives.
+        old_schedule / rounds_into_schedule: the schedule the rings were
+        filled under and how many rounds of it ran — required to flush
+        (or to count losses for ``carry_rings=False``).
+
+        Returns ``(remapped_state, rounds_lost)``; ``rounds_lost`` is 0
+        unless ``carry_rings=False`` discarded in-flight groups.
+        """
+        if state.bounds is None:
+            raise ValueError("EngineState.bounds is unset — cannot remap")
+        old_bounds = list(state.bounds)
+        new_bounds = [int(b) for b in new_bounds]
+        bounds_changed = old_bounds != new_bounds
+
+        stage_params = list(state.stage_params)
+        opt_states = state.opt_states
+        comp_states = state.comp_states
+        rings = state.rings
+        deltas = state.deltas
+        # slot depth of ``deltas`` when it reaches the merge/re-split below
+        # (a flush re-times it onto the destination depth; otherwise it
+        # stays at the shared same-schedule geometry)
+        delta_depth: Optional[int] = None
+        rounds_lost = 0
+
+        if rings is not None and not carry_rings:
+            if old_schedule is not None:
+                rounds_lost = rounds_in_flight(old_schedule, rounds_into_schedule)
+            else:
+                warnings.warn(
+                    "carry_rings=False without the old schedule: in-flight "
+                    "rounds were dropped but cannot be counted",
+                    stacklevel=2,
+                )
+            rings = deltas = None
+        elif rings is not None and not same_schedule:
+            # The destination schedule restarts: slot accounting no longer
+            # applies, so apply every in-flight group now (flush) instead of
+            # carrying contents the restarted schedule would overwrite.
+            if old_schedule is None:
+                raise ValueError(
+                    "schedule-restarting remap needs the old schedule to "
+                    "flush in-flight groups; pass carry_rings=False to drop "
+                    "them explicitly"
+                )
+            pending = pending_groups(old_schedule, rounds_into_schedule)
+            for j, groups in enumerate(pending):
+                for slot, count in groups.items():
+                    if count <= 0:
+                        continue
+                    g = jax.tree.map(
+                        lambda a, slot=slot, count=count: a[slot] / count,
+                        rings[j],
+                    )
+                    stage_params[j], opt_j = self.optimizer.update(
+                        stage_params[j], g, opt_states[j]
+                    )
+                    opt_states = (
+                        opt_states[:j] + (opt_j,) + opt_states[j + 1 :]
+                    )
+            k_old = old_schedule.delta_ring
+            k_new = None if new_geometry is None else new_geometry.delta_ring
+            if deltas is not None and k_new is not None:
+                deltas = retime_deltas(
+                    deltas,
+                    applied_updates(old_schedule, rounds_into_schedule),
+                    k_old,
+                    k_new,
+                )
+                delta_depth = k_new
+            else:
+                deltas = None
+            # nothing is in flight after the flush: fresh zero rings under
+            # the new geometry are exact, not an approximation
+            rings = None
+
+        if not bounds_changed:
+            new_sp: Sequence[Pytree] = stage_params
+            new_opts, new_comps = opt_states, comp_states
+        else:
+            new_sp = remap_stage_params(self.model_cfg, stage_params, new_bounds)
+            new_opts = (
+                None
+                if opt_states is None
+                else remap_opt_states(
+                    self.model_cfg, opt_states, old_bounds, new_bounds,
+                    self.optimizer, new_sp,
+                )
+            )
+            new_comps = (
+                None
+                if comp_states is None
+                else remap_comp_states(
+                    self.model_cfg, comp_states, old_bounds, new_bounds
+                )
+            )
+            if rings is not None or deltas is not None:
+                geom = state.geometry
+                if geom is None and new_geometry is not None:
+                    geom = new_geometry
+                if geom is None:
+                    raise ValueError(
+                        "ring remap needs the ring geometry (EngineState."
+                        "geometry or new_geometry)"
+                    )
+                if rings is not None:
+                    # same-schedule switch: ring geometry is identical by
+                    # construction (it depends only on (config, P))
+                    rings = remap_ring_trees(
+                        self.model_cfg, rings, new_bounds, geom.ring_size
+                    )
+                if deltas is not None:
+                    # flushed deltas already sit at the destination depth;
+                    # same-schedule deltas share the unchanged geometry
+                    deltas = remap_ring_trees(
+                        self.model_cfg, deltas, new_bounds,
+                        delta_depth if delta_depth is not None else geom.delta_ring,
+                    )
+
+        geometry = state.geometry if same_schedule else (new_geometry or state.geometry)
+        return (
+            EngineState(
+                stage_params=tuple(new_sp),
+                rings=rings,
+                deltas=deltas,
+                opt_states=None if new_opts is None else tuple(new_opts),
+                comp_states=None if new_comps is None else tuple(new_comps),
+                bounds=tuple(new_bounds),
+                geometry=geometry,
+                sched_origin=state.sched_origin if same_schedule else None,
+            ),
+            int(rounds_lost),
+        )

@@ -31,7 +31,7 @@ from repro.runtime import (
     ElasticStreamTrainer,
     SupervisorCfg,
 )
-from repro.runtime.elastic_trainer import (
+from repro.state import (
     remap_comp_states,
     remap_opt_states,
     remap_stage_params,
@@ -415,3 +415,137 @@ def test_bucketed_segment_is_exact(rng):
     assert res.segments[0].rounds_compiled == 64
     np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
     assert res.rounds == 37 and res.losses.shape == (37,)
+
+
+# ---------------------------------------------------------------------------
+# (g) lossless switches: the unified state plane (repro.state)
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_remap_aliases_warn(rng):
+    """The old elastic_trainer entrypoints delegate to repro.state and
+    warn; remap_engine_state additionally names its lossless replacement
+    (the old silent ring drop is now an explicit, reported choice)."""
+    from repro.runtime import elastic_trainer as et_mod
+
+    cfg = _cfg()
+    params = T.init_params(cfg, rng)
+    old = T.split_stage_params(cfg, params, OLD_BOUNDS)
+    with pytest.warns(DeprecationWarning, match="moved to repro.state"):
+        new = et_mod.remap_stage_params(cfg, old, NEW_BOUNDS)
+    assert len(new) == len(NEW_BOUNDS) - 1
+
+    opt = adamw(lr=1e-3)
+    ccfg = CompensationConfig(method="iter_fisher", eta_lambda=1e-4)
+    opts = tuple(opt.init(sp) for sp in old)
+    comps = tuple(init_state(sp, ccfg) for sp in old)
+    state = (list(old), None, None, opts, comps)
+    with pytest.warns(DeprecationWarning, match="StateRemapper"):
+        sp2, opts2, comps2 = et_mod.remap_engine_state(
+            cfg, state, OLD_BOUNDS, NEW_BOUNDS, opt
+        )
+    assert len(sp2) == len(opts2) == len(comps2) == len(NEW_BOUNDS) - 1
+
+
+def test_plan_equal_budget_switch_is_bit_exact(rng):
+    """A budget event that plans the *same* partition and config is a
+    same-schedule switch: the rings carry, rounds_lost is 0, and the run
+    is bit-identical to one with no schedule at all."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    profile = _hetero_profile(cfg)
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    full = et.plan_for(math.inf)
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+
+    base = ElasticStreamTrainer(
+        cfg, fc, batch=2, seq=16, profile=profile
+    ).run_stream(params, stream, segment_rounds=R_STREAM // 2)
+
+    # finite budget, same resulting plan: replan fires, partition doesn't move
+    events = [BudgetEvent(R_STREAM // 2, full.memory)]
+    res = et.run_stream(params, stream, schedule=events)
+    assert res.num_replans == 1
+    assert (
+        tuple(res.segments[0].result.plan.partition.bounds)
+        == tuple(res.segments[1].result.plan.partition.bounds)
+    )
+    assert res.rounds_lost_per_switch == 0
+    np.testing.assert_array_equal(np.asarray(base.losses), np.asarray(res.losses))
+    np.testing.assert_array_equal(base.online_acc_curve, res.online_acc_curve)
+
+
+def test_cross_partition_switch_lossless_vs_carry_rings_escape_hatch(rng):
+    """A schedule-restarting shrink is lossless by default (in-flight
+    groups flushed; rounds_lost == 0). carry_rings=False is the explicit
+    escape hatch: the same switch drops the rings and *reports* it."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    profile = _hetero_profile(cfg)
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+    def events_for(et):
+        return [BudgetEvent(R_STREAM // 2, et.plan_for(math.inf).memory * 0.3)]
+
+    et = ElasticStreamTrainer(cfg, fc, batch=2, seq=16, profile=profile)
+    res = et.run_stream(params, stream, schedule=events_for(et))
+    assert res.num_replans == 1
+    assert (
+        res.segments[0].result.plan.partition.num_stages
+        != res.segments[1].result.plan.partition.num_stages
+    )
+    assert res.rounds_lost_per_switch == 0
+    assert all(s.rounds_lost == 0 for s in res.segments)
+
+    et_drop = ElasticStreamTrainer(
+        cfg, fc, batch=2, seq=16, profile=profile, carry_rings=False
+    )
+    res_drop = et_drop.run_stream(params, stream, schedule=events_for(et_drop))
+    assert res_drop.num_replans == 1
+    # the async pipeline always has accumulation in flight mid-stream
+    assert res_drop.rounds_lost_per_switch > 0
+    assert res_drop.segments[1].rounds_lost == res_drop.rounds_lost_per_switch
+    # dropping in-flight gradients changes the trajectory
+    tail = slice(R_STREAM // 2, None)
+    assert not np.array_equal(res.losses[tail], res_drop.losses[tail])
+
+
+def test_drain_restore_is_bit_exact(rng, tmp_path):
+    """Stopping at a segment boundary, draining to a checkpoint, and
+    resuming on a fresh trainer reproduces the uninterrupted run bit for
+    bit — the rings travel through the drain (schema-2 checkpoints)."""
+    cfg = _cfg()
+    fc = _ferret_cfg()
+    params = T.init_params(cfg, rng)
+    stream = _stream()
+
+    base = ElasticStreamTrainer(cfg, fc, batch=2, seq=16).run_stream(
+        params, stream, segment_rounds=10
+    )
+
+    et1 = ElasticStreamTrainer(cfg, fc, batch=2, seq=16)
+    run = et1.open_stream(params, stream, segment_rounds=10)
+    run.step()
+    run.step()
+    part1 = run.stop()
+    assert part1.rounds == 20
+    path = et1.save_live_checkpoint(str(tmp_path))
+    assert path is not None
+
+    et2 = ElasticStreamTrainer(cfg, fc, batch=2, seq=16)
+    template = T.init_params(cfg, jax.random.split(rng)[0])  # shapes only
+    resume = et2.load_drain_state(template, str(tmp_path))
+    assert resume.cursor == 20
+    assert resume.rings is not None and resume.sched_origin == 0
+    part2 = et2.run_stream(params, stream, resume=resume, segment_rounds=10)
+    assert part2.rounds == R_STREAM - 20
+
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(part1.losses), np.asarray(part2.losses)]),
+        np.asarray(base.losses),
+    )
+    for a, b in zip(
+        jax.tree.leaves(base.final_params), jax.tree.leaves(part2.final_params)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -476,6 +476,104 @@ def test_injected_drain_then_restore_loses_zero_rounds(tmp_path):
         assert entry["rounds_served"] + final[name].rounds == R_STREAM
 
 
+def test_drain_restore_is_bit_exact_for_stateless_algorithm(tmp_path):
+    """Drain → restart reproduces the uninterrupted run bit for bit.
+
+    Schema-2 drain checkpoints carry the in-flight accumulation/Δθ rings
+    and the schedule origin, so the restarted engine re-enters the same
+    schedule with identical state. The tenant runs "vanilla" because a
+    replay-buffer algorithm's host-side reservoir legitimately resets
+    across a process restart — the engine state itself is what this test
+    pins down."""
+    from repro.serve import FerretServer
+
+    length = 4 * SEGMENT
+    stream = _stream(length=length, seed=11)
+
+    solo = FerretServer(segment_rounds=SEGMENT)
+    solo.admit(_model(), "vanilla", stream, name="v", batch=BATCH, seq=SEQ,
+               max_workers=3, max_stages=4)
+    ref = solo.serve(timeout_s=600)["v"]
+    assert ref.rounds == length
+
+    server = FerretServer(segment_rounds=SEGMENT)
+    server.admit(_model(), "vanilla", stream, name="v", batch=BATCH, seq=SEQ,
+                 max_workers=3, max_stages=4)
+    assert server.step() is not None and server.step() is not None
+    manifest = server.drain(str(tmp_path / "drainpoint"))
+    partial = server.results()["v"]
+    assert partial.rounds == 2 * SEGMENT
+    assert manifest["v"]["checkpoint"] is not None
+    assert manifest["v"]["cursor"] == 2 * SEGMENT
+
+    server2 = FerretServer(segment_rounds=SEGMENT)
+    server2.admit(_model(), "vanilla", stream, name="v", batch=BATCH, seq=SEQ,
+                  max_workers=3, max_stages=4,
+                  resume_from=manifest["v"]["checkpoint"])
+    final = server2.serve(timeout_s=600)["v"]
+    assert partial.rounds + final.rounds == length
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(partial.losses), np.asarray(final.losses)]),
+        np.asarray(ref.losses),
+    )
+
+
+def test_v1_drain_checkpoint_migrates_with_warning(tmp_path):
+    """A pre-ring (schema-1) drain checkpoint still loads: forward
+    migration fills ``rings=None`` with a warning naming the re-warm, and
+    the resumed run keeps exactly-once round accounting."""
+    import json
+    import os
+
+    import jax
+
+    from repro.checkpointing.checkpoint import save_checkpoint
+    from repro.core.ferret import FerretConfig
+    from repro.models import transformer as T
+    from repro.runtime import ElasticStreamTrainer
+
+    cfg = _model()
+    fc = FerretConfig(
+        budget_bytes=math.inf, lr=5e-3,
+        compensation=CompensationConfig(method="iter_fisher", eta_lambda=1e-4),
+        max_workers=3, max_stages=4,
+    )
+    length = 4 * SEGMENT
+    stream = _stream(length=length, seed=13)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    et = ElasticStreamTrainer(cfg, fc, batch=BATCH, seq=SEQ)
+    run = et.open_stream(params, stream, segment_rounds=SEGMENT)
+    run.step()
+    run.step()
+    part1 = run.stop()
+    rs = et.live_resume_state()
+    assert rs is not None and rs.rings is not None
+
+    # forge the old on-disk format: 3-tuple payload (no rings), no ring
+    # extras, and no "schema" key in the manifest (implicit schema 1)
+    d1 = str(tmp_path / "v1_drain")
+    path = save_checkpoint(
+        d1, rs.cursor,
+        (list(rs.stage_params), tuple(rs.opt_states), tuple(rs.comp_states)),
+        {"bounds": [int(b) for b in rs.bounds], "cursor": int(rs.cursor),
+         "budget_bytes": "inf"},
+    )
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    del manifest["schema"]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+    et2 = ElasticStreamTrainer(cfg, fc, batch=BATCH, seq=SEQ)
+    with pytest.warns(UserWarning, match="re-warms"):
+        resume = et2.load_drain_state(params, d1)
+    assert resume.rings is None and resume.cursor == 2 * SEGMENT
+    part2 = et2.run_stream(params, stream, resume=resume, segment_rounds=SEGMENT)
+    assert part1.rounds + part2.rounds == length
+
+
 def test_sigterm_handler_requests_drain():
     import os
     import signal
