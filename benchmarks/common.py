@@ -22,6 +22,7 @@ from repro.models.config import ModelConfig
 from repro.ocl.algorithms import OCLConfig
 from repro.ocl.baselines import AdmissionPolicy
 from repro.ocl.streams import StreamConfig, make_stream
+from repro.runtime.topology import DeviceTopology
 
 VOCAB = 32
 SEQ = 16
@@ -113,10 +114,13 @@ _HOST_ENV_KEYS = (
 )
 
 
-def host_env() -> Dict[str, str]:
-    """The host-tuning flags active for this process.
+def host_env() -> Dict:
+    """The host-tuning flags + device topology active for this process.
 
     Recorded into every bench artifact so numbers are comparable across
     runs — a tcmalloc'd ``scripts/bench.sh`` run and a bare ``python -m``
-    run must never be confused for each other."""
-    return {k: os.environ[k] for k in _HOST_ENV_KEYS if k in os.environ}
+    run must never be confused for each other, and a number measured on
+    8 fake devices must never be compared against a 1-device run."""
+    env: Dict = {k: os.environ[k] for k in _HOST_ENV_KEYS if k in os.environ}
+    env["device_topology"] = DeviceTopology.discover().describe()
+    return env

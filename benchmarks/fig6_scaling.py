@@ -1,50 +1,127 @@
-"""Paper Fig. 6/11: adaptation rate vs memory budget (planner scaling).
+"""Paper Fig. 6/11: adaptation rate vs memory budget + device scaling.
 
-Sweeps the budget from minimal to unconstrained and reports the planner's
-(R_F, M_F) frontier — Ferret should scale smoothly (paper: competing
-strategies cannot exploit intermediate budgets)."""
+Two curves, one artifact (``BENCH_scaling.json``):
+
+1. **Budget sweep** — the budget goes from minimal to unconstrained and
+   the planner's (R_F, M_F) frontier is recorded; Ferret should scale
+   smoothly (paper: competing strategies cannot exploit intermediate
+   budgets). The adaptation rate must be monotone non-decreasing in the
+   budget — asserted, so a planner regression fails the bench job.
+2. **Topology sweep** — the same model planned over 1/2/4/8-device
+   topologies carved out of the fake-device host (``scripts/bench.sh``
+   forces 8). Data-parallel devices divide the profile's step times
+   (``profile.bridge.for_topology``), so the planned adaptation rate must
+   be monotone non-decreasing in the device count — also asserted.
+
+    bash scripts/bench.sh benchmarks.fig6_scaling
+"""
 
 from __future__ import annotations
 
+import json
 import math
+import os
 import time
-from typing import List, Tuple
+from typing import Dict, List
 
 from benchmarks import common as C
 from repro.core.planner import default_data_interval, plan
 from repro.core.profiler import analytic_profile
+from repro.profile.bridge import for_topology
+from repro.runtime.topology import DeviceTopology
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_scaling.json"
+)
 
 FRACS = [0.05, 0.1, 0.2, 0.35, 0.5, 0.7, 1.0]
+DEVICE_COUNTS = [1, 2, 4, 8]
 
 
-def run(verbose: bool = True) -> List[Tuple[float, float, float]]:
-    cfg = C.bench_model(num_layers=8)
-    profile = analytic_profile(cfg, C.BATCH, C.SEQ)
-    t_d = default_data_interval(profile)
+def _monotone(xs: List[float]) -> bool:
+    return all(a <= b + 1e-9 for a, b in zip(xs, xs[1:]))
+
+
+def budget_sweep(profile, t_d, verbose: bool = True) -> List[Dict]:
     m_plus = plan(profile, t_d, budget=math.inf, max_workers=6)
     rows = []
     for f in FRACS:
         p = plan(profile, t_d, budget=m_plus.memory * f, max_workers=6)
-        rows.append((f, p.memory, p.rate))
+        rows.append({
+            "budget_frac": f, "memory_bytes": p.memory, "rate": p.rate,
+            "num_stages": p.partition.num_stages,
+            "workers": len(p.config.active_workers()),
+        })
     if verbose:
         print("\nFig. 6 (R_F vs M_F across budgets):")
         print(f"  {'budget':>8s} {'M_F(MiB)':>10s} {'R_F':>10s} {'P':>3s} {'N':>3s}")
-        for f in FRACS:
-            p = plan(profile, t_d, budget=m_plus.memory * f, max_workers=6)
-            rows_extra = (p.partition.num_stages, len(p.config.active_workers()))
-            print(f"  {f:8.2f} {p.memory/2**20:10.2f} {p.rate:10.4f} "
-                  f"{rows_extra[0]:3d} {rows_extra[1]:3d}")
+        for r in rows:
+            print(f"  {r['budget_frac']:8.2f} {r['memory_bytes']/2**20:10.2f} "
+                  f"{r['rate']:10.4f} {r['num_stages']:3d} {r['workers']:3d}")
     return rows
 
 
-def main():
+def topology_sweep(profile, t_d, verbose: bool = True) -> List[Dict]:
+    import jax
+
+    visible = len(jax.devices())
+    rows = []
+    for n in DEVICE_COUNTS:
+        if n > visible:
+            print(f"  (skipping n={n}: only {visible} devices visible)")
+            continue
+        topo = DeviceTopology.discover(max_devices=n)
+        eff = for_topology(profile, topo)
+        p = plan(eff, t_d, budget=topo.plan_budget(), max_workers=6,
+                 topology=topo)
+        rows.append({
+            "devices": n, "mesh_shape": list(topo.mesh_shape),
+            "rate": p.rate, "memory_bytes": p.memory,
+            "num_stages": p.partition.num_stages,
+        })
+    if verbose:
+        print("\nTopology scaling (R_F vs device count, data-parallel):")
+        print(f"  {'devices':>8s} {'R_F':>10s} {'M_F(MiB)':>10s}")
+        for r in rows:
+            print(f"  {r['devices']:8d} {r['rate']:10.4f} "
+                  f"{r['memory_bytes']/2**20:10.2f}")
+    return rows
+
+
+def run(write_json: bool = True) -> Dict:
     t0 = time.time()
-    rows = run()
-    dt = (time.time() - t0) * 1e6 / len(FRACS)
-    # monotone scaling check
-    rates = [r[2] for r in rows]
-    mono = all(a <= b + 1e-9 for a, b in zip(rates, rates[1:]))
-    print(f"fig6_scaling,{dt:.0f},rate_monotone={mono}")
+    cfg = C.bench_model(num_layers=8)
+    profile = analytic_profile(cfg, C.BATCH, C.SEQ)
+    t_d = default_data_interval(profile)
+
+    budget_rows = budget_sweep(profile, t_d)
+    topo_rows = topology_sweep(profile, t_d)
+
+    budget_mono = _monotone([r["rate"] for r in budget_rows])
+    topo_mono = _monotone([r["rate"] for r in topo_rows])
+    assert budget_mono, f"rate not monotone in budget: {budget_rows}"
+    assert topo_mono, f"rate not monotone in device count: {topo_rows}"
+
+    payload = {
+        "bench": "fig6_scaling",
+        "budget_sweep": budget_rows,
+        "topology_sweep": topo_rows,
+        "rate_monotone_in_budget": budget_mono,
+        "rate_monotone_in_devices": topo_mono,
+        "wall_s": time.time() - t0,
+        "host": C.host_env(),
+    }
+    if write_json:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {BENCH_JSON}")
+    return payload
+
+
+def main():
+    payload = run()
+    print(f"fig6_scaling,rate_monotone={payload['rate_monotone_in_budget']}"
+          f",devices_monotone={payload['rate_monotone_in_devices']}")
 
 
 if __name__ == "__main__":

@@ -28,3 +28,4 @@ python -m benchmarks.bench_stream
 python -m benchmarks.bench_serve
 python -m benchmarks.bench_profile
 python -m benchmarks.bench_faults
+python -m benchmarks.fig6_scaling

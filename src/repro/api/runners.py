@@ -136,6 +136,7 @@ class PipelinedRunner(Runner):
             batch=session.batch, seq=session.seq,
             optimizer=session.optimizer, profile=session.profile,
             algorithm=session.algorithm,
+            topology=getattr(session, "topology", None),
         )
         raw = trainer.run_stream(
             params, stream, segment_rounds=segment_rounds, prefetch=prefetch
@@ -191,6 +192,7 @@ class ElasticRunner(Runner):
             optimizer=session.optimizer, profile=session.profile,
             algorithm=session.algorithm,
             engine_cache=engine_cache,
+            topology=getattr(session, "topology", None),
         )
         raw = trainer.run_stream(
             params, stream, schedule,

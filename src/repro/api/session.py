@@ -93,7 +93,16 @@ class FerretSession:
         profile_feedback: bool = False,
         params: Optional[Pytree] = None,
         smoke: bool = True,
+        topology=None,
     ):
+        # topology: None (single-device, the default), "discover"
+        # (jax.devices()/process_index at session construction), or a
+        # DeviceTopology — threaded into every runner so plans are bounded
+        # by per-device memory and engine scans run under the topology's
+        # mesh (see repro.runtime.topology).
+        from repro.runtime.topology import as_topology
+
+        self.topology = as_topology(topology)
         if isinstance(model, str):
             from repro.models.registry import get_config
 
@@ -214,6 +223,10 @@ class FerretSession:
                 "the session a stream they can be inferred from"
             )
         profile = self.profile or profile_for(self.model_cfg, self.batch, self.seq)
+        if self.topology is not None:
+            from repro.profile.bridge import for_topology
+
+            profile = for_topology(profile, self.topology)
         t_d = self.ferret_cfg.t_d or planner_lib.default_data_interval(profile)
         return planner_lib.plan(
             profile,
@@ -223,6 +236,7 @@ class FerretSession:
             V_D=self.ferret_cfg.data_value,
             max_workers=self.ferret_cfg.max_workers,
             max_stages=self.ferret_cfg.max_stages,
+            topology=self.topology,
         )
 
     # -- the one entrypoint ------------------------------------------------
@@ -300,6 +314,7 @@ class FerretSession:
             batch=self.batch, seq=self.seq,
             optimizer=self.optimizer, profile=self.profile,
             algorithm=self.algorithm, engine_cache=engine_cache,
+            topology=self.topology,
         )
         resume = (
             trainer.load_drain_state(run_params, resume_from)

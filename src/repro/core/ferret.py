@@ -288,11 +288,28 @@ class FerretTrainer:
         optimizer: Optional[Optimizer] = None,
         profile: Optional[ModelProfile] = None,
         algorithm: Optional[Union[str, OCLAlgorithm]] = None,
+        topology=None,
     ):
+        from repro.runtime.topology import as_topology
+
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
         self.batch = batch
         self.seq = seq
+        # Topology-aware execution: a DeviceTopology (or "discover") makes
+        # the planner budget per-device-bounded, scales the profile for the
+        # data-parallel replicas, and runs the engine scan under the
+        # topology's mesh. topology=None — and a trivial 1-device topology —
+        # is the exact historical single-device path.
+        self.topology = as_topology(topology)
+        self.mesh = (
+            None
+            if self.topology is None or self.topology.is_trivial
+            else self.topology.mesh()
+        )
+        from repro.models import shard_hints as shard_hints_lib
+
+        self.shard_hints = shard_hints_lib.for_topology(self.topology)
         self.algorithm = (
             get_algorithm(algorithm, ferret_cfg.ocl)
             if algorithm is not None
@@ -303,16 +320,26 @@ class FerretTrainer:
         # roofline is the fallback — identical to the old default when no
         # measurement exists.
         self.profile = profile or profile_for(model_cfg, batch, seq)
-        t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
+        # self.profile stays single-device (so delegating to the elastic
+        # trainer never double-scales); the plan sees the topology-scaled
+        # view — data-parallel replicas divide times/activations, weights
+        # replicate
+        eff_profile = self.profile
+        if self.topology is not None:
+            from repro.profile.bridge import for_topology
+
+            eff_profile = for_topology(self.profile, self.topology)
+        t_d = ferret_cfg.t_d or planner_lib.default_data_interval(eff_profile)
         self.t_d = t_d
         self.plan = planner_lib.plan(
-            self.profile,
+            eff_profile,
             t_d,
             ferret_cfg.budget_bytes,
             c=ferret_cfg.decay_c,
             V_D=ferret_cfg.data_value,
             max_workers=ferret_cfg.max_workers,
             max_stages=ferret_cfg.max_stages,
+            topology=self.topology,
         )
         self.boundaries = list(self.plan.partition.bounds)
         staged = staged_from_transformer(model_cfg, self.boundaries)
@@ -431,7 +458,8 @@ class FerretTrainer:
                     engine = FerretEngine(
                         self.staged, engine_sched, self.optimizer,
                         self.cfg.compensation, lr=self.cfg.lr,
-                        penalty_fn=penalty_fn,
+                        penalty_fn=penalty_fn, mesh=self.mesh,
+                        hints=self.shard_hints,
                     )
                 else:
                     engine.set_schedule(engine_sched)
@@ -535,7 +563,7 @@ class FerretTrainer:
         et = ElasticStreamTrainer(
             self.model_cfg, self.cfg, batch=self.batch, seq=self.seq,
             optimizer=self.optimizer, profile=self.profile,
-            algorithm=self.algorithm,
+            algorithm=self.algorithm, topology=self.topology,
         )
         result = et.run_stream(params, stream, schedule, **kwargs)
         self.final_params = result.final_params

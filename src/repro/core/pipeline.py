@@ -113,6 +113,8 @@ class FerretEngine:
         comp_cfg: comp_lib.CompensationConfig,
         lr: float = 1e-3,
         penalty_fn: Optional[Callable] = None,
+        mesh=None,
+        hints=None,
     ):
         self.staged = staged
         self.sched = schedule
@@ -120,6 +122,17 @@ class FerretEngine:
         self.comp_cfg = comp_cfg
         self.lr = lr
         self.penalty_fn = penalty_fn
+        # Optional jax Mesh (from DeviceTopology.mesh()): when set, run()
+        # commits the stream's batch dim to the "data" axis and the engine
+        # carry to full replication before the scan, and GSPMD partitions
+        # the compiled executable across the mesh. mesh=None is the exact
+        # historical single-device path — no array is ever re-placed.
+        # ``hints`` (models.shard_hints.ShardHints, usually built with
+        # shard_hints.for_topology) are installed around the sharded scan's
+        # trace so the model's internal constraint points (logits, block
+        # boundaries) pin their batch dim to the data axis.
+        self.mesh = mesh
+        self.hints = hints
         self._compiled = jax.jit(self._scan)
         # ``set_schedule`` mutates ``self.sched`` and ``run`` reads it —
         # callers sharing one engine across threads (a shared EngineCache,
@@ -350,7 +363,26 @@ class FerretEngine:
         xs["batch"] = stream
         meta = state if isinstance(state, EngineState) else None
         carry = state.as_tuple() if meta is not None else state
-        final, ys = self._compiled(carry, xs, penalty)
+        if self.mesh is not None and self.mesh.devices.size > 1:
+            from repro.launch import shardings as sh
+            from repro.models import shard_hints as hints_lib
+
+            # Commit placements at the jit boundary: batch dim of every
+            # stream leaf over "data", carry replicated. device_put is a
+            # no-op when the arrays already live there (steady state).
+            xs["batch"] = jax.device_put(
+                stream, sh.stream_shardings(self.mesh, stream)
+            )
+            carry = jax.device_put(carry, sh.state_shardings(self.mesh, carry))
+            # The mesh context resolves the hints' PartitionSpecs inside
+            # the traced scan (first call traces; later calls reuse the
+            # executable, the context is then just a cheap no-op).
+            with self.mesh, hints_lib.use_hints(
+                self.hints if self.hints is not None else hints_lib.ShardHints()
+            ):
+                final, ys = self._compiled(carry, xs, penalty)
+        else:
+            final, ys = self._compiled(carry, xs, penalty)
         if meta is not None:
             final = EngineState.from_tuple(
                 final, bounds=meta.bounds, geometry=meta.geometry,

@@ -33,6 +33,9 @@ class Plan:
     # provenance of the profile this plan was derived from
     # ("analytic" | "measured" | "online")
     profile_provenance: str = "analytic"
+    # fingerprint of the DeviceTopology the plan was bounded by (None for
+    # the legacy scalar-budget path) — see DeviceTopology.fingerprint()
+    topology: Optional[Tuple] = None
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +176,20 @@ def plan(
     include_base: bool = True,
     max_workers: Optional[int] = None,
     max_stages: Optional[int] = None,
+    topology=None,
 ) -> Plan:
-    """Alg. 3 ``plan``: enumerate t^c, inner-search each partition, keep best."""
+    """Alg. 3 ``plan``: enumerate t^c, inner-search each partition, keep best.
+
+    ``topology`` (a ``repro.runtime.topology.DeviceTopology``) bounds the
+    plan by what the hardware can actually hold: the effective budget is
+    ``min(budget, topology.plan_budget())`` — per-device memory times the
+    model-axis span, never the scalar cluster total — and the plan records
+    the topology fingerprint it was derived under.
+    """
+    topo_fp = None
+    if topology is not None:
+        budget = min(budget, topology.plan_budget())
+        topo_fp = topology.fingerprint()
     best: Optional[Plan] = None
     base = profile.embed_bytes if include_base else 0
     seen_partitions = set()
@@ -192,6 +207,7 @@ def plan(
         cand = Plan(
             part, config, rate, mem, stats, t_c, ok,
             profile_provenance=getattr(profile, "provenance", "analytic"),
+            topology=topo_fp,
         )
         if best is None:
             best = cand

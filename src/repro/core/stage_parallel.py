@@ -30,6 +30,37 @@ from repro.compat import pvary, shard_map
 from repro.models.config import ModelConfig
 
 
+def mesh_for_topology(topology, num_stages: int):
+    """A 1-D ``("stage",)`` mesh over the topology's model axis.
+
+    The wavefront needs one device group per stage: the topology's model
+    axis must span ``num_stages`` devices (build the topology with
+    ``discover(model_axis=num_stages)``). This is the model-axis execution
+    path of the topology plane — `FerretEngine`'s scan covers the data
+    axis, this mesh covers the stage dimension.
+    """
+    if topology.model_parallel != num_stages:
+        raise ValueError(
+            f"topology model axis spans {topology.model_parallel} devices "
+            f"but the pipeline has {num_stages} stages — discover the "
+            f"topology with model_axis={num_stages}"
+        )
+    import numpy as np
+
+    devices = jax.devices()
+    if len(devices) < topology.device_count:
+        raise RuntimeError(
+            f"topology wants {topology.device_count} devices but only "
+            f"{len(devices)} are visible"
+        )
+    # stage axis varies fastest in the (data, model) mesh layout, so the
+    # first `num_stages` devices are exactly data-row 0's stage groups
+    arr = np.array(devices[: topology.device_count]).reshape(
+        topology.mesh_shape
+    )[0]
+    return jax.sharding.Mesh(arr, ("stage",))
+
+
 def stack_stage_blocks(cfg: ModelConfig, params: Dict, num_stages: int) -> Dict:
     """(L, ...) stacked block params -> (P, L/P, ...) stage-stacked."""
     L = cfg.num_layers

@@ -197,7 +197,7 @@ def dryrun_cell(
         rec["reason"] = "full-attention arch: long_500k requires sub-quadratic attention"
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(preset="multi_pod" if multi_pod else "pod")
     dp_size = 1
     for a in data_axes(mesh):
         dp_size *= axis_sizes(mesh)[a]

@@ -3,20 +3,58 @@
 Defined as functions (never module-level constants) so importing this module
 touches no jax device state — the dry-run sets XLA_FLAGS *before* first jax
 init and only then calls these.
+
+The default mesh shape is derived from the discovered ``DeviceTopology``
+(``repro.runtime.topology``), so `make_production_mesh()` works on any host
+— the old behavior of unconditionally building 16×16 crashed on anything
+under 256 devices. The historical 16×16-per-pod shapes survive as the
+explicit dry-run ``preset`` (what ``launch/dryrun.py`` asks for under its
+fake-device XLA_FLAGS).
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 
+from repro.runtime.topology import DeviceTopology
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16×16 chips per pod; 2 pods for the multi-pod dry-run (512 chips)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+
+def make_production_mesh(
+    topology: Optional[DeviceTopology] = None,
+    *,
+    multi_pod: bool = False,
+    preset: Optional[str] = None,
+):
+    """Build the run's mesh.
+
+    - default: shape ``(data, model)`` from ``topology`` (discovered when
+      not given) — valid on any device count;
+    - ``preset="pod"`` / ``preset="multi_pod"`` (or the legacy
+      ``multi_pod=True`` flag): the 16×16-chips-per-pod dry-run shapes,
+      which require 256 / 512 visible devices and raise a clear error
+      otherwise instead of an opaque reshape failure.
+    """
+    if multi_pod and preset is None:
+        preset = "multi_pod"
+    if preset is not None:
+        if preset not in ("pod", "multi_pod"):
+            raise ValueError(f"unknown mesh preset {preset!r}")
+        shape = (2, 16, 16) if preset == "multi_pod" else (16, 16)
+        axes = ("pod", "data", "model") if preset == "multi_pod" else ("data", "model")
+        need, have = math.prod(shape), len(jax.devices())
+        if have < need:
+            raise ValueError(
+                f"mesh preset {preset!r} needs {need} devices but only {have} "
+                "are visible — drop preset= to derive the mesh from the "
+                "discovered topology"
+            )
+        return jax.make_mesh(shape, axes)
+    if topology is None:
+        topology = DeviceTopology.discover()
+    return topology.mesh()
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

@@ -128,3 +128,34 @@ def named(mesh, spec_tree: Pytree) -> Pytree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda s: isinstance(s, P)
     )
+
+
+def stream_batch_pspec(leaf_shape, mesh_axes: Dict[str, int], dp="data") -> P:
+    """Spec for one scan-stream leaf, shape ``(R, b, ...)``: rounds stay on
+    dim 0 (the scan axis is never sharded), the per-round batch dim 1 shards
+    over the data axes when divisible, trailing dims replicate."""
+    shp = tuple(leaf_shape)
+    if len(shp) < 2:
+        return P()
+    return P(None, _maybe(shp[1], dp, mesh_axes), *([None] * (len(shp) - 2)))
+
+
+def stream_shardings(mesh, stream: Pytree) -> Pytree:
+    """NamedShardings for a whole stream pytree of ``(R, b, ...)`` arrays."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, stream_batch_pspec(x.shape, axes)), stream
+    )
+
+
+def state_shardings(mesh, state: Pytree) -> Pytree:
+    """Replicated NamedShardings for the engine-state carry.
+
+    The pipelined engine's ``EngineState`` (stage params, Fisher rings,
+    deltas, optimizer and compensation state) is the data-parallel
+    *replicated* plane — every data replica holds the full pipeline, only
+    the batch axis shards. Committing the carry to ``P()`` keeps GSPMD from
+    inventing a partition for it and makes the scan's round-to-round
+    dataflow identical to the single-device layout."""
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: rep, state)

@@ -40,6 +40,18 @@ def use_hints(hints: ShardHints):
         _local.hints = prev
 
 
+def for_topology(topology) -> ShardHints:
+    """Hints matching a discovered ``DeviceTopology``: batch dim over the
+    "data" axis for logits/activations when the topology actually has a
+    data axis, otherwise the all-``None`` no-op hints."""
+    if topology is None or topology.data_parallel <= 1:
+        return ShardHints()
+    return ShardHints(
+        logits=P("data", None, None),
+        activations=P("data", None, None),
+    )
+
+
 def constrain(x: jax.Array, spec: Optional[P]) -> jax.Array:
     if spec is None:
         return x

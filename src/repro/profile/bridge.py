@@ -115,6 +115,34 @@ def for_chips(profile, chips: int):
     )
 
 
+def for_topology(profile, topology):
+    """Scale a single-device profile to a discovered ``DeviceTopology``.
+
+    Data parallelism divides per-round compute time and per-item activation
+    bytes by the replica count (each replica sees batch/dp items) but
+    *replicates* weights — so ``w_bytes``/``embed_bytes`` stay per-device,
+    unlike ``for_chips`` whose TP/FSDP-style division shards them too.
+    The model axis is already the planner's own stage dimension, so it
+    never rescales the profile here.
+    """
+    if topology is None:
+        return profile
+    dp = topology.data_parallel
+    if dp <= 1:
+        return profile
+    layers = [
+        dataclasses.replace(
+            ly,
+            t_fwd=ly.t_fwd / dp,
+            t_bwd=ly.t_bwd / dp,
+            a_bytes=ly.a_bytes // dp,
+            a_internal_bytes=ly.a_internal_bytes // dp,
+        )
+        for ly in profile.layers
+    ]
+    return dataclasses.replace(profile, layers=layers)
+
+
 # ---------------------------------------------------------------------------
 # Resolution (Alg. 3 profile(θ) with provenance)
 # ---------------------------------------------------------------------------

@@ -9,13 +9,15 @@ from repro.runtime.elastic_trainer import (
     SegmentReport,
 )
 from repro.runtime.supervisor import Supervisor, SupervisorCfg
+from repro.runtime.topology import DeviceTopology, as_topology
 
 __all__ = [
     "BudgetEvent",
     "ClusterSpec",
-    "ElasticRun",
     "DeviceLossError",
+    "DeviceTopology",
     "ElasticPlanner",
+    "ElasticRun",
     "ElasticStreamResult",
     "ElasticStreamTrainer",
     "EngineCache",
@@ -23,4 +25,5 @@ __all__ = [
     "SegmentReport",
     "Supervisor",
     "SupervisorCfg",
+    "as_topology",
 ]

@@ -114,6 +114,7 @@ from repro.core.ferret import (
 from repro.core.pipeline import FerretEngine, staged_from_transformer
 from repro.core.profiler import ModelProfile, profile_for
 from repro.core.schedule import RingGeometry
+from repro.models import shard_hints as shard_hints_lib
 from repro.models.config import ModelConfig
 from repro.ocl.registry import OCLAlgorithm, PrepareContext, get_algorithm
 from repro.optim.optimizers import Optimizer, adamw
@@ -475,15 +476,36 @@ class ElasticStreamTrainer:
         algorithm: Optional[Union[str, OCLAlgorithm]] = None,
         engine_cache: Optional[EngineCache] = None,
         carry_rings: bool = True,
+        topology=None,
     ):
+        from repro.runtime.topology import as_topology
+
         self.model_cfg = model_cfg
         self.cfg = ferret_cfg
         self.batch = batch
         self.seq = seq
+        # Topology-aware execution: ``topology`` (a DeviceTopology or
+        # "discover") bounds every plan by per-device memory, scales the
+        # profile for the data-parallel replicas, runs the engine scans
+        # under the topology's mesh, and turns a DeviceLossError into a
+        # topology *shrink* (request_shrink) instead of a budget scale.
+        # topology=None — and a trivial 1-device topology — is the exact
+        # historical single-device path.
+        self.topology = as_topology(topology)
+        self._mesh = (
+            None
+            if self.topology is None or self.topology.is_trivial
+            else self.topology.mesh()
+        )
+        self._shard_hints = shard_hints_lib.for_topology(self.topology)
         # store-aware default (Alg. 3 profile(θ)): a persisted on-device
-        # measurement for this geometry wins, analytic roofline otherwise
+        # measurement for this geometry wins, analytic roofline otherwise.
+        # Kept *single-device*: plan_for applies the topology scaling, so a
+        # topology shrink replans from the right per-replica numbers.
         self.profile = profile or profile_for(model_cfg, batch, seq)
-        self.t_d = ferret_cfg.t_d or planner_lib.default_data_interval(self.profile)
+        self.t_d = ferret_cfg.t_d or planner_lib.default_data_interval(
+            self._effective_profile()
+        )
         self.optimizer = optimizer or adamw(lr=ferret_cfg.lr)
         self.algorithm = (
             get_algorithm(algorithm, ferret_cfg.ocl)
@@ -511,15 +533,12 @@ class ElasticStreamTrainer:
         # tenants built from separate-but-equal pieces share one compile;
         # a fingerprint-less optimizer falls back to IdentityKey, which
         # pins the referent so a recycled id can never alias.
-        opt_fp = self.optimizer.fingerprint
-        self._cache_scope = (
-            self.model_cfg,
-            self.algorithm.engine_fingerprint(),
-            opt_fp if opt_fp is not None else IdentityKey(self.optimizer),
-            ferret_cfg.lr,
-            ferret_cfg.compensation,
-        )
+        self._cache_scope = self._compute_cache_scope()
         self._pending_budget: Optional[float] = None
+        # a topology shrink requested between segments (Supervisor.on_fatal
+        # / request_shrink): consumed at the next boundary, where the mesh,
+        # cache scope and plan all rebuild over the survivors
+        self._pending_topology = None
         # memo for the per-stage split of the algorithm's penalty extras:
         # (bounds, extras dict, split) — recomputed only when the anchor
         # objects or the partition change, so steady-state segments skip
@@ -551,17 +570,51 @@ class ElasticStreamTrainer:
         """
         self._pending_budget = float(budget_bytes)
 
-    def fatal_handler(self, scale: float = 0.5) -> Callable[[BaseException], None]:
-        """An ``on_fatal`` callback: device loss → request a shrunken budget.
+    def request_shrink(self, lost_devices: int = 1) -> None:
+        """Ask for a topology shrink at the next segment boundary.
 
-        ``scale`` models the surviving fraction of the cluster; wiring a
-        ``ClusterSpec``-accurate policy instead is one line with
-        ``ElasticPlanner.budget_for``. Under an unconstrained budget
-        (Ferret_M+) the shrink is taken relative to the live plan's actual
-        footprint — ``inf × scale`` would be a no-op.
+        This is the device-loss escalation under a discovered topology:
+        the trainer's ``DeviceTopology`` loses ``lost_devices`` devices,
+        and at the boundary the mesh is rebuilt over the survivors, the
+        planner re-enters under the shrunken topology's per-device budget
+        and re-scaled profile, and live ``EngineState`` remaps through
+        ``StateRemapper`` (``rounds_lost == 0`` on the default lossless
+        path). Raises when the trainer has no topology (use
+        ``request_budget`` / ``fatal_handler``'s scale path) or when no
+        device would survive.
+        """
+        if self.topology is None:
+            raise RuntimeError(
+                "request_shrink needs a topology-aware trainer "
+                "(ElasticStreamTrainer(topology=...)); use request_budget "
+                "for scalar budget shrinks"
+            )
+        self._pending_topology = self.topology.shrink(lost_devices)
+
+    def fatal_handler(self, scale: float = 0.5) -> Callable[[BaseException], None]:
+        """An ``on_fatal`` callback for device-loss escalation.
+
+        Topology-aware trainers turn a ``DeviceLossError`` into a topology
+        shrink (``request_shrink(e.lost_devices)``): mesh, plan and cache
+        scope rebuild over the surviving devices at the next boundary.
+        Without a topology — or when nothing would survive the shrink —
+        the legacy policy applies: ``scale`` models the surviving fraction
+        of the cluster and shrinks the budget. Under an unconstrained
+        budget (Ferret_M+) that shrink is taken relative to the live
+        plan's actual footprint — ``inf × scale`` would be a no-op.
         """
 
-        def handler(_exc: BaseException) -> None:
+        def handler(exc: BaseException) -> None:
+            if (
+                self.topology is not None
+                and not self.topology.is_trivial
+                and isinstance(exc, DeviceLossError)
+            ):
+                try:
+                    self.request_shrink(getattr(exc, "lost_devices", 1))
+                    return
+                except ValueError:
+                    pass  # no survivors: fall through to the budget scale
             base = self._current_budget
             if not math.isfinite(base):
                 # before the first segment no plan snapshot exists yet —
@@ -572,15 +625,64 @@ class ElasticStreamTrainer:
 
         return handler
 
+    def _effective_profile(self) -> ModelProfile:
+        """The profile the planner sees: topology-scaled when one is set
+        (times and activations divide by the data-parallel width, weights
+        replicate), the raw single-device profile otherwise."""
+        if self.topology is None:
+            return self.profile
+        from repro.profile.bridge import for_topology
+
+        return for_topology(self.profile, self.topology)
+
+    def _compute_cache_scope(self) -> Tuple:
+        # Cache-key scope: a compiled engine bakes in the model, the
+        # algorithm's loss wrapper, the optimizer update rule, lr,
+        # compensation config — and, when topology-aware, the topology it
+        # was partitioned over (a shrink must never reuse an executable
+        # compiled for the lost mesh). The scope is *structural* where
+        # structure is exact (frozen model config, the algorithm's
+        # engine_fingerprint, the optimizer's hyperparameter fingerprint),
+        # so same-geometry tenants built from separate-but-equal pieces
+        # share one compile; a fingerprint-less optimizer falls back to
+        # IdentityKey, which pins the referent so a recycled id can never
+        # alias.
+        opt_fp = self.optimizer.fingerprint
+        scope = (
+            self.model_cfg,
+            self.algorithm.engine_fingerprint(),
+            opt_fp if opt_fp is not None else IdentityKey(self.optimizer),
+            self.cfg.lr,
+            self.cfg.compensation,
+        )
+        if self.topology is not None:
+            scope = scope + (self.topology.fingerprint(),)
+        return scope
+
+    def _set_topology(self, topology) -> None:
+        """Swap the live topology (a consumed shrink): rebuild the mesh
+        over the survivors and re-key the engine cache so the next segment
+        compiles — and future same-topology segments reuse — executables
+        partitioned for the new world."""
+        self.topology = topology
+        self._mesh = None if topology.is_trivial else topology.mesh()
+        self._shard_hints = shard_hints_lib.for_topology(topology)
+        self._cache_scope = self._compute_cache_scope()
+        if self.cfg.t_d is None:
+            self.t_d = planner_lib.default_data_interval(
+                self._effective_profile()
+            )
+
     def plan_for(self, budget_bytes: float) -> planner_lib.Plan:
         return planner_lib.plan(
-            self.profile,
+            self._effective_profile(),
             self.t_d,
             budget_bytes,
             c=self.cfg.decay_c,
             V_D=self.cfg.data_value,
             max_workers=self.cfg.max_workers,
             max_stages=self.cfg.max_stages,
+            topology=self.topology,
         )
 
     # -- main entry -------------------------------------------------------
@@ -844,7 +946,18 @@ class ElasticStreamTrainer:
                     target, self._pending_budget = self._pending_budget, None
                 replanned, replan_s, remap_s = False, 0.0, 0.0
                 seg_rounds_lost = 0
-                if target != budget:
+                # A pending topology shrink forces the replan even when the
+                # budget number is unchanged (a pure data-parallel loss
+                # keeps the per-device bound but changes the mesh, the
+                # profile scaling, and the cache scope): the survivors'
+                # world replaces the lost one before planning.
+                if self._pending_topology is not None:
+                    topo, self._pending_topology = self._pending_topology, None
+                    self._set_topology(topo)
+                    do_replan = True
+                else:
+                    do_replan = target != budget
+                if do_replan:
                     t0 = time.perf_counter()
                     new_plan = self.plan_for(target)
                     replan_s = time.perf_counter() - t0
@@ -983,6 +1096,7 @@ class ElasticStreamTrainer:
                         staged, engine_sched, self.optimizer,
                         self.cfg.compensation, lr=self.cfg.lr,
                         penalty_fn=stage_penalty_fn(self.algorithm),
+                        mesh=self._mesh, hints=self._shard_hints,
                     )
 
                 engine = self.engine_cache.engine_for(struct_key, _factory)
@@ -1052,6 +1166,7 @@ class ElasticStreamTrainer:
                         if (
                             isinstance(e, DeviceLossError)
                             and self._pending_budget is None
+                            and self._pending_topology is None
                         ):
                             self.fatal_handler(fault_budget_scale)(e)
                         if faults_at_cursor > _MAX_FAULTS_PER_SEGMENT:
@@ -1533,7 +1648,12 @@ class ElasticStreamTrainer:
             if spec.kind == "transient":
                 raise TransientFaultError("injected transient engine error")
             if spec.kind == "device_loss":
-                raise DeviceLossError("injected device loss")
+                # spec.arg sizes the loss (0 → the default single device),
+                # so a topology-aware run shrinks by exactly that many
+                raise DeviceLossError(
+                    "injected device loss",
+                    lost_devices=max(1, int(spec.arg)),
+                )
             return spec.kind == "nan" and kind_nan_ok
 
         def step_fn(st, batch):

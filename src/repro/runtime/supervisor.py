@@ -86,6 +86,10 @@ class Supervisor:
         )
         self.step = 0
         self.failures = 0
+        # Cumulative device-loss accounting: each DeviceLossError escalation
+        # adds its ``lost_devices`` here, so a driver can see how far the
+        # topology has shrunk across the run's whole lifetime.
+        self.device_losses = 0
 
     # ------------------------------------------------------------------
     def try_restore(self, extras_hook: Optional[Callable[[Dict], None]] = None) -> bool:
@@ -134,10 +138,14 @@ class Supervisor:
                 return StepReport(self.step, loss_val, restarted, dropped, dt)
             except DeviceLossError as e:
                 # Lost capacity cannot come back through retries: escalate
-                # immediately so the handler can request a shrink-replan
-                # (runtime/elastic_trainer.py), then surface the error to the
-                # caller, which rebuilds on the smaller footprint.
+                # immediately so the handler can request a topology shrink —
+                # the elastic trainer rebuilds its mesh over the survivors
+                # (e.lost_devices of them gone), replans under the smaller
+                # per-device budget, and remaps live EngineState — then
+                # surface the error to the caller, which rebuilds on the
+                # smaller footprint.
                 self.failures = 0
+                self.device_losses += getattr(e, "lost_devices", 1)
                 if self.on_fatal is not None:
                     self.on_fatal(e)
                 raise

@@ -196,7 +196,15 @@ class FerretServer:
         smoke: bool = True,
         profile_feedback: bool = False,
         max_tenant_crashes: int = 3,
+        topology=None,
     ):
+        # topology: the discovered DeviceTopology every admitted tenant
+        # session runs under (None / "discover" / a DeviceTopology, same
+        # contract as FerretSession) — one shared hardware world, so
+        # same-geometry tenants also share topology-keyed compiled engines
+        from repro.runtime.topology import as_topology
+
+        self.topology = as_topology(topology)
         self.engine_cache = engine_cache or EngineCache()
         # host-side: tenants refine their persisted profiles from observed
         # segment wall-clock (repro.profile.bridge.observe_segment)
@@ -274,6 +282,7 @@ class FerretServer:
                     ocl=ocl, max_workers=max_workers, max_stages=max_stages,
                     params=params, seed=seed, smoke=self.smoke,
                     profile_feedback=self.profile_feedback,
+                    topology=self.topology,
                 )
             except Exception:
                 self.pool.leave(name)

@@ -549,3 +549,90 @@ def test_drain_restore_is_bit_exact(rng, tmp_path):
         jax.tree.leaves(base.final_params), jax.tree.leaves(part2.final_params)
     ):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# (g) topology shrink: an injected device loss mid-stream re-meshes over the
+# survivors, replans, and keeps the stream exactly-once with zero rounds
+# lost. Runs in a subprocess so the topology is guaranteed 8 fake devices
+# regardless of the parent process's XLA_FLAGS.
+# ---------------------------------------------------------------------------
+
+import json  # noqa: E402
+import os  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import textwrap  # noqa: E402
+
+SHRINK_CODE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json, math
+    import jax, numpy as np
+    from repro import faults
+    from repro.core.compensation import CompensationConfig
+    from repro.core.ferret import FerretConfig
+    from repro.faults import FaultPlan, FaultSpec
+    from repro.models import transformer as T
+    from repro.models.registry import get_config
+    from repro.ocl.streams import StreamConfig, make_stream
+    from repro.runtime import ElasticStreamTrainer
+    from repro.runtime.topology import DeviceTopology
+
+    R = 16
+    cfg = dataclasses.replace(get_config("h2o-danube-1.8b", smoke=True),
+                              compute_dtype="float32", num_layers=4, vocab_size=32)
+    fc = FerretConfig(budget_bytes=math.inf, lr=5e-3,
+                      compensation=CompensationConfig(method="iter_fisher",
+                                                      eta_lambda=1e-4),
+                      max_workers=3, max_stages=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    stream = make_stream(StreamConfig(kind="drift", modality="tokens",
+                                      length=R, batch=4, vocab=32, seq=16))
+
+    topo = DeviceTopology.discover(max_devices=4)
+    assert topo.mesh_shape == (4, 1), topo
+    et = ElasticStreamTrainer(cfg, fc, batch=4, seq=16, topology=topo)
+    scope_before = et._cache_scope
+
+    # lose one device at the second segment's first engine step
+    plan = FaultPlan(specs=(
+        FaultSpec("engine.step", "device_loss", match=(("cursor", R // 2),)),
+    ))
+    with faults.inject(plan) as chaos:
+        res = et.run_stream(params, stream, segment_rounds=R // 2)
+
+    assert chaos.summary()["fired"] == 1
+    assert not chaos.unrecovered(), chaos.summary()
+    assert res.num_faults == 1 and res.num_replans == 1
+
+    # the survivors' world replaced the lost one
+    assert et.topology.device_count == 3
+    assert et.topology.mesh_shape == (3, 1)
+    assert et._mesh.devices.size == 3
+    assert et._cache_scope != scope_before  # shrink re-keys the engine cache
+
+    # exactly-once stream consumption, zero rounds lost through the remap
+    assert res.rounds == R
+    assert [(s.start, s.end) for s in res.segments] == [(0, R // 2), (R // 2, R)]
+    assert res.rounds_lost_per_switch == 0
+    assert all(s.rounds_lost == 0 for s in res.segments)
+    assert np.isfinite(res.losses).all()
+    print(json.dumps({"ok": True, "topology": et.topology.describe()}))
+    """
+)
+
+
+def test_device_loss_shrinks_topology_exactly_once():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, "-c", SHRINK_CODE], capture_output=True, text=True,
+        timeout=600, cwd=root, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["topology"]["device_count"] == 3

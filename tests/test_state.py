@@ -322,6 +322,36 @@ def test_carry_rings_false_drops_and_reports():
     )
 
 
+def test_topology_shrink_remap_is_lossless():
+    """The device-loss path: a replan under the survivors' topology remaps
+    mid-schedule state with ``rounds_lost == 0`` on the default
+    ``carry_rings`` path — in-flight accumulation groups are flushed
+    through the optimizer, never dropped — while the shrunken topology
+    re-keys the engine cache (distinct fingerprint)."""
+    from repro.runtime.topology import DeviceTopology
+
+    topo = DeviceTopology(device_count=4, mesh_shape=(4, 1))
+    shrunk = topo.shrink(1)
+    assert shrunk.mesh_shape == (3, 1)
+    assert shrunk.fingerprint() != topo.fingerprint()
+
+    bounds_a, bounds_b = [0, 2, L], [0, L]
+    config_a = _pipe_config(2, workers=2, accum=2)
+    upto = 9
+    sched = sched_lib.build_schedule(config_a, 2, 16)
+    state, opt = _live_state(bounds_a, config_a, upto)
+    assert rounds_in_flight(sched, upto) > 0  # the shrink hits live state
+
+    remapper = StateRemapper(_cfg(), opt)
+    out, lost = remapper.remap(
+        state, bounds_b, new_geometry=sched_lib.ring_geometry(_pipe_config(1), 1),
+        same_schedule=False, old_schedule=sched, rounds_into_schedule=upto,
+        carry_rings=True,
+    )
+    assert lost == 0
+    assert out.bounds == tuple(bounds_b)
+
+
 def test_same_schedule_switch_carries_rings_and_origin():
     bounds_a, bounds_b = [0, 1, L], [0, 3, L]
     config = _pipe_config(2, workers=2, accum=2)
